@@ -1,0 +1,88 @@
+"""Generate the EXPERIMENTS.md data tables from dry-run artifacts.
+
+Writes results/dryrun_table.md and results/roofline_table.md; EXPERIMENTS.md
+includes them verbatim.  Run after ``repro.launch.dryrun_all``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from roofline import load_records, roofline_terms, what_would_help  # noqa: E402
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f} TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f} GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f} MB"
+    return f"{b/1e3:.0f} KB"
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | chips | status | compile (s) | peak HBM/chip | HLO TFLOP/chip | collective/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | SKIP | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | **{r['status']}** | — | — | — | — |"
+            )
+            continue
+        pd = r["per_device"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_chips']} | ok "
+            f"| {r['compile_s']} | {pd['peak_hbm_est']/1e9:.1f} GB "
+            f"| {pd['flops']/1e12:.2f} | {fmt_bytes(r['collectives']['total_bytes'])} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="single") -> str:
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck | useful FLOP ratio | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        t = roofline_terms(r)
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['t_compute_s']*1e3:.2f} "
+            f"| {t['t_memory_s']*1e3:.2f} | {t['t_collective_s']*1e3:.2f} "
+            f"| **{t['dominant']}** | {t['useful_ratio']:.2f} "
+            f"| {t['roofline_fraction']:.3f} | {what_would_help(t)} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    dd = os.path.join(os.path.dirname(__file__), os.pardir, "results", "dryrun")
+    out_dir = os.path.join(os.path.dirname(__file__), os.pardir, "results")
+    recs = load_records(dd)
+    with open(os.path.join(out_dir, "dryrun_table.md"), "w") as f:
+        f.write(dryrun_table(recs) + "\n")
+    ok_single = [r for r in recs if r.get("mesh") == "single" and r["status"] == "ok"]
+    with open(os.path.join(out_dir, "roofline_table.md"), "w") as f:
+        f.write(roofline_table(recs, "single") + "\n")
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r["status"] == "skipped")
+    n_bad = len(recs) - n_ok - n_skip
+    print(f"{len(recs)} records: {n_ok} ok, {n_skip} skipped, {n_bad} failed")
+    print(f"single-pod ok: {len(ok_single)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips x 819 GB/s)
+  collective term = collective_bytes / (chips x 50 GB/s per link)
+
+FLOPs/bytes from the while-aware HLO analysis are already *per device*
+(post-SPMD module), so the per-chip terms drop the chips division.
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (+ attention
+cache reads) for decode; the ratio MODEL_FLOPS/HLO_FLOPs measures how
+much compiled compute is useful (remat/dispatch waste shows up here).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, arch_config
+
+HW = {"peak_flops_bf16": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+
+def model_flops_per_device(rec: dict) -> float:
+    """Analytic useful FLOPs for the cell, per chip."""
+    cfg = arch_config(rec["arch"])
+    shape = next(s for s in SHAPES if s.name == rec["shape"])
+    n_active = cfg.active_param_count()
+    chips = rec["n_chips"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch
+    base = 2.0 * n_active * tokens
+    # attention cache read: 2 (QK) + 2 (PV) flops per cached element pair
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        attn_layers = cfg.n_layers
+    elif cfg.family == "hybrid":
+        attn_layers = cfg.n_layers // max(cfg.attn_every, 1)
+    else:
+        attn_layers = 0
+    base += 4.0 * tokens * attn_layers * cfg.n_heads * cfg.hd * shape.seq_len
+    return base / chips
+
+
+def roofline_terms(rec: dict) -> dict:
+    pd = rec["per_device"]
+    flops = pd["flops"]
+    hbm_bytes = max(pd.get("dot_bytes", 0.0), pd.get("xla_bytes_accessed_raw", 0.0))
+    coll = rec["collectives"]["total_bytes"]
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = hbm_bytes / HW["hbm_bw"]
+    t_coll = coll / HW["ici_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops_per_device(rec)
+    bound = max(t_compute, t_memory, t_coll)
+    # roofline fraction: useful-compute time / modeled step time
+    frac = (mf / HW["peak_flops_bf16"]) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": rec["n_chips"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "hlo_flops_dev": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": frac,
+        "peak_hbm_gb": rec["per_device"]["peak_hbm_est"] / 1e9,
+    }
+
+
+def load_records(dir_: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(dir_: str = "results/dryrun", mesh: str = "single") -> list[dict]:
+    out = []
+    for rec in load_records(dir_):
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        out.append(roofline_terms(rec))
+    return out
+
+
+def what_would_help(row: dict) -> str:
+    if row["dominant"] == "compute":
+        if row["useful_ratio"] < 0.5:
+            return "cut recompute/dispatch waste (remat policy, MoE capacity)"
+        return "near compute roofline; only kernel-level fusion is left"
+    if row["dominant"] == "memory":
+        return "fuse/duplicate-elimination: flash-attention kernel, smaller working set"
+    return "reduce collective volume: resharded layout, fewer all-gathers, overlap"

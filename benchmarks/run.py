@@ -1,0 +1,81 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = simulated
+reconfiguration wall time in microseconds; derived = the paper-facing
+ratio for that row), followed by the envelope summary versus the paper's
+reported numbers and, when dry-run artifacts exist, the roofline table.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from paper_tables import (  # noqa: E402
+    fig1_hypercube_rounds,
+    fig4a_homogeneous_expansion,
+    fig4b_homogeneous_shrink,
+    fig5_preferred_grid,
+    fig6_heterogeneous,
+    paper_envelopes,
+    table2_trace,
+)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    for r in fig4a_homogeneous_expansion():
+        name = f"fig4a/{r['method']}/I{r['I']}-N{r['N']}"
+        print(f"{name},{r['time_s']*1e6:.0f},{r['vs_merge']}")
+
+    for r in fig4b_homogeneous_shrink():
+        name = f"fig4b/{r['method']}/I{r['I']}-N{r['N']}"
+        print(f"{name},{r['time_s']*1e6:.0f},{r['speedup_ts']}")
+
+    for r in fig5_preferred_grid():
+        name = f"fig5/I{r['I']}-N{r['N']}"
+        print(f"{name},{r['time_s']*1e6:.0f},{r['best']}")
+
+    for r in fig6_heterogeneous():
+        name = f"fig{r['figure']}/{r['method']}/I{r['I']}-N{r['N']}"
+        derived = r.get("vs_merge", r.get("speedup_ts", ""))
+        print(f"{name},{r['time_s']*1e6:.0f},{derived}")
+
+    for r in table2_trace():
+        name = f"table2/s{r['s']}"
+        print(f"{name},0,t={r['t']};g={r['g']};lam={r['lambda']};T={r['T']};G={r['G']}")
+
+    for r in fig1_hypercube_rounds():
+        name = f"fig1/C{r['C']}-I{r['I']}-N{r['N']}"
+        print(f"{name},0,rounds={r['rounds']};groups={r['groups']}")
+
+    print()
+    print("=== paper envelope check (simulator vs paper §5) ===")
+    for r in paper_envelopes():
+        print(f"{r['metric']}: ours={r['ours']} paper={r['paper']}")
+
+    # roofline table if the dry-run has produced artifacts
+    dd = os.path.join(os.path.dirname(__file__), os.pardir, "results", "dryrun")
+    if os.path.isdir(dd) and os.listdir(dd):
+        from roofline import table, what_would_help  # noqa: E402
+
+        rows = table(dd, mesh="single")
+        if rows:
+            print()
+            print("=== roofline (single-pod, per chip) ===")
+            print("arch,shape,t_compute_ms,t_memory_ms,t_collective_ms,"
+                  "dominant,useful_ratio,roofline_fraction,peak_hbm_gb")
+            for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+                print(
+                    f"{r['arch']},{r['shape']},{r['t_compute_s']*1e3:.2f},"
+                    f"{r['t_memory_s']*1e3:.2f},{r['t_collective_s']*1e3:.2f},"
+                    f"{r['dominant']},{r['useful_ratio']:.2f},"
+                    f"{r['roofline_fraction']:.3f},{r['peak_hbm_gb']:.1f}"
+                )
+
+
+if __name__ == "__main__":
+    main()

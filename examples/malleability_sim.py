@@ -1,0 +1,67 @@
+"""Reconfiguration-cost explorer: the paper's §5 on the simulator.
+
+Prints the preferred-method grid (paper Fig. 5) for a chosen cluster
+profile and shows the phase breakdown for one expansion.
+
+    PYTHONPATH=src python examples/malleability_sim.py [--profile mn5|nasp]
+"""
+import argparse
+import itertools
+
+from repro.core import Method, ShrinkKind, plan_hypercube, plan_sequential
+from repro.malleability import MN5, NASP, simulate_expansion, simulate_shrink
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", choices=["mn5", "nasp"], default="mn5")
+    ap.add_argument("--cores", type=int, default=112)
+    args = ap.parse_args()
+    cm = MN5 if args.profile == "mn5" else NASP
+    C = args.cores
+    nodes = [1, 2, 4, 8, 16, 24, 32]
+
+    print(f"preferred method per (I -> N), profile={args.profile}, C={C}")
+    print("(rows I, cols N; upper triangle = expand, lower = TS shrink)\n")
+    header = "I\\N " + "".join(f"{n:>8}" for n in nodes)
+    print(header)
+    for i in nodes:
+        row = [f"{i:<4}"]
+        for n in nodes:
+            if n == i:
+                row.append(f"{'—':>8}")
+                continue
+            if n > i:
+                cand = {
+                    "M": simulate_expansion(
+                        plan_sequential(i * C, n * C, [C] * n, Method.MERGE), cm).total,
+                    "M+par": simulate_expansion(
+                        plan_hypercube(i * C, n * C, C, Method.MERGE), cm).total,
+                }
+            else:
+                cand = {
+                    "M+TS": simulate_shrink(
+                        ShrinkKind.TS, cm, ns=i * C, nt=n * C,
+                        doomed_world_sizes=[C] * (i - n)).total,
+                    "B+par": simulate_shrink(
+                        ShrinkKind.SS, cm, ns=i * C, nt=n * C,
+                        respawn_plan=plan_hypercube(i * C, n * C, C, Method.BASELINE),
+                    ).total,
+                }
+            row.append(f"{min(cand, key=cand.get):>8}")
+        print("".join(row))
+
+    print("\nphase breakdown, expansion 1 -> 32 nodes (parallel Merge):")
+    rep = simulate_expansion(plan_hypercube(C, 32 * C, C, Method.MERGE), cm)
+    for k in ("t_spawn", "t_sync", "t_connect", "t_reorder", "t_final"):
+        print(f"  {k:<10} {getattr(rep, k)*1e3:9.2f} ms")
+    print(f"  {'total':<10} {rep.total*1e3:9.2f} ms "
+          f"({rep.steps} spawn rounds, {rep.groups} groups)")
+    ts = simulate_shrink(ShrinkKind.TS, cm, ns=32 * C, nt=C,
+                         doomed_world_sizes=[C] * 31)
+    print(f"\nTS shrink 32 -> 1: {ts.total*1e3:.3f} ms "
+          f"({rep.total/ts.total:.0f}x faster than the expansion)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: train a reduced-config model for a few steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch stablelm_3b]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import smoke_config
+from repro.data import SyntheticTokens, make_batch_on_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.parallel.sharding import ShardingContext
+from repro.train.steps import build_init_fn, build_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = Model(cfg)
+    mesh = make_host_mesh()
+    ctx = ShardingContext(mesh=mesh, mode="train")
+
+    step_fn, shardings, _ = build_train_step(model, ctx, lr=1e-3)
+    init_fn, _ = build_init_fn(model, ctx)
+    state = init_fn(jax.random.key(0))
+    step = jax.jit(step_fn, in_shardings=(shardings, None),
+                   out_shardings=(shardings, None), donate_argnums=(0,))
+
+    data = SyntheticTokens(cfg, batch=8, seq=64)
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = make_batch_on_mesh(data.sample(i), cfg, ctx)
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i % 5 == 0:
+            print(f"step {i:>3}  loss {losses[-1]:.4f}")
+    print(f"\n{args.arch}: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"in {args.steps} steps ({time.time()-t0:.1f}s)")
+    assert losses[-1] < losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Batched serving demo: prefill + decode with a KV cache.
+
+Serves a reduced-config model over synthetic prompts, batching requests,
+and demonstrates a TS-shrink of the serving fleet between batches (the
+paper's mechanism applied to inference autoscaling).
+
+    PYTHONPATH=src python examples/serve.py [--arch gemma2_9b]
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.core import Method, Strategy
+from repro.elastic import DevicePool, ElasticRuntime
+from repro.models import Model
+from repro.parallel.sharding import ShardingContext, use_sharding
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch).replace(embed_inputs=False)
+    model = Model(cfg)
+    rt = ElasticRuntime(pool=DevicePool(), method=Method.MERGE,
+                        strategy=Strategy.PARALLEL_HYPERCUBE, initial_nodes=1)
+    rt.expand(4)
+    print(f"serving fleet: {rt.n_nodes} node-groups")
+
+    params, _ = model.init(jax.random.key(0))
+    B, P, G = args.batch, args.prompt_len, args.gen_len
+    max_len = P + G
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
+
+    ctx = ShardingContext(mesh=rt.mesh(("data",)), mode="decode")
+
+    def serve_batch(params, prompts):
+        cache = model.init_cache(B, max_len)
+        decode = jax.jit(model.decode_step)
+        toks = prompts[:, :1]
+        out = [toks]
+        t0 = time.time()
+        with use_sharding(None):  # host demo: default placement
+            # prefill token-by-token (teacher forcing over the prompt)
+            for t in range(P):
+                tok = {"tokens": prompts[:, t:t + 1],
+                       "positions": jnp.full((B, 1), t, jnp.int32),
+                       "cache_pos": jnp.int32(t)}
+                logits, cache = decode(params, cache, tok)
+            t_prefill = time.time() - t0
+            nxt = sample_greedy(logits)
+            out.append(nxt)
+            t0 = time.time()
+            for t in range(P, P + G - 1):
+                tok = {"tokens": nxt,
+                       "positions": jnp.full((B, 1), t, jnp.int32),
+                       "cache_pos": jnp.int32(t)}
+                logits, cache = decode(params, cache, tok)
+                nxt = sample_greedy(logits)
+                out.append(nxt)
+            t_decode = time.time() - t0
+        gen = jnp.concatenate(out[1:], axis=1)
+        return gen, t_prefill, t_decode
+
+    gen, tp, td = serve_batch(params, prompts)
+    print(f"batch 1: prefill {tp:.2f}s, decode {td:.2f}s "
+          f"({B * G / max(td, 1e-9):.1f} tok/s), output shape {gen.shape}")
+
+    # Autoscale down between batches: TS-shrink half the fleet.
+    rec = rt.shrink(2)
+    print(f"autoscale: TS shrink -> {rt.n_nodes} nodes in est "
+          f"{rec.est_wall_s * 1e3:.2f} ms (nodes {rec.nodes_returned} returned)")
+
+    gen2, tp2, td2 = serve_batch(params, prompts)
+    assert bool(jnp.all(gen == gen2)), "generation must be identical after shrink"
+    print(f"batch 2 (post-shrink): identical output verified; "
+          f"decode {td2:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

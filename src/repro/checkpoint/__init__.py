@@ -1,0 +1,15 @@
+"""Mesh-independent checkpointing (save once, restore on any mesh).
+
+Used three ways in the framework:
+  * the SS (Spawn Shrinkage) baseline restarts from the latest checkpoint;
+  * fault tolerance restores lost shards after a node failure;
+  * ordinary periodic checkpointing during training (async capable).
+"""
+from .store import (
+    CheckpointManager,
+    latest_step,
+    restore_tree,
+    save_tree,
+)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_tree", "save_tree"]

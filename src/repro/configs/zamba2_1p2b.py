@@ -1,0 +1,39 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + shared attention blocks.
+
+38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64
+[arXiv:2411.15242; hf].  The shared attn+MLP block (one set of weights)
+is applied every 6 Mamba2 layers, zamba2-style.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=128,
+    attn_every=6,
+)
+
+SMOKE = CONFIG.replace(
+    name="zamba2-smoke",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=256,
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_chunk=8,
+    attn_every=2,
+    remat=False,
+)

@@ -1,0 +1,93 @@
+"""Core: the paper's contribution — parallel spawning strategies for
+dynamic-aware (malleable) distributed jobs.
+
+Faithful implementations of:
+  * Hypercube strategy            (§4.1, Eqs. 1-3)   -> :mod:`.hypercube`
+  * Iterative Diffusive strategy  (§4.2, Eqs. 4-8)   -> :mod:`.diffusive`
+  * Group synchronization         (§4.3)             -> :mod:`.sync`
+  * Binary connection             (§4.4)             -> :mod:`.connect`
+  * Rank reordering               (§4.5, Eq. 9)      -> :mod:`.reorder`
+  * TS/ZS/SS shrink planning      (§4.6-4.7)         -> :mod:`.shrink`
+  * MaM-style manager facade      (§3)               -> :mod:`.manager`
+"""
+from .connect import (
+    ConnectRound,
+    binary_connection_schedule,
+    extend_graph_with_connection,
+    required_ports,
+    simulate_merges,
+)
+from .diffusive import plan_diffusive
+from .hypercube import nodes_at_step, plan_hypercube, procs_at_step, steps_required
+from .manager import (
+    MalleabilityManager,
+    ReconfigPlan,
+    RedistributionSpec,
+    plan_sequential,
+)
+from .reorder import global_order, node_of_rank, reorder_key
+from .shrink import ClusterState, apply_shrink, plan_initial_world_shrink, plan_shrink
+from .sync import (
+    EventGraph,
+    Event,
+    assert_ports_before_release,
+    build_sync_graph,
+    port_openers,
+    spawn_children,
+)
+from .types import (
+    SOURCE_GID,
+    GroupSpec,
+    Method,
+    RankInfo,
+    ShrinkAction,
+    ShrinkActionKind,
+    ShrinkKind,
+    ShrinkPlan,
+    SpawnPlan,
+    StepTrace,
+    Strategy,
+    World,
+)
+
+__all__ = [
+    "SOURCE_GID",
+    "ClusterState",
+    "ConnectRound",
+    "Event",
+    "EventGraph",
+    "GroupSpec",
+    "MalleabilityManager",
+    "Method",
+    "RankInfo",
+    "ReconfigPlan",
+    "RedistributionSpec",
+    "ShrinkAction",
+    "ShrinkActionKind",
+    "ShrinkKind",
+    "ShrinkPlan",
+    "SpawnPlan",
+    "StepTrace",
+    "Strategy",
+    "World",
+    "apply_shrink",
+    "assert_ports_before_release",
+    "binary_connection_schedule",
+    "build_sync_graph",
+    "extend_graph_with_connection",
+    "global_order",
+    "node_of_rank",
+    "nodes_at_step",
+    "plan_diffusive",
+    "plan_hypercube",
+    "plan_initial_world_shrink",
+    "plan_sequential",
+    "plan_shrink",
+    "port_openers",
+    "procs_at_step",
+    "reorder_key",
+    "required_ports",
+    "simulate_merges",
+    "spawn_children",
+    "steps_required",
+]

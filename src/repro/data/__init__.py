@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (sharded, prefetching)."""
+from .pipeline import SyntheticTokens, batch_spec, make_batch_on_mesh
+
+__all__ = ["SyntheticTokens", "batch_spec", "make_batch_on_mesh"]

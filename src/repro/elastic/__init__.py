@@ -1,0 +1,27 @@
+"""Elastic runtime: the paper's control plane driving real JAX meshes.
+
+NodeGroups are the releasable hardware unit (the paper's node-confined
+MCWs); expansion runs a parallel spawn plan to bring groups up, shrink
+terminates whole groups (TS) and returns their devices, and the data-
+redistribution stage is a live resharding of params/optimizer state onto
+the rebuilt mesh.
+"""
+from .node_group import DevicePool, NodeGroup
+from .reshard import reshard_tree, transfer_stats
+from .rms import Event, EventKind, SimulatedRMS
+from .runtime import ElasticRuntime, ReconfigRecord
+from .trainer import ElasticTrainer, StepRecord
+
+__all__ = [
+    "DevicePool",
+    "ElasticRuntime",
+    "ElasticTrainer",
+    "Event",
+    "EventKind",
+    "NodeGroup",
+    "ReconfigRecord",
+    "SimulatedRMS",
+    "StepRecord",
+    "reshard_tree",
+    "transfer_stats",
+]

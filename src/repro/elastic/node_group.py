@@ -1,0 +1,64 @@
+"""NodeGroups: the releasable allocation unit of the elastic runtime.
+
+A NodeGroup is the JAX-side analogue of the paper's node-confined MCW —
+a set of devices that is acquired and released *as a unit*, which is
+exactly the property TS shrinkage needs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+
+
+@dataclass(frozen=True)
+class NodeGroup:
+    """One node-confined worker group (the paper's per-node MCW)."""
+
+    gid: int                 # group id (stable across its lifetime)
+    node: int                # node index in the cluster
+    devices: tuple[Any, ...]  # jax devices owned by this group
+
+    @property
+    def size(self) -> int:
+        return len(self.devices)
+
+
+class DevicePool:
+    """Partition of the host's devices into fixed-size "nodes".
+
+    The pool plays the RMS's role of owning idle nodes: `acquire` hands a
+    node's devices to a new group, `release` (the TS path) returns them.
+    """
+
+    def __init__(self, devices: Sequence[Any] | None = None, devices_per_node: int = 1):
+        devices = list(devices if devices is not None else jax.devices())
+        if devices_per_node <= 0:
+            raise ValueError("devices_per_node must be positive")
+        self.devices_per_node = devices_per_node
+        self.nodes: dict[int, tuple[Any, ...]] = {}
+        for i in range(len(devices) // devices_per_node):
+            self.nodes[i] = tuple(devices[i * devices_per_node:(i + 1) * devices_per_node])
+        self.free: set[int] = set(self.nodes)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    def acquire(self, node: int) -> tuple[Any, ...]:
+        if node not in self.free:
+            raise RuntimeError(f"node {node} is not free")
+        self.free.discard(node)
+        return self.nodes[node]
+
+    def acquire_any(self) -> tuple[int, tuple[Any, ...]]:
+        if not self.free:
+            raise RuntimeError("device pool exhausted")
+        node = min(self.free)
+        return node, self.acquire(node)
+
+    def release(self, node: int) -> None:
+        if node not in self.nodes:
+            raise KeyError(node)
+        self.free.add(node)

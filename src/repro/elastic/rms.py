@@ -1,0 +1,50 @@
+"""Simulated Resource Management System (DRM side of the paper).
+
+Emits grow/shrink/failure/straggler events against which the elastic
+runtime reconfigures.  Policies are deliberately simple — the paper's
+scope is the *mechanism* (how to resize cheaply), not the policy (when).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Iterator
+
+
+class EventKind(enum.Enum):
+    GROW = "grow"            # RMS grants extra nodes
+    SHRINK = "shrink"        # RMS reclaims nodes
+    FAIL = "fail"            # a node died: forced TS shrink + recovery
+    STRAGGLER = "straggler"  # a node is slow: voluntarily TS-shrink it out
+    NOOP = "noop"
+
+
+@dataclass(frozen=True)
+class Event:
+    step: int
+    kind: EventKind
+    nodes: tuple[int, ...] = ()     # affected node ids (SHRINK/FAIL/STRAGGLER)
+    target_nodes: int = 0           # new total node count (GROW)
+
+
+@dataclass
+class SimulatedRMS:
+    """Scripted or random event source."""
+
+    script: list[Event] = field(default_factory=list)
+
+    def events_until(self, step: int) -> Iterator[Event]:
+        due = [e for e in self.script if e.step <= step]
+        self.script = [e for e in self.script if e.step > step]
+        yield from due
+
+    @staticmethod
+    def scripted(events: list[tuple[int, EventKind, tuple | int]]) -> "SimulatedRMS":
+        out = []
+        for step, kind, arg in events:
+            if kind is EventKind.GROW:
+                out.append(Event(step=step, kind=kind, target_nodes=int(arg)))
+            else:
+                nodes = (arg,) if isinstance(arg, int) else tuple(arg)
+                out.append(Event(step=step, kind=kind, nodes=nodes))
+        return SimulatedRMS(script=out)

@@ -1,0 +1,212 @@
+"""ElasticRuntime: the paper's reconfiguration pipeline on live JAX state.
+
+Maps the four malleability stages onto real device groups:
+
+  1. feasibility        — the (simulated) RMS grants/reclaims nodes;
+  2. process management — a parallel SpawnPlan brings NodeGroups up
+                          (hypercube for homogeneous pools, diffusive for
+                          heterogeneous), TS terminates whole groups;
+  3. data redistribution— the caller reshards its pytrees onto the new
+                          mesh (see :mod:`repro.elastic.reshard`);
+  4. resume             — the caller re-jits its step for the new mesh.
+
+Reconfiguration *cost* is charged by the calibrated simulator (this host
+has one real device), so every record carries the estimated wall time a
+real cluster would observe alongside the actual resharding stats.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import (
+    ClusterState,
+    MalleabilityManager,
+    Method,
+    ShrinkKind,
+    Strategy,
+    apply_shrink,
+    plan_shrink,
+)
+from repro.malleability import (
+    MN5,
+    CostModel,
+    simulate_expansion,
+    simulate_shrink,
+)
+
+from .node_group import DevicePool, NodeGroup
+
+
+@dataclass(frozen=True)
+class ReconfigRecord:
+    kind: str                  # expand | shrink | fail | straggler
+    mechanism: str             # strategy or TS/ZS/SS
+    nodes_before: int
+    nodes_after: int
+    est_wall_s: float          # simulated reconfiguration cost
+    downtime_s: float          # app-visible stall (Async overlaps spawn)
+    steps: int = 0             # spawn rounds (expansions)
+    groups: int = 0
+    nodes_returned: tuple[int, ...] = ()
+    nodes_pinned: tuple[int, ...] = ()
+
+
+class ElasticRuntime:
+    """Owns the NodeGroup registry and rebuilds meshes across resizes."""
+
+    def __init__(
+        self,
+        pool: Optional[DevicePool] = None,
+        method: Method = Method.MERGE,
+        strategy: Strategy = Strategy.PARALLEL_HYPERCUBE,
+        cost_model: CostModel = MN5,
+        asynchronous: bool = False,
+        initial_nodes: int = 1,
+    ):
+        self.pool = pool or DevicePool()
+        self.cost_model = cost_model
+        self.manager = MalleabilityManager(
+            method=method, strategy=strategy, asynchronous=asynchronous
+        )
+        self.state: ClusterState = self.manager.state
+        self.groups: dict[int, NodeGroup] = {}   # wid -> NodeGroup
+        self.history: list[ReconfigRecord] = []
+        # initial allocation: one world; if it spans several nodes it is the
+        # paper's problematic multi-node initial MCW (handled by §4.6 logic).
+        nodes, devs = [], []
+        for _ in range(initial_nodes):
+            node, d = self.pool.acquire_any()
+            nodes.append(node)
+            devs.append(d)
+        w = self.state.add_world(nodes, [len(d) for d in devs], is_initial=True)
+        self.groups[w.wid] = NodeGroup(gid=w.wid, node=nodes[0], devices=tuple(
+            dev for group in devs for dev in group
+        ))
+
+    # ------------------------------------------------------------------ mesh --
+    @property
+    def n_nodes(self) -> int:
+        return len(self.state.nodes_in_use())
+
+    @property
+    def devices(self) -> list:
+        """All live devices in Eq. 9 order (node-contiguous, gid ascending)."""
+        ordered = sorted(self.groups.values(), key=lambda g: (min(
+            self.state.worlds[g.gid].nodes), g.gid))
+        return [d for g in ordered for d in g.devices]
+
+    def mesh(self, axes: tuple[str, ...] = ("data",), shape: Optional[tuple[int, ...]] = None) -> Mesh:
+        devs = self.devices
+        if shape is None:
+            shape = (len(devs),)
+        import numpy as np
+
+        return Mesh(np.asarray(devs, dtype=object).reshape(shape), axes)
+
+    # ---------------------------------------------------------------- expand --
+    def expand(self, target_nodes: int) -> ReconfigRecord:
+        """Grow the job to ``target_nodes`` NodeGroup-confined nodes."""
+        before = self.n_nodes
+        if target_nodes <= before:
+            raise ValueError("expand() requires target_nodes > current nodes")
+        cpn = self.pool.devices_per_node
+        ns, nt = before * cpn, target_nodes * cpn
+        if self.manager.strategy is Strategy.PARALLEL_DIFFUSIVE:
+            plan = self.manager.plan_expand(ns, nt, [cpn] * target_nodes)
+        else:
+            plan = self.manager.plan_expand(ns, nt, cpn)
+        spawn = plan.spawn
+        assert spawn is not None
+        sim = simulate_expansion(spawn, self.cost_model, self.manager.asynchronous)
+
+        # Bring up one NodeGroup per spawned group (each node-confined).
+        for g in spawn.groups:
+            node, devs = self.pool.acquire_any()
+            w = self.state.add_world([node], [len(devs)])
+            self.groups[w.wid] = NodeGroup(gid=w.wid, node=node, devices=devs)
+        self.state.expansions_done += 1
+
+        rec = ReconfigRecord(
+            kind="expand",
+            mechanism=spawn.strategy.value,
+            nodes_before=before,
+            nodes_after=self.n_nodes,
+            est_wall_s=sim.total,
+            downtime_s=sim.downtime,
+            steps=sim.steps,
+            groups=sim.groups,
+        )
+        self.history.append(rec)
+        return rec
+
+    # ---------------------------------------------------------------- shrink --
+    def shrink(self, n_nodes_to_release: int, kind: str = "shrink") -> ReconfigRecord:
+        """TS-shrink: terminate the highest-node groups, return their devices."""
+        before = self.n_nodes
+        victims = sorted(self.state.nodes_in_use())[-n_nodes_to_release:]
+        return self.shrink_nodes(victims, kind=kind)
+
+    def shrink_nodes(self, victims: list[int], kind: str = "shrink") -> ReconfigRecord:
+        before = self.n_nodes
+        plan = plan_shrink(self.state, release_nodes=victims)
+        doomed_sizes = [
+            self.state.worlds[a.wid].size
+            for a in plan.actions
+            if a.wid is not None and a.wid in self.state.worlds
+            and a.kind.value in ("terminate_world", "awaken_and_terminate")
+        ]
+        sim = simulate_shrink(
+            plan.kind,
+            self.cost_model,
+            ns=sum(w.size for w in self.state.worlds.values()),
+            nt=0,
+            doomed_world_sizes=doomed_sizes or [1],
+            nodes_returned=len(plan.nodes_returned),
+            nodes_pinned=len(plan.nodes_pinned),
+        )
+        doomed_wids = [
+            a.wid for a in plan.actions
+            if a.wid is not None and a.kind.value in ("terminate_world", "awaken_and_terminate")
+        ]
+        doomed_nodes = {
+            wid: self.state.worlds[wid].nodes
+            for wid in doomed_wids
+            if wid in self.state.worlds
+        }
+        apply_shrink(self.state, plan)
+        for wid in doomed_wids:
+            group = self.groups.pop(wid, None)
+            if group is not None:
+                for node in doomed_nodes.get(wid, (group.node,)):
+                    self.pool.release(node)
+        rec = ReconfigRecord(
+            kind=kind,
+            mechanism=plan.kind.value,
+            nodes_before=before,
+            nodes_after=self.n_nodes,
+            est_wall_s=sim.total,
+            downtime_s=sim.total,
+            nodes_returned=plan.nodes_returned,
+            nodes_pinned=plan.nodes_pinned,
+        )
+        self.history.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------ fault --
+    def fail_node(self, node: int) -> ReconfigRecord:
+        """Node failure == an RMS-forced TS shrink of that node's group.
+
+        The paper's mechanism doubles as the recovery path: because every
+        world is node-confined, losing a node loses exactly one group; the
+        surviving groups keep a consistent state and the runtime simply
+        reconfigures without it.
+        """
+        return self.shrink_nodes([node], kind="fail")
+
+    def drop_straggler(self, node: int) -> ReconfigRecord:
+        """Straggler mitigation: TS-shrink the slow group out of the job."""
+        return self.shrink_nodes([node], kind="straggler")

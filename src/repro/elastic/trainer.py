@@ -1,0 +1,146 @@
+"""ElasticTrainer: the full malleability loop as a library component.
+
+Wraps a Model + ElasticRuntime + SimulatedRMS into one training loop:
+every step it drains due RMS events, reconfigures (expand via the
+parallel spawn plan, shrink/fail/straggler via TS), reshards the live
+TrainState onto the rebuilt mesh (stage 3), re-jits, and continues.
+Periodic mesh-independent checkpoints cover the SS-restart path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticTokens, make_batch_on_mesh
+from repro.models import Model
+from repro.parallel.sharding import ShardingContext
+from repro.train.steps import (
+    TrainState,
+    build_init_fn,
+    build_train_step,
+    train_state_shardings,
+)
+
+from .reshard import transfer_stats
+from .rms import Event, EventKind, SimulatedRMS
+from .runtime import ElasticRuntime
+
+
+@dataclass
+class StepRecord:
+    step: int
+    loss: float
+    n_nodes: int
+
+
+@dataclass
+class ElasticTrainer:
+    model: Model
+    runtime: ElasticRuntime
+    rms: SimulatedRMS
+    lr: float = 1e-3
+    batch: int = 8
+    seq: int = 64
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    history: list[StepRecord] = field(default_factory=list)
+    transfer_log: list[dict] = field(default_factory=list)
+
+    def __post_init__(self):
+        self._ctx = self._make_ctx()
+        self._step_fn = None
+        self._state: Optional[TrainState] = None
+        self._data = SyntheticTokens(self.model.cfg, self.batch, self.seq, self.seed)
+        self._ckpt = (
+            CheckpointManager(self.checkpoint_dir) if self.checkpoint_dir else None
+        )
+
+    # ------------------------------------------------------------------ mesh --
+    def _make_ctx(self) -> ShardingContext:
+        return ShardingContext(mesh=self.runtime.mesh(("data",)), mode="train")
+
+    def _rejit(self):
+        step_fn, shardings, _ = build_train_step(self.model, self._ctx, lr=self.lr)
+        self._step_fn = jax.jit(
+            step_fn,
+            in_shardings=(shardings, None),
+            out_shardings=(shardings, None),
+            donate_argnums=(0,),
+        )
+        return shardings
+
+    def _init_state(self):
+        init_fn, _ = build_init_fn(self.model, self._ctx)
+        self._state = init_fn(jax.random.key(self.seed))
+        self._rejit()
+
+    # --------------------------------------------------------------- resharding --
+    def _reshard_state(self):
+        """Stage 3: move the live TrainState onto the rebuilt mesh."""
+        _, shardings = train_state_shardings(self.model, self._ctx)
+        old_params = self._state.params
+        self._state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), self._state, shardings,
+        )
+        self.transfer_log.append(transfer_stats(old_params, self._state.params))
+        self._rejit()
+
+    # -------------------------------------------------------------------- events --
+    def _handle(self, ev: Event):
+        rt = self.runtime
+        if ev.kind is EventKind.GROW and ev.target_nodes > rt.n_nodes:
+            rt.expand(ev.target_nodes)
+        elif ev.kind is EventKind.SHRINK:
+            victims = [n for n in ev.nodes if n in rt.state.nodes_in_use()]
+            if victims:
+                rt.shrink_nodes(victims)
+        elif ev.kind is EventKind.FAIL:
+            for n in ev.nodes:
+                if n in rt.state.nodes_in_use():
+                    rt.fail_node(n)
+        elif ev.kind is EventKind.STRAGGLER:
+            for n in ev.nodes:
+                if n in rt.state.nodes_in_use():
+                    rt.drop_straggler(n)
+        else:
+            return False
+        return True
+
+    # ---------------------------------------------------------------------- run --
+    def run(self, steps: int) -> list[StepRecord]:
+        if self._state is None:
+            self._init_state()
+        for i in range(steps):
+            step_no = len(self.history)
+            reconfigured = False
+            for ev in self.rms.events_until(step_no):
+                reconfigured |= self._handle(ev)
+            if reconfigured:
+                self._ctx = self._make_ctx()
+                self._reshard_state()
+            batch = make_batch_on_mesh(
+                self._data.sample(step_no), self.model.cfg, self._ctx
+            )
+            self._state, metrics = self._step_fn(self._state, batch)
+            self.history.append(
+                StepRecord(step=step_no, loss=float(metrics["loss"]),
+                           n_nodes=self.runtime.n_nodes)
+            )
+            if self._ckpt and (step_no + 1) % self.checkpoint_every == 0:
+                self._ckpt.save({"params": self._state.params}, step_no + 1)
+        if self._ckpt:
+            self._ckpt.wait()
+        return self.history
+
+    # ------------------------------------------------------------------ queries --
+    @property
+    def state(self) -> TrainState:
+        return self._state
+
+    def losses(self) -> list[float]:
+        return [r.loss for r in self.history]

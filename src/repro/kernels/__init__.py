@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the substrate's compute hot spots.
+
+The paper's contribution is control-plane (process management), so these
+kernels serve the model substrate: flash attention (GQA/window/softcap),
+the Mamba2 SSD chunked scan, and the chunked mLSTM recurrence.  Each
+kernel module ships ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+an ``ops.py`` jit'd wrapper, and a ``ref.py`` pure-jnp oracle, validated
+in interpret mode on CPU.
+"""
+from .ops import flash_attention, mlstm_scan, ssd_scan
+
+__all__ = ["flash_attention", "mlstm_scan", "ssd_scan"]

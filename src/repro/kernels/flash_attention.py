@@ -1,0 +1,142 @@
+"""Flash attention Pallas kernel (TPU target, interpret-validated on CPU).
+
+Canonical TPU pattern: the grid's innermost dimension walks KV blocks
+*sequentially* (TPU grids are sequential), carrying the online-softmax
+state (m, l, acc) in VMEM scratch; the output block is written once, at
+the last KV step.  Q/K/V blocks are staged HBM->VMEM by BlockSpecs with
+MXU-aligned tiles.
+
+Features: causal masking, GQA (KV-head indexed as q_head // group via the
+BlockSpec index_map — no KV repetition in HBM), sliding window, logit
+soft-capping (gemma2).
+
+Layouts: q (B, H, Sq, D); k/v (B, KV, Sk, D); out (B, H, Sq, D).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,        # VMEM blocks
+    o_ref,                      # output block
+    m_ref, l_ref, acc_ref,      # scratch: (BQ, 1), (BQ, 1), (BQ, D)
+    *,
+    n_kv_blocks: int,
+    block_q: int,
+    block_k: int,
+    causal: bool,
+    window: int,
+    softcap: float,
+    scale: float,
+):
+    kv_idx = pl.program_id(3)
+    q_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (BK, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                    # (BQ, BK)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_idx * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kv_idx * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Guard fully-masked rows (m == -inf): exp(NEG_INF - NEG_INF) would be 1.
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    alpha = jnp.where(m_prev <= NEG_INF, 0.0, alpha)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,               # (B, H, Sq, D)
+    k: jax.Array,               # (B, KV, Sk, D)
+    v: jax.Array,               # (B, KV, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    _, KV, Sk, _ = k.shape
+    assert H % KV == 0
+    group = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq = Sq // block_q
+    nk = Sk // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel,
+        n_kv_blocks=nk,
+        block_q=block_q,
+        block_k=block_k,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            # (m, l, acc) persist across the sequential kv grid dimension
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,134 @@
+"""Chunked mLSTM Pallas kernel (TPU target, xLSTM arXiv:2405.04517).
+
+Grid (B, H, n_chunks), chunk innermost; the matrix memory S (D, D), the
+normalizer n (D,) and the stabilizer m (scalar) persist in VMEM scratch
+across the sequential chunk dimension.  All gating math is fp32.
+
+Layouts (pre-transposed by ops.py):
+  q/k/v (B, H, nc, Q, D)   ig/fg (B, H, nc, Q)   ->  h (B, H, nc, Q, D)
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, ig_ref, fg_ref, h_ref,
+                  s_ref, n_ref, m_ref, *, chunk: int, head_dim: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    Q, D = chunk, head_dim
+    q = q_ref[0, 0, 0].astype(jnp.float32) / math.sqrt(D)   # (Q, D)
+    k = k_ref[0, 0, 0].astype(jnp.float32)
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+    ig = ig_ref[0, 0, 0].astype(jnp.float32)                # (Q,)
+    logf = jax.nn.log_sigmoid(fg_ref[0, 0, 0].astype(jnp.float32))
+
+    b = jnp.cumsum(logf)                                    # (Q,)
+    total = b[-1]
+    m_p = m_ref[0, 0]
+
+    # intra log-weights: l_ij = b_i - b_j + ig_j  (j <= i)
+    diff = b[:, None] - b[None, :] + ig[None, :]
+    mask = (
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        <= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    )
+    diff = jnp.where(mask, diff, NEG)
+    m_intra = jnp.max(diff, axis=1)                         # (Q,)
+
+    # per-position stabilizer
+    m_i = jnp.maximum(m_p + b, m_intra)                     # (Q,)
+    inter_scale = jnp.exp(m_p + b - m_i)
+    inter_scale = jnp.where(m_p <= NEG, 0.0, inter_scale)
+
+    num = jax.lax.dot_general(
+        q, s_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * inter_scale[:, None]
+    den = (q @ n_ref[...].reshape(D, 1))[:, 0] * inter_scale
+
+    qk = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                       # (Q, Q)
+    wts = jnp.exp(diff - m_i[:, None])
+    wts = jnp.where(mask, wts, 0.0)
+    num += jax.lax.dot_general(
+        qk * wts, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    den += jnp.sum(qk * wts, axis=1)
+
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[:, None]
+    h_ref[0, 0, 0] = h.astype(h_ref.dtype)
+
+    # state update (stabilized)
+    w = total - b + ig                                      # (Q,)
+    m_chunk = jnp.max(w)
+    m_new = jnp.maximum(m_p + total, m_chunk)
+    scale_old = jnp.where(m_p <= NEG, 0.0, jnp.exp(m_p + total - m_new))
+    cw = jnp.exp(w - m_new)                                 # (Q,)
+    s_ref[...] = s_ref[...] * scale_old + jax.lax.dot_general(
+        k * cw[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    n_ref[...] = n_ref[...] * scale_old + jnp.sum(k * cw[:, None], axis=0)
+    m_ref[0, 0] = m_new
+
+
+def mlstm_scan_pallas(
+    q: jax.Array,        # (B, S, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    i_gate: jax.Array,   # (B, S, H)
+    f_gate: jax.Array,   # (B, S, H)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    Q = chunk
+
+    def tr(a):
+        return jnp.moveaxis(a, 2, 1).reshape(B, H, nc, Q, *a.shape[3:])
+
+    qt, kt, vt = tr(q), tr(k), tr(v)
+    igt = jnp.moveaxis(i_gate, 2, 1).reshape(B, H, nc, Q)
+    fgt = jnp.moveaxis(f_gate, 2, 1).reshape(B, H, nc, Q)
+
+    kernel = functools.partial(_mlstm_kernel, chunk=Q, head_dim=D)
+    h = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h_, c: (b, h_, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h_, c: (b, h_, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, D), lambda b, h_, c: (b, h_, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h_, c: (b, h_, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h_, c: (b, h_, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, D), lambda b, h_, c: (b, h_, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, Q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, igt, fgt)
+    return jnp.moveaxis(h.reshape(B, H, S, D), 1, 2)

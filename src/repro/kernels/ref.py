@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0
+):
+    """q (B,H,Sq,D); k/v (B,KV,Sk,D); returns (B,H,Sq,D).  fp32 math."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    group = H // KV
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) / math.sqrt(D)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bmat, Cmat):
+    """Sequential SSD recurrence (the definitional oracle).
+
+    x (B,S,H,P); dt (B,S,H); A (H,); Bmat/Cmat (B,S,N).
+    Returns y (B,S,H,P), final state (B,H,N,P)."""
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, t):
+        xt, dtt, bt, ct = t
+        decay = jnp.exp(dtt.astype(f32) * A.astype(f32))            # (B,H)
+        outer = jnp.einsum("bn,bhp->bhnp", bt.astype(f32), xt.astype(f32))
+        state = state * decay[:, :, None, None] + dtt.astype(f32)[:, :, None, None] * outer
+        y = jnp.einsum("bn,bhnp->bhp", ct.astype(f32), state)
+        return state, y
+
+    init = jnp.zeros((B, H, N, P), f32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0)),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate):
+    """Sequential stabilized mLSTM (definitional oracle).
+
+    q/k/v (B,S,H,D); gates (B,S,H).  Returns h (B,S,H,D)."""
+    B, S, H, D = q.shape
+    f32 = jnp.float32
+
+    def step(carry, t):
+        S_p, n_p, m_p = carry
+        qt, kt, vt, it, ft = t
+        qt = qt.astype(f32) / math.sqrt(D)
+        logf = jax.nn.log_sigmoid(ft.astype(f32))
+        m_new = jnp.maximum(logf + m_p, it.astype(f32))
+        scale_old = jnp.exp(logf + m_p - m_new)
+        wt = jnp.exp(it.astype(f32) - m_new)
+        S_new = S_p * scale_old[:, :, None, None] + wt[:, :, None, None] * jnp.einsum(
+            "bhk,bhv->bhkv", kt.astype(f32), vt.astype(f32)
+        )
+        n_new = n_p * scale_old[:, :, None] + wt[:, :, None] * kt.astype(f32)
+        num = jnp.einsum("bhk,bhkv->bhv", qt, S_new)
+        den = jnp.einsum("bhk,bhk->bh", qt, n_new)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (S_new, n_new, m_new), h
+
+    init = (
+        jnp.zeros((B, H, D, D), f32),
+        jnp.zeros((B, H, D), f32),
+        jnp.full((B, H), -jnp.inf, f32),
+    )
+    _, hs = jax.lax.scan(
+        step, init,
+        tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_gate, f_gate)),
+    )
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype)

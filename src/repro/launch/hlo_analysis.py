@@ -1,0 +1,293 @@
+"""While-aware HLO analysis: FLOPs + collective bytes with loop trip counts.
+
+``compiled.cost_analysis()`` on this XLA build counts each while body
+ONCE, which silently undercounts scan-over-layers models by a factor of
+L.  This module parses the post-SPMD HLO text into computations, walks
+the call graph (entry -> while bodies -> nested whiles / fusions), infers
+loop trip counts from the condition computation's comparison constant,
+and accumulates:
+
+  * dot FLOPs:  2 * prod(result_shape) * prod(lhs_contracting_dims)
+  * collective result bytes per kind (all-reduce counted 2x: ring cost)
+  * dot bytes (operands+result) as an HBM-traffic lower-bound complement
+
+Elementwise FLOPs are ignored (negligible next to the matmuls for every
+assigned arch).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]"
+)
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shapes_in(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = [int(d) for d in dims.split(",")] if dims else []
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    header: str = ""
+    lines: list[str] = field(default_factory=list)
+    _symbols: dict | None = None
+
+    def symbols(self) -> dict[str, str]:
+        """Instruction name -> result type (incl. header parameters)."""
+        if self._symbols is None:
+            table: dict[str, str] = {}
+            # parameters: "name.1: f32[6,48]" pairs in the header
+            for m in re.finditer(
+                r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\]\{\},]+))", self.header
+            ):
+                table[m.group(1)] = m.group(2)
+            for s in self.lines:
+                m = re.match(
+                    r"(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],\{\}]+))\s",
+                    s,
+                )
+                if m:
+                    table[m.group(1)] = m.group(2)
+            self._symbols = table
+        return self._symbols
+
+
+def split_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    header = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*{\s*(/\*.*\*/)?\s*$")
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = header.match(s)
+            if m and ("->" in s or s.startswith("ENTRY")):
+                cur = Computation(name=m.group(1), header=s)
+        else:
+            if s == "}" or s.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+            else:
+                cur.lines.append(s)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations|called_computations)="
+    r"\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)"
+)
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _prodl(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: dict = field(default_factory=lambda: {k: 0 for k in COLLECTIVES})
+    coll_f32: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Totals", times: float = 1.0):
+        self.flops += other.flops * times
+        self.dot_bytes += other.dot_bytes * times
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * times
+            self.coll_counts[k] += other.coll_counts[k] * times
+            self.coll_f32[k] += other.coll_f32[k] * times
+
+
+def _line_result_and_op(s: str):
+    m = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*((?:\([^)]*\))|(?:[\w\[\],\{\}]+))\s+([\w\-]+)", s)
+    if not m:
+        return None, None
+    return m.group(1), m.group(2)
+
+
+def _dot_flops(s: str, result_type: str, symbols: dict[str, str]) -> tuple[float, float]:
+    """(flops, bytes) for one dot line.
+
+    Optimized HLO prints operands as bare instruction names; shapes are
+    resolved through the computation's symbol table.
+    """
+    res_elems = 0
+    res_bytes = 0
+    for dt, shape in _shapes_in(result_type):
+        n = 1
+        for d in shape:
+            n *= d
+        res_elems += n
+        res_bytes += n * _DTYPE_BYTES[dt]
+    # operand names inside dot(...)
+    args = s[s.index("dot(") + 4:]
+    depth = 1
+    buf = []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    operands = "".join(buf)
+    names = re.findall(r"%([\w\.\-]+)", operands)
+    op_types = [symbols.get(n, "") for n in names]
+    # typed-operand fallback (pre-optimization dumps)
+    if not any(op_types) and _SHAPE_RE.search(operands):
+        op_types = [operands]
+    op_bytes = 0
+    for t in op_types:
+        op_bytes += _nbytes(t)
+    lhs_shapes = _shapes_in(op_types[0]) if op_types else []
+    lhs_shape = lhs_shapes[0][1] if lhs_shapes else []
+    m = _DOT_CONTRACT_RE.search(s)
+    k = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_shape):
+                k *= lhs_shape[i]
+    return 2.0 * res_elems * k, float(op_bytes + res_bytes)
+
+
+def _trip_count(while_line: str, comps: dict[str, Computation]) -> int:
+    """Trip count of one while op.
+
+    Primary: XLA's ``backend_config known_trip_count`` on the op itself.
+    Fallback: largest integer constant in the condition computation."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%?([\w\.\-]+)", while_line)
+    best = 1
+    if mc and mc.group(1) in comps:
+        for s in comps[mc.group(1)].lines:
+            for mm in re.finditer(r"constant\((\d+)\)", s):
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def analyze(hlo: str) -> dict:
+    comps = split_computations(hlo)
+
+    # entry = computation with ENTRY marker, else the largest
+    entry_name = None
+    for raw_line in hlo.splitlines():
+        if raw_line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", raw_line)
+            if m:
+                entry_name = m.group(1)
+    if entry_name is None or entry_name not in comps:
+        entry_name = max(comps, key=lambda c: len(comps[c].lines))
+
+    cache: dict[str, Totals] = {}
+
+    def cost(name: str, stack: tuple = ()) -> Totals:
+        if name in cache:
+            return cache[name]
+        if name not in comps or name in stack:
+            return Totals()
+        comp = comps[name]
+        t = Totals()
+        for s in comp.lines:
+            result_type, op = _line_result_and_op(s)
+            if op is None:
+                continue
+            if op == "dot":
+                fl, by = _dot_flops(s, result_type, comp.symbols())
+                t.flops += fl
+                t.dot_bytes += by
+            elif op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", s)
+                trips = _trip_count(s, comps)
+                if mb:
+                    t.add(cost(mb.group(1), stack + (name,)), times=trips)
+            elif op in ("fusion", "call", "conditional", "custom-call",
+                        "reduce", "sort", "map", "scatter", "select-and-scatter"):
+                for group in _CALLED_RE.findall(s):
+                    for sub in re.split(r",\s*%?", group):
+                        if sub:
+                            t.add(cost(sub, stack + (name,)))
+            else:
+                base = None
+                for c in COLLECTIVES:
+                    if op == c or op.startswith(c + "-start"):
+                        base = c
+                        break
+                if base:
+                    nb = _nbytes(result_type)
+                    if base == "all-reduce":
+                        nb *= 2
+                    t.coll[base] += nb
+                    t.coll_counts[base] += 1
+                    # f32 payload portion, for the TPU-dtype correction:
+                    # the CPU backend upcasts bf16 GEMM operands to f32
+                    # *before* SPMD places the collective, doubling payload
+                    # bytes vs what a TPU lowering moves (verified by
+                    # probe; EXPERIMENTS.md §Dry-run caveats).
+                    f32b = sum(
+                        (lambda n: n * 4)(_prodl(shape))
+                        for dt_, shape in _shapes_in(result_type)
+                        if dt_ == "f32"
+                    )
+                    if base == "all-reduce":
+                        f32b *= 2
+                    t.coll_f32[base] += f32b
+        cache[name] = t
+        return t
+
+    total = cost(entry_name)
+    # TPU-dtype corrected bytes: f32 payloads that a TPU lowering would
+    # move as bf16 (CPU GEMM upcast artifact) count at half.
+    corrected = {
+        k: total.coll[k] - 0.5 * total.coll_f32[k] for k in COLLECTIVES
+    }
+    return {
+        "flops": total.flops,
+        "dot_bytes": total.dot_bytes,
+        "collectives": {
+            "per_kind": {k: int(v) for k, v in total.coll.items()},
+            "counts": {k: int(v) for k, v in total.coll_counts.items()},
+            "total_bytes": int(sum(total.coll.values())),
+            "per_kind_tpu_corrected": {k: int(v) for k, v in corrected.items()},
+            "total_bytes_tpu_corrected": int(sum(corrected.values())),
+        },
+    }

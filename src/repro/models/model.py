@@ -1,0 +1,148 @@
+"""Model facade: init / loss / prefill / decode for every assigned arch.
+
+The facade is purely functional; the training and serving step builders
+(:mod:`repro.train.steps`) close over it and add sharding + optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from .common import ModelConfig, ParamBuilder
+from .layers import init_rmsnorm, rmsnorm
+from .transformer import (
+    decode_blocks,
+    forward_blocks,
+    init_blocks,
+    init_cache_shapes,
+)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- init --
+    def init(self, key: jax.Array) -> tuple[dict, dict]:
+        cfg = self.cfg
+        ke, kb, kh = jax.random.split(key, 3)
+        b = ParamBuilder(ke, jnp.dtype(cfg.param_dtype))
+        if not cfg.embed_inputs:
+            b.add("embed/table", (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                  init="embed", scale=0.02)
+        init_rmsnorm(b, "final_norm", cfg.d_model)
+        if not cfg.tie_embeddings:
+            b.add("head/w", (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+                  init="normal")
+        params, specs = b.build()
+        bp, bs = init_blocks(kb, cfg)
+        params.update(bp)
+        specs.update(bs)
+        return params, specs
+
+    def abstract_params(self, key: Optional[jax.Array] = None) -> tuple[dict, dict]:
+        """Shape/dtype-only params (no allocation) + logical specs."""
+        captured: dict = {}
+
+        def fn(k):
+            p, s = self.init(k)
+            captured.update(s)  # specs are static python; capture at trace time
+            return p
+
+        shapes = jax.eval_shape(fn, jax.random.key(0))
+        return shapes, dict(captured)
+
+    # -------------------------------------------------------------- forward --
+    def embed(self, params: dict, batch: dict) -> jax.Array:
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            x = batch["embeds"].astype(cfg.compute_dtype)
+        else:
+            table = params["embed/table"]
+            x = jnp.take(table, batch["tokens"], axis=0).astype(cfg.compute_dtype)
+        return constrain(x, ("batch", "seq", "embed"))
+
+    def logits(self, params: dict, y: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        y = rmsnorm(params, "final_norm", y, cfg.norm_eps)
+        w = (params["embed/table"].T if cfg.tie_embeddings else params["head/w"])
+        logits = jnp.einsum(
+            "bsd,dv->bsv", y, w.astype(cfg.compute_dtype)
+        ).astype(jnp.dtype(cfg.logit_dtype))
+        if cfg.final_softcap > 0:
+            logits = cfg.final_softcap * jnp.tanh(
+                logits.astype(jnp.float32) / cfg.final_softcap
+            ).astype(logits.dtype)
+        return constrain(logits, ("batch", "seq", "vocab"))
+
+    def forward(self, params: dict, batch: dict, collect_kv: bool = False):
+        x = self.embed(params, batch)
+        positions = batch.get("positions")
+        if positions is None:
+            B, S = x.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        y, caches = forward_blocks(params, self.cfg, x, positions, collect_kv)
+        return self.logits(params, y), caches
+
+    # ------------------------------------------------------------------ loss --
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        """Mean next-token cross entropy; labels < 0 are masked."""
+        cfg = self.cfg
+        logits, _ = self.forward(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+
+        def xent(lg, lb, mk):
+            lg = lg.astype(jnp.float32)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            picked = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+            return jnp.sum((lse - picked) * mk), jnp.sum(mk)
+
+        if cfg.loss_chunk and logits.shape[1] % cfg.loss_chunk == 0:
+            # Sequence-chunked loss: bounds the fp32 (B, S, V) materialization.
+            nch = logits.shape[1] // cfg.loss_chunk
+            B = logits.shape[0]
+            lg = logits.reshape(B, nch, cfg.loss_chunk, -1)
+            lb = labels.reshape(B, nch, cfg.loss_chunk)
+            mk = mask.reshape(B, nch, cfg.loss_chunk)
+
+            def body(carry, xs):
+                s, c = carry
+                ls, cnt = xent(xs[0], xs[1], xs[2])
+                return (s + ls, c + cnt), 0
+
+            (tot, cnt), _ = jax.lax.scan(
+                body,
+                (jnp.float32(0), jnp.float32(0)),
+                (jnp.moveaxis(lg, 1, 0), jnp.moveaxis(lb, 1, 0), jnp.moveaxis(mk, 1, 0)),
+            )
+            return tot / jnp.maximum(cnt, 1.0)
+        tot, cnt = xent(logits, labels, mask)
+        return tot / jnp.maximum(cnt, 1.0)
+
+    # ---------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        shapes = init_cache_shapes(self.cfg, batch, max_len)
+        return {
+            name: jnp.full(shape, fill, jnp.dtype(dt))
+            for name, (shape, dt, _axes, fill) in shapes.items()
+        }
+
+    def cache_logical_axes(self, batch: int, max_len: int) -> dict:
+        shapes = init_cache_shapes(self.cfg, batch, max_len)
+        return {name: axes for name, (_s, _d, axes, _f) in shapes.items()}
+
+    def decode_step(self, params: dict, cache: dict, batch: dict):
+        """One token for every sequence.  batch: tokens/embeds (B,1),
+        positions (B,1) or (3,B,1), cache_pos () int32."""
+        x = self.embed(params, batch)
+        positions = batch["positions"]
+        y, new_cache = decode_blocks(
+            params, self.cfg, x, positions, cache, batch["cache_pos"]
+        )
+        return self.logits(params, y), new_cache

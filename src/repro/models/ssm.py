@@ -1,0 +1,202 @@
+"""Mamba2 (SSD) mixing layer — the zamba2 backbone block.
+
+Implements the chunked "state-space dual" algorithm (Mamba-2,
+arXiv:2405.21060): within a chunk the recurrence is evaluated as a masked
+decay-weighted attention (quadratic in the chunk length, MXU-friendly);
+across chunks a small scan carries the (H, N, P) state.  The same
+function is the pure-jnp oracle for the ``ssd_scan`` Pallas kernel.
+
+Shapes: B batch, S seq, H ssm heads, P head dim, N state dim, Q chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from .common import ModelConfig, ParamBuilder
+from .layers import rmsnorm, init_rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (shared reference for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int):
+    """Chunked SSD: y_t = C_t . S_t,  S_t = exp(A dt_t) S_{t-1} + dt_t B_t x_t^T.
+
+    Args:
+      x:    (B, S, H, P) input heads
+      dt:   (B, S, H)    positive step sizes (already softplus'ed)
+      A:    (H,)         negative per-head decay rates
+      Bmat: (B, S, N)    input projection (shared across heads, like MQA)
+      Cmat: (B, S, N)    output projection
+      chunk: Q, chunk length (S % Q == 0)
+    Returns: y (B, S, H, P), final_state (B, H, N, P)
+    """
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    f32 = jnp.float32
+    xq = x.reshape(B, nc, Q, H, P)
+    dtq = dt.reshape(B, nc, Q, H).astype(f32)
+    Bq = Bmat.reshape(B, nc, Q, N)
+    Cq = Cmat.reshape(B, nc, Q, N)
+
+    dA = dtq * A.astype(f32)                       # (B,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumulative log decay
+
+    # ---- intra-chunk (quadratic, causal) ----------------------------------
+    # decay(i,j) = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cq.astype(f32), Bq.astype(f32))
+    w = cb[..., None] * decay * dtq[:, :, None, :, :]             # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xq.astype(f32))
+
+    # ---- chunk summaries ---------------------------------------------------
+    total = cum[:, :, -1:, :]                                     # (B,nc,1,H)
+    rem = jnp.exp(total - cum)                                    # decay to chunk end
+    # state contributed by chunk c: sum_j rem_j dt_j B_j x_j^T -> (B,nc,H,N,P)
+    contrib = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchnp", rem * dtq, Bq.astype(f32), xq.astype(f32)
+    )
+
+    # ---- inter-chunk scan ----------------------------------------------------
+    chunk_decay = jnp.exp(total[:, :, 0, :])                      # (B,nc,H)
+
+    def step(state, inp):
+        dec, con = inp                                            # (B,H), (B,H,N,P)
+        new = state * dec[:, :, None, None] + con
+        return new, state                                         # emit state BEFORE chunk
+
+    init = jnp.zeros((B, H, N, P), f32)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(contrib, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution to outputs ---------------------------------
+    # y_inter_i = exp(cum_i) * C_i . S_prev
+    y_inter = jnp.einsum(
+        "bcin,bchnp->bcihp", Cq.astype(f32), prev_states
+    ) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, Bmat, Cmat):
+    """Single-token SSD update.  state: (B,H,N,P); x: (B,H,P); dt: (B,H);
+    Bmat/Cmat: (B,N).  Returns (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    dtf = dt.astype(f32)
+    decay = jnp.exp(dtf * A.astype(f32))                          # (B,H)
+    outer = jnp.einsum("bn,bhp->bhnp", Bmat.astype(f32), x.astype(f32))
+    new_state = state * decay[:, :, None, None] + dtf[:, :, None, None] * outer
+    y = jnp.einsum("bn,bhnp->bhp", Cmat.astype(f32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gate -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    b.add(f"{name}/in_proj", (d, 2 * d_in + 2 * N + H), ("embed", "ssm_inner"))
+    b.add(f"{name}/conv_w", (cfg.ssm_conv_width, d_in + 2 * N), ("conv", "ssm_inner"))
+    b.add(f"{name}/conv_b", (d_in + 2 * N,), ("ssm_inner",), init="zeros")
+    b.add(f"{name}/A_log", (H,), ("ssm_heads",), init="zeros")
+    b.add(f"{name}/D", (H,), ("ssm_heads",), init="ones")
+    b.add(f"{name}/dt_bias", (H,), ("ssm_heads",), init="zeros")
+    b.add(f"{name}/norm_scale", (d_in,), ("ssm_inner",), init="ones")
+    b.add(f"{name}/out_proj", (d_in, d), ("ssm_inner", "embed"))
+
+
+def _causal_conv(x, w, b, state=None):
+    """Causal depthwise conv; x (B,S,C), w (K,C).  With ``state`` (B,K-1,C)
+    runs one decode step (S==1) and returns the updated state."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+        xp = jnp.concatenate([pad, x], axis=1)
+        out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+        return jax.nn.silu(out + b), None
+    xp = jnp.concatenate([state, x], axis=1)                      # (B,K,C)
+    out = sum(xp[:, i : i + 1] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), xp[:, 1:]
+
+
+def mamba2_block(params, name: str, cfg: ModelConfig, x, state=None):
+    """x: (B,S,d).  state: None (training) or dict {ssm, conv} for decode.
+
+    Returns (y (B,S,d), new_state).
+    """
+    B, S, d = x.shape
+    dt_ = x.dtype
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+
+    proj = jnp.einsum("bsd,dk->bsk", x, params[f"{name}/in_proj"].astype(dt_))
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    conv_in = xbc                                                 # (B,S,d_in+2N)
+    conv_w = params[f"{name}/conv_w"].astype(dt_)
+    conv_b = params[f"{name}/conv_b"].astype(dt_)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, conv_w, conv_b, conv_state)
+    xs, Bmat, Cmat = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    xs = constrain(xs, ("batch", "seq", "ssm_inner"))
+    xh = xs.reshape(B, S, H, P)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params[f"{name}/dt_bias"].astype(jnp.float32)
+    )                                                             # (B,S,H)
+    A = -jnp.exp(params[f"{name}/A_log"].astype(jnp.float32))     # (H,)
+
+    if state is None:
+        y, _final = ssd_chunked(xh, dt, A, Bmat, Cmat, cfg.ssm_chunk)
+        new_ssm = None
+    else:
+        y1, new_ssm = ssd_decode_step(
+            state["ssm"], xh[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0]
+        )
+        y = y1[:, None]
+    y = y + xh * params[f"{name}/D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+
+    # gated RMSNorm (Mamba-2's norm-before-out)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = (yf * params[f"{name}/norm_scale"].astype(jnp.float32)).astype(dt_)
+    y = constrain(y, ("batch", "seq", "ssm_inner"))
+
+    out = jnp.einsum("bsk,kd->bsd", y, params[f"{name}/out_proj"].astype(dt_))
+    out = constrain(out, ("batch", "seq", "embed"))
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": new_ssm, "conv": new_conv}
+    return out, new_state
+
+
+def mamba2_state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "ssm": (batch, H, cfg.ssm_state, cfg.ssm_head_dim),
+        "conv": (batch, cfg.ssm_conv_width - 1, d_in + 2 * cfg.ssm_state),
+    }

@@ -1,0 +1,409 @@
+"""Decoder assembly: scan-over-layers for every family.
+
+Training/prefill use ``jax.lax.scan`` over stacked per-layer params (HLO
+size independent of depth — essential for 60+ layer archs), with optional
+per-layer remat.  Decode uses an unrolled loop over layers (tiny per-layer
+graphs, per-layer cache slices are simpler and XLA fuses them well).
+
+Families:
+  dense   — [attn, mlp] x L     (gemma2: alternating sliding window + softcap)
+  moe     — [attn, moe] x L     (optional shared expert)
+  hybrid  — zamba2: Mamba2 backbone + ONE shared attn+mlp block applied
+            every ``attn_every`` layers (weights shared across positions)
+  ssm     — xLSTM: mLSTM blocks with an sLSTM every ``xlstm_slstm_every``
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from .common import ModelConfig, ParamBuilder, stack_params
+from .layers import (
+    attention,
+    init_attention,
+    init_mlp,
+    init_moe,
+    init_rmsnorm,
+    mlp,
+    moe,
+    rmsnorm,
+)
+from .ssm import init_mamba2, mamba2_block, mamba2_state_shapes
+from .xlstm import (
+    init_mlstm_block,
+    init_slstm_block,
+    mlstm_block,
+    mlstm_state_shapes,
+    slstm_block,
+    slstm_state_shapes,
+)
+
+# ---------------------------------------------------------------------------
+# Per-layer inits
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_layer(key, cfg: ModelConfig):
+    b = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+    init_rmsnorm(b, "ln_attn", cfg.d_model)
+    init_attention(b, "attn", cfg)
+    init_rmsnorm(b, "ln_mlp", cfg.d_model)
+    if cfg.family == "moe":
+        init_moe(b, "moe", cfg)
+    else:
+        init_mlp(b, "mlp", cfg.d_model, cfg.d_ff)
+    return b.build()
+
+
+def _init_mamba_layer(key, cfg: ModelConfig):
+    b = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+    init_rmsnorm(b, "ln", cfg.d_model)
+    init_mamba2(b, "mamba", cfg)
+    return b.build()
+
+
+def _init_xlstm_unit(key, cfg: ModelConfig):
+    """One scan unit: (xlstm_slstm_every - 1) mLSTM blocks + 1 sLSTM block."""
+    b = ParamBuilder(key, jnp.dtype(cfg.param_dtype))
+    for i in range(cfg.xlstm_slstm_every - 1):
+        init_rmsnorm(b, f"ln_m{i}", cfg.d_model)
+        init_mlstm_block(b, f"mlstm{i}", cfg)
+    init_rmsnorm(b, "ln_s", cfg.d_model)
+    init_slstm_block(b, "slstm", cfg)
+    return b.build()
+
+
+def init_blocks(key, cfg: ModelConfig) -> tuple[dict, dict]:
+    """Stacked block params + the shared (non-stacked) extras."""
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        keys = jax.random.split(key, cfg.n_layers)
+        stacked, st_specs = stack_params(
+            [_init_dense_layer(k, cfg) for k in keys]
+        )
+        params.update({f"blocks/{k}": v for k, v in stacked.items()})
+        specs.update({f"blocks/{k}": v for k, v in st_specs.items()})
+    elif cfg.family == "hybrid":
+        keys = jax.random.split(key, cfg.n_layers + 1)
+        stacked, st_specs = stack_params(
+            [_init_mamba_layer(k, cfg) for k in keys[:-1]]
+        )
+        params.update({f"blocks/{k}": v for k, v in stacked.items()})
+        specs.update({f"blocks/{k}": v for k, v in st_specs.items()})
+        shared, sh_specs = _init_dense_layer(keys[-1], cfg.replace(family="dense"))
+        params.update({f"shared_attn/{k}": v for k, v in shared.items()})
+        specs.update({f"shared_attn/{k}": v for k, v in sh_specs.items()})
+    elif cfg.family == "ssm":
+        every = max(cfg.xlstm_slstm_every, 1)
+        n_units = cfg.n_layers // every
+        keys = jax.random.split(key, max(n_units, 1))
+        stacked, st_specs = stack_params(
+            [_init_xlstm_unit(k, cfg) for k in keys[:n_units]]
+        )
+        params.update({f"blocks/{k}": v for k, v in stacked.items()})
+        specs.update({f"blocks/{k}": v for k, v in st_specs.items()})
+    else:
+        raise ValueError(cfg.family)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill): scan over layers
+# ---------------------------------------------------------------------------
+
+
+def _layer_windows(cfg: ModelConfig) -> Optional[jnp.ndarray]:
+    """Per-layer sliding window sizes (0 = full attention)."""
+    if not cfg.sliding_window:
+        return None
+    if cfg.alt_local_global:
+        return jnp.asarray(
+            [cfg.sliding_window if i % 2 == 0 else 0 for i in range(cfg.n_layers)],
+            jnp.int32,
+        )
+    return jnp.asarray([cfg.sliding_window] * cfg.n_layers, jnp.int32)
+
+
+def _split_stacked(params: dict, prefix: str, dtype=None) -> dict:
+    """Extract a sub-dict; optionally cast floating params to the compute
+    dtype ONCE here, so FSDP all-gathers inside the scan move bf16, not
+    the fp32 master copies (2x collective volume otherwise)."""
+    plen = len(prefix)
+    out = {k[plen:]: v for k, v in params.items() if k.startswith(prefix)}
+    if dtype is not None:
+        out = {
+            k: (v.astype(dtype) if jnp.issubdtype(v.dtype, jnp.floating) else v)
+            for k, v in out.items()
+        }
+    return out
+
+
+def _residual(cfg, x):
+    """Sequence-parallel residual stream: shard seq over the TP axis
+    between blocks (Megatron SP) so saved scan carries are 1/TP sized."""
+    if cfg.seq_parallel:
+        return constrain(x, ("batch", "residual_seq", "embed"))
+    return x
+
+
+def _dense_block(layer_params, cfg, x, positions, window, collect_kv):
+    x = _residual(cfg, x)
+    h = rmsnorm(layer_params, "ln_attn", x, cfg.norm_eps)
+    attn_out, kv = attention(
+        layer_params, "attn", cfg, h, positions, window=window,
+        collect_kv=collect_kv,
+    )
+    x = _residual(cfg, x + attn_out)
+    h = rmsnorm(layer_params, "ln_mlp", x, cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe(layer_params, "moe", cfg, h)
+    else:
+        x = x + mlp(layer_params, "mlp", h)
+    return _residual(cfg, x), kv
+
+
+def forward_blocks(params, cfg: ModelConfig, x, positions, collect_kv=False):
+    """x: (B,S,d) post-embedding.  Returns (y, caches-or-None)."""
+    B, S, d = x.shape
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        stacked = _split_stacked(params, "blocks/", cfg.compute_dtype)
+        windows = _layer_windows(cfg)
+
+        def body(carry, xs):
+            lp = xs["params"]
+            window = xs.get("window")
+            y, kv = _dense_block(lp, cfg, carry, positions, window, collect_kv)
+            return y, (kv if collect_kv else 0)
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        xs = {"params": stacked}
+        if windows is not None:
+            xs["window"] = windows
+        y, kvs = jax.lax.scan(body, x, xs)
+        return y, (kvs if collect_kv else None)
+
+    if cfg.family == "hybrid":
+        stacked = _split_stacked(params, "blocks/", cfg.compute_dtype)
+        shared = _split_stacked(params, "shared_attn/", cfg.compute_dtype)
+        every = max(cfg.attn_every, 1)
+
+        def body(carry, xs):
+            lp, idx = xs
+            carry = _residual(cfg, carry)
+            h = rmsnorm(lp, "ln", carry, cfg.norm_eps)
+            out, _ = mamba2_block(lp, "mamba", cfg, h)
+            y = _residual(cfg, carry + out)
+
+            def with_attn(y):
+                r, _ = _dense_block(shared, cfg, y, positions, None, False)
+                return r
+
+            apply_attn = (idx % every) == (every - 1)
+            y = jax.lax.cond(apply_attn, with_attn, lambda y: y, y)
+            return y, 0
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        y, _ = jax.lax.scan(
+            body, x, (stacked, jnp.arange(cfg.n_layers, dtype=jnp.int32))
+        )
+        return y, None
+
+    if cfg.family == "ssm":
+        stacked = _split_stacked(params, "blocks/", cfg.compute_dtype)
+        every = max(cfg.xlstm_slstm_every, 1)
+
+        def body(carry, lp):
+            y = _residual(cfg, carry)
+            for i in range(every - 1):
+                h = rmsnorm(lp, f"ln_m{i}", y, cfg.norm_eps)
+                out, _ = mlstm_block(lp, f"mlstm{i}", cfg, h)
+                y = _residual(cfg, y + out)
+            h = rmsnorm(lp, "ln_s", y, cfg.norm_eps)
+            out, _ = slstm_block(lp, "slstm", cfg, h)
+            y = _residual(cfg, y + out)
+            return y, 0
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        y, _ = jax.lax.scan(body, x, stacked)
+        return y, None
+
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Decode: unrolled layer loop over per-layer cache slices
+# ---------------------------------------------------------------------------
+
+
+def decode_blocks(params, cfg: ModelConfig, x, positions, cache: dict, cache_pos):
+    """One decode step.  x: (B,1,d).  cache: stacked per-layer dict.
+    Returns (y, new_cache)."""
+    B = x.shape[0]
+    new_cache = {k: v for k, v in cache.items()}
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        stacked = _split_stacked(params, "blocks/")
+        windows = _layer_windows(cfg)
+        split_cache = "k_loc" in cache   # gemma2: window-sized ring caches
+        loc_slot = glob_slot = 0
+        for i in range(cfg.n_layers):
+            lp = {k: v[i] for k, v in stacked.items()}
+            is_local = bool(cfg.alt_local_global and i % 2 == 0)
+            if split_cache and is_local:
+                layer_cache = {"k": cache["k_loc"][loc_slot],
+                               "v": cache["v_loc"][loc_slot], "ring": True}
+            else:
+                layer_cache = {"k": cache["k"][glob_slot], "v": cache["v"][glob_slot]}
+            window = None if windows is None else windows[i]
+            h = rmsnorm(lp, "ln_attn", x, cfg.norm_eps)
+            attn_out, upd = attention(
+                lp, "attn", cfg, h, positions, window=window,
+                cache=layer_cache, cache_pos=cache_pos,
+            )
+            if split_cache and is_local:
+                new_cache["k_loc"] = new_cache["k_loc"].at[loc_slot].set(upd["k"])
+                new_cache["v_loc"] = new_cache["v_loc"].at[loc_slot].set(upd["v"])
+                loc_slot += 1
+            else:
+                new_cache["k"] = new_cache["k"].at[glob_slot].set(upd["k"])
+                new_cache["v"] = new_cache["v"].at[glob_slot].set(upd["v"])
+                glob_slot += 1
+            x = x + attn_out
+            h = rmsnorm(lp, "ln_mlp", x, cfg.norm_eps)
+            if cfg.family == "moe":
+                x = x + moe(lp, "moe", cfg, h)
+            else:
+                x = x + mlp(lp, "mlp", h)
+        return x, new_cache
+
+    if cfg.family == "hybrid":
+        stacked = _split_stacked(params, "blocks/")
+        shared = _split_stacked(params, "shared_attn/")
+        every = max(cfg.attn_every, 1)
+        attn_slot = 0
+        for i in range(cfg.n_layers):
+            lp = {k: v[i] for k, v in stacked.items()}
+            h = rmsnorm(lp, "ln", x, cfg.norm_eps)
+            st = {"ssm": cache["ssm"][i], "conv": cache["conv"][i]}
+            out, new_st = mamba2_block(lp, "mamba", cfg, h, state=st)
+            new_cache["ssm"] = new_cache["ssm"].at[i].set(new_st["ssm"])
+            new_cache["conv"] = new_cache["conv"].at[i].set(new_st["conv"])
+            x = x + out
+            if (i % every) == (every - 1):
+                layer_cache = {
+                    "k": cache["attn_k"][attn_slot],
+                    "v": cache["attn_v"][attn_slot],
+                }
+                h = rmsnorm(shared, "ln_attn", x, cfg.norm_eps)
+                attn_out, upd = attention(
+                    shared, "attn", cfg, h, positions,
+                    cache=layer_cache, cache_pos=cache_pos,
+                )
+                new_cache["attn_k"] = new_cache["attn_k"].at[attn_slot].set(upd["k"])
+                new_cache["attn_v"] = new_cache["attn_v"].at[attn_slot].set(upd["v"])
+                x = x + attn_out
+                h = rmsnorm(shared, "ln_mlp", x, cfg.norm_eps)
+                x = x + mlp(shared, "mlp", h)
+                attn_slot += 1
+        return x, new_cache
+
+    if cfg.family == "ssm":
+        stacked = _split_stacked(params, "blocks/")
+        every = max(cfg.xlstm_slstm_every, 1)
+        n_units = cfg.n_layers // every
+        for u in range(n_units):
+            lp = {k: v[u] for k, v in stacked.items()}
+            for i in range(every - 1):
+                h = rmsnorm(lp, f"ln_m{i}", x, cfg.norm_eps)
+                st = (
+                    cache["mlstm_S"][u, i],
+                    cache["mlstm_n"][u, i],
+                    cache["mlstm_m"][u, i],
+                )
+                out, new_st = mlstm_block(lp, f"mlstm{i}", cfg, h, state=st)
+                new_cache["mlstm_S"] = new_cache["mlstm_S"].at[u, i].set(new_st[0])
+                new_cache["mlstm_n"] = new_cache["mlstm_n"].at[u, i].set(new_st[1])
+                new_cache["mlstm_m"] = new_cache["mlstm_m"].at[u, i].set(new_st[2])
+                x = x + out
+            h = rmsnorm(lp, "ln_s", x, cfg.norm_eps)
+            names = ("slstm_c", "slstm_n", "slstm_h", "slstm_m")
+            st = tuple(cache[nm][u] for nm in names)
+            out, new_st = slstm_block(lp, "slstm", cfg, h, state=st)
+            for j, nm in enumerate(names):
+                new_cache[nm] = new_cache[nm].at[u].set(new_st[j])
+            x = x + out
+        return x, new_cache
+
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Abstract cache spec: name -> (shape, dtype, logical_axes, fill)."""
+    dt = cfg.dtype
+    out: dict[str, tuple] = {}
+    kv_axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cfg.alt_local_global and 0 < cfg.sliding_window < max_len:
+            # gemma2: local layers only ever see the last `window` tokens;
+            # give them window-sized ring caches (2x decode-cache saving,
+            # ~128x for long_500k local layers — EXPERIMENTS.md §Perf).
+            n_loc = sum(1 for i in range(cfg.n_layers) if i % 2 == 0)
+            n_glob = cfg.n_layers - n_loc
+            out["k_loc"] = ((n_loc, batch, cfg.sliding_window, cfg.n_kv_heads, cfg.hd),
+                            dt, kv_axes, 0.0)
+            out["v_loc"] = ((n_loc, batch, cfg.sliding_window, cfg.n_kv_heads, cfg.hd),
+                            dt, kv_axes, 0.0)
+            shape = (n_glob, batch, max_len, cfg.n_kv_heads, cfg.hd)
+            out["k"] = (shape, dt, kv_axes, 0.0)
+            out["v"] = (shape, dt, kv_axes, 0.0)
+            return out
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        out["k"] = (shape, dt, kv_axes, 0.0)
+        out["v"] = (shape, dt, kv_axes, 0.0)
+    elif cfg.family == "hybrid":
+        ssm = mamba2_state_shapes(cfg, batch)
+        L = cfg.n_layers
+        out["ssm"] = ((L,) + ssm["ssm"], "float32",
+                      ("layers", "batch", "ssm_heads", "ssm_state", None), 0.0)
+        out["conv"] = ((L,) + ssm["conv"], dt,
+                       ("layers", "batch", None, "ssm_inner"), 0.0)
+        n_attn = cfg.n_layers // max(cfg.attn_every, 1)
+        shape = (n_attn, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        out["attn_k"] = (shape, dt, kv_axes, 0.0)
+        out["attn_v"] = (shape, dt, kv_axes, 0.0)
+    elif cfg.family == "ssm":
+        every = max(cfg.xlstm_slstm_every, 1)
+        n_units = cfg.n_layers // every
+        m = mlstm_state_shapes(cfg, batch)
+        out["mlstm_S"] = ((n_units, every - 1) + m["S"], "float32",
+                          ("layers", None, "batch", "xlstm_heads", None, None), 0.0)
+        out["mlstm_n"] = ((n_units, every - 1) + m["n"], "float32",
+                          ("layers", None, "batch", "xlstm_heads", None), 0.0)
+        # stabilizer must start at -inf to match the chunked-train scan init
+        out["mlstm_m"] = ((n_units, every - 1) + m["m"], "float32",
+                          ("layers", None, "batch", "xlstm_heads"), -jnp.inf)
+        s = slstm_state_shapes(cfg, batch)[0]
+        for nm in ("slstm_c", "slstm_n", "slstm_h", "slstm_m"):
+            out[nm] = ((n_units,) + s, "float32",
+                       ("layers", "batch", "xlstm_heads", None), 0.0)
+    return out

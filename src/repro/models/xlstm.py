@@ -1,0 +1,255 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked
+parallel form) and sLSTM (scalar memory, sequential scan).
+
+The chunked mLSTM below is the pure-jnp oracle for the ``mlstm_scan``
+Pallas kernel.  Shapes: B batch, S seq, H heads, K=V head dims, Q chunk.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from .common import ModelConfig, ParamBuilder
+
+
+# ---------------------------------------------------------------------------
+# Chunked, stabilized mLSTM (exp input gate, sigmoid forget gate)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int):
+    """Chunk-parallel stabilized mLSTM.
+
+    q,k,v:  (B, S, H, D)
+    i_gate: (B, S, H) raw input-gate preactivation  (exp gating)
+    f_gate: (B, S, H) raw forget-gate preactivation (log-sigmoid decay)
+    Returns: h (B, S, H, D), final (S_state (B,H,D,D), n (B,H,D), m (B,H)).
+    """
+    B, S, H, D = q.shape
+    Q = chunk
+    assert S % Q == 0
+    nc = S // Q
+    f32 = jnp.float32
+
+    qq = q.reshape(B, nc, Q, H, D).astype(f32) / math.sqrt(D)
+    kk = k.reshape(B, nc, Q, H, D).astype(f32)
+    vv = v.reshape(B, nc, Q, H, D).astype(f32)
+    ig = i_gate.reshape(B, nc, Q, H).astype(f32)
+    logf = jax.nn.log_sigmoid(f_gate.reshape(B, nc, Q, H).astype(f32))
+
+    b = jnp.cumsum(logf, axis=2)                        # (B,nc,Q,H) incl. own f
+    total = b[:, :, -1, :]                              # (B,nc,H)
+
+    # intra-chunk log weights: l_{ij} = b_i - b_j + i_j  (j <= i)
+    diff = b[:, :, :, None, :] - b[:, :, None, :, :] + ig[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    diff = jnp.where(mask, diff, -jnp.inf)
+    m_intra = jnp.max(diff, axis=3)                     # (B,nc,Q,H)
+
+    # state contribution log weights to chunk end: w_j = total - b_j + i_j
+    w = total[:, :, None, :] - b + ig                   # (B,nc,Q,H)
+    m_chunk = jnp.max(w, axis=2)                        # (B,nc,H)
+
+    def step(carry, inp):
+        S_p, n_p, m_p = carry                           # (B,H,D,D),(B,H,D),(B,H)
+        kc, vc, wc, mc, tot = inp
+        m_new = jnp.maximum(m_p + tot, mc)              # (B,H)
+        scale_old = jnp.exp(m_p + tot - m_new)
+        wts = jnp.exp(wc - m_new[:, None, :])           # (B,Q,H)
+        S_new = S_p * scale_old[:, :, None, None] + jnp.einsum(
+            "bqh,bqhk,bqhv->bhkv", wts, kc, vc
+        )
+        n_new = n_p * scale_old[:, :, None] + jnp.einsum("bqh,bqhk->bhk", wts, kc)
+        return (S_new, n_new, m_new), (S_p, n_p, m_p)
+
+    init = (
+        jnp.zeros((B, H, D, D), f32),
+        jnp.zeros((B, H, D), f32),
+        jnp.full((B, H), -jnp.inf, f32),
+    )
+    xs = (
+        jnp.moveaxis(kk, 1, 0),
+        jnp.moveaxis(vv, 1, 0),
+        jnp.moveaxis(w, 1, 0),
+        jnp.moveaxis(m_chunk, 1, 0),
+        jnp.moveaxis(total, 1, 0),
+    )
+    (S_f, n_f, m_f), (S_prev, n_prev, m_prev) = jax.lax.scan(step, init, xs)
+    S_prev = jnp.moveaxis(S_prev, 0, 1)                 # (B,nc,H,D,D)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)                 # (B,nc,H,D)
+    m_prev = jnp.moveaxis(m_prev, 0, 1)                 # (B,nc,H)
+
+    # per-position stabilizer: inter weight is m_prev + b_i
+    m_i = jnp.maximum(m_prev[:, :, None, :] + b, m_intra)   # (B,nc,Q,H)
+    inter_scale = jnp.exp(m_prev[:, :, None, :] + b - m_i)  # (B,nc,Q,H)
+    num_inter = jnp.einsum("bcqhk,bchkv->bcqhv", qq, S_prev) * inter_scale[..., None]
+    den_inter = jnp.einsum("bcqhk,bchk->bcqh", qq, n_prev) * inter_scale
+
+    intra_w = jnp.exp(diff - m_i[:, :, :, None, :])         # (B,nc,Q,Q,H)
+    qk = jnp.einsum("bcihk,bcjhk->bcijh", qq, kk)
+    num_intra = jnp.einsum("bcijh,bcijh,bcjhv->bcihv", qk, intra_w, vv)
+    den_intra = jnp.einsum("bcijh,bcijh->bcih", qk, intra_w)
+
+    num = num_inter + num_intra
+    den = den_inter + den_intra
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+    return h.reshape(B, S, H, D).astype(q.dtype), (S_f, n_f, m_f)
+
+
+def mlstm_decode_step(state, q, k, v, i_gate, f_gate):
+    """One decode step.  state: (S (B,H,D,D), n (B,H,D), m (B,H));
+    q,k,v (B,H,D); gates (B,H)."""
+    f32 = jnp.float32
+    S_p, n_p, m_p = state
+    qf = q.astype(f32) / math.sqrt(q.shape[-1])
+    logf = jax.nn.log_sigmoid(f_gate.astype(f32))
+    ig = i_gate.astype(f32)
+    m_new = jnp.maximum(logf + m_p, ig)
+    scale_old = jnp.exp(logf + m_p - m_new)
+    wt = jnp.exp(ig - m_new)
+    S_new = S_p * scale_old[:, :, None, None] + wt[:, :, None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(f32), v.astype(f32)
+    )
+    n_new = n_p * scale_old[:, :, None] + wt[:, :, None] * k.astype(f32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, S_new)
+    den = jnp.einsum("bhk,bhk->bh", qf, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (S_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d = cfg.d_model
+    dp = int(cfg.xlstm_proj_factor * d)
+    b.add(f"{name}/up", (d, 2 * dp), ("embed", "xlstm_inner"))
+    b.add(f"{name}/wq", (dp, dp), ("xlstm_inner", "xlstm_heads"))
+    b.add(f"{name}/wk", (dp, dp), ("xlstm_inner", "xlstm_heads"))
+    b.add(f"{name}/wv", (dp, dp), ("xlstm_inner", "xlstm_heads"))
+    b.add(f"{name}/w_if", (dp, 2 * cfg.n_heads), ("xlstm_inner", "xlstm_heads"))
+    b.add(f"{name}/out_scale", (dp,), ("xlstm_inner",), init="ones")
+    b.add(f"{name}/down", (dp, d), ("xlstm_inner", "embed"))
+
+
+def mlstm_block(params, name: str, cfg: ModelConfig, x, state=None):
+    """x (B,S,d) -> (y (B,S,d), new_state)."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    dp = int(cfg.xlstm_proj_factor * d)
+    H = cfg.n_heads
+    D = dp // H
+
+    up = jnp.einsum("bsd,dk->bsk", x, params[f"{name}/up"].astype(dt_))
+    xm, z = jnp.split(up, 2, axis=-1)
+    xm = constrain(xm, ("batch", "seq", "xlstm_inner"))
+    q = jnp.einsum("bsk,kj->bsj", xm, params[f"{name}/wq"].astype(dt_)).reshape(B, S, H, D)
+    k = jnp.einsum("bsk,kj->bsj", xm, params[f"{name}/wk"].astype(dt_)).reshape(B, S, H, D)
+    v = jnp.einsum("bsk,kj->bsj", xm, params[f"{name}/wv"].astype(dt_)).reshape(B, S, H, D)
+    gates = jnp.einsum("bsk,kj->bsj", xm, params[f"{name}/w_if"].astype(dt_))
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)       # (B,S,H) each
+
+    if state is None:
+        h, _ = mlstm_chunked(q, k, v, i_gate, f_gate, cfg.xlstm_chunk)
+        new_state = None
+    else:
+        h1, new_state = mlstm_decode_step(
+            state, q[:, 0], k[:, 0], v[:, 0], i_gate[:, 0], f_gate[:, 0]
+        )
+        h = h1[:, None]
+    h = h.reshape(B, S, dp)
+    h = h * jax.nn.silu(z)
+    h = h * params[f"{name}/out_scale"].astype(dt_)
+    h = constrain(h, ("batch", "seq", "xlstm_inner"))
+    y = jnp.einsum("bsk,kd->bsd", h, params[f"{name}/down"].astype(dt_))
+    return constrain(y, ("batch", "seq", "embed")), new_state
+
+
+def mlstm_state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    D = dp // H
+    return {"S": (batch, H, D, D), "n": (batch, H, D), "m": (batch, H)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scalar recurrence with block-diagonal R)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(b: ParamBuilder, name: str, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    b.add(f"{name}/w_in", (d, 4 * d), ("embed", "xlstm_inner"))
+    b.add(f"{name}/r", (4, H, dh, dh), (None, "xlstm_heads", None, None),
+          scale=1.0 / math.sqrt(dh))
+    b.add(f"{name}/bias", (4 * d,), ("xlstm_inner",), init="zeros")
+    ff = max(int(4 * d / 3), 1)
+    b.add(f"{name}/ff_gate", (d, ff), ("embed", "mlp"))
+    b.add(f"{name}/ff_up", (d, ff), ("embed", "mlp"))
+    b.add(f"{name}/ff_down", (ff, d), ("mlp", "embed"))
+
+
+def slstm_block(params, name: str, cfg: ModelConfig, x, state=None):
+    """sLSTM with exp gating + stabilizer state (B,S,d); lax.scan over S."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    H = cfg.n_heads
+    dh = d // H
+    f32 = jnp.float32
+
+    pre = jnp.einsum("bsd,dk->bsk", x, params[f"{name}/w_in"].astype(dt_))
+    pre = pre + params[f"{name}/bias"].astype(dt_)
+    pre = pre.reshape(B, S, 4, H, dh).astype(f32)
+    R = params[f"{name}/r"].astype(f32)                  # (4,H,dh,dh)
+
+    if state is None:
+        c0 = jnp.zeros((B, H, dh), f32)
+        n0 = jnp.zeros((B, H, dh), f32)
+        h0 = jnp.zeros((B, H, dh), f32)
+        m0 = jnp.zeros((B, H, dh), f32)
+    else:
+        c0, n0, h0, m0 = state
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhj,ghjk->bghk", h, R)         # (B,4,H,dh)
+        zt = jnp.tanh(pre_t[:, 0] + rec[:, 0])
+        it = pre_t[:, 1] + rec[:, 1]
+        ft = pre_t[:, 2] + rec[:, 2]
+        ot = jax.nn.sigmoid(pre_t[:, 3] + rec[:, 3])
+        m_new = jnp.maximum(ft + m, it)                  # stabilizer
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c_new = f_p * c + i_p * zt
+        n_new = f_p * n + i_p
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (cf, nf, hf, mf), hs = jax.lax.scan(
+        step, (c0, n0, h0, m0), jnp.moveaxis(pre, 1, 0)
+    )
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(dt_)
+
+    # post-recurrence gated FFN (proj factor 4/3, per the paper's sLSTM block)
+    gate = jnp.einsum("bsd,df->bsf", y, params[f"{name}/ff_gate"].astype(dt_))
+    upv = jnp.einsum("bsd,df->bsf", y, params[f"{name}/ff_up"].astype(dt_))
+    hmid = jax.nn.gelu(gate) * upv
+    hmid = constrain(hmid, ("batch", "seq", "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", hmid, params[f"{name}/ff_down"].astype(dt_))
+    new_state = (cf, nf, hf, mf) if state is not None else None
+    return constrain(out, ("batch", "seq", "embed")), new_state
+
+
+def slstm_state_shapes(cfg: ModelConfig, batch: int) -> tuple:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    s = (batch, H, dh)
+    return (s, s, s, s)

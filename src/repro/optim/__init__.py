@@ -1,0 +1,12 @@
+"""Pure-JAX optimizers (no optax dependency)."""
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm
+from .schedule import cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "global_norm",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,65 @@
+"""AdamW with global-norm clipping, as a pair of pure functions.
+
+State layout mirrors the param pytree (one ``mu``/``nu`` per leaf), so it
+reshards with the exact same PartitionSpecs as the params — which is what
+the elastic runtime's redistribution stage relies on.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: jax.Array | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+) -> tuple[Any, AdamWState]:
+    """One AdamW step; returns (new_params, new_state)."""
+    step = state.step + 1
+    if clip_norm is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+    # bias correction
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def leaf_update(p, m, v):
+        update = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p
+        return (p - lr * update).astype(p.dtype)
+
+    new_params = jax.tree.map(leaf_update, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,74 @@
+"""Gradient compression for cross-pod reduction (distributed-opt trick).
+
+int8 block-quantization with error feedback: gradients are quantized
+before the (slow, cross-pod) all-reduce and the quantization residual is
+carried into the next step, preserving convergence (1-bit Adam lineage).
+4x reduction of DCN/ICI gradient bytes on the 'pod' axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any  # residual feedback pytree (same structure as grads)
+
+
+def compression_init(grads_like: Any) -> CompressionState:
+    return CompressionState(error=jax.tree.map(jnp.zeros_like, grads_like))
+
+
+def quantize_int8(x: jax.Array, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization; returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    out = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return out[:n].reshape(shape).astype(dtype)
+
+
+def compress_grads(
+    grads: Any, state: CompressionState, block: int = 256
+) -> tuple[Any, CompressionState]:
+    """Quantize grads (+error feedback); returns (dequantized grads that
+    would come out of the compressed all-reduce, new state).
+
+    In a real deployment the int8 payload is what crosses the pod axis;
+    here we model the numerics end-to-end so training tests can assert
+    convergence is preserved.
+    """
+    def one(g, e):
+        g_fb = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, s = quantize_int8(g_fb, block)
+        deq = dequantize_int8(q, s, g.shape, jnp.float32)
+        new_err = (g_fb - deq).astype(e.dtype)
+        return deq.astype(g.dtype), new_err
+
+    pairs = jax.tree.map(one, grads, state.error)
+    deq = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, CompressionState(error=err)
+
+
+def compressed_bytes(grads: Any, block: int = 256) -> tuple[int, int]:
+    """(raw_bytes, compressed_bytes) for reporting."""
+    raw = comp = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        raw += n * g.dtype.itemsize
+        nblocks = -(-n // block)
+        comp += n * 1 + nblocks * 4  # int8 payload + fp32 scales
+    return raw, comp

@@ -1,0 +1,23 @@
+"""Learning-rate schedules as plain callables (jit-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * (min_frac + (1 - min_frac) * cos)
+
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int, min_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), min_frac)
+
+    def lr(step):
+        warm = base_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return lr

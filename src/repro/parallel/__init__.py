@@ -1,0 +1,20 @@
+"""Distribution layer: logical-axis sharding rules over pjit meshes."""
+from .sharding import (
+    ShardingContext,
+    constrain,
+    current_context,
+    param_sharding,
+    param_sharding_abstract,
+    resolve_spec,
+    use_sharding,
+)
+
+__all__ = [
+    "ShardingContext",
+    "constrain",
+    "current_context",
+    "param_sharding",
+    "param_sharding_abstract",
+    "resolve_spec",
+    "use_sharding",
+]

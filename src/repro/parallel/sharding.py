@@ -1,0 +1,260 @@
+"""Logical-axis sharding (MaxText-style rules), mesh-agnostic model code.
+
+Params and activations are annotated with *logical* axis names; a rule
+table maps them to mesh axes.  Resolution is shape-aware:
+
+  * a mesh axis is dropped when the dimension is smaller than the shard
+    count (XLA rejects that); *uneven* sharding (dim >= shards but not
+    divisible) is allowed — GSPMD pads internally (e.g. yi-34b's 56 heads
+    over a 16-way model axis);
+  * rule entries may be tuples — axes are applied greedily left to right.
+
+Two rule tables exist because the same logical name means different
+things on weights vs activations ("embed" is the FSDP dim of a weight but
+the replicated feature dim of an activation).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Weights: TP over 'model' on the obvious dims, ZeRO-3/FSDP over 'data' on
+# the embed dim.  'layers' is the scan axis and never sharded.
+WEIGHT_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",      # dropped automatically when kv < |model|
+    "q_per_kv": None,
+    "head_dim": None,
+    "embed": "data",
+    "embed_out": "data",
+    "experts": "model",
+    "layers": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    "xlstm_inner": "model",
+    "xlstm_heads": "model",
+    "gate": None,
+}
+
+# Activations, per execution shape.  'train': batch-parallel over
+# (pod, data); 'decode': batch over (pod, data) + KV cache sequence over
+# 'model' (context parallelism); 'long': batch too small to shard, the
+# sequence/KV dims carry all parallelism.
+ACT_RULES: dict[str, dict[str, Any]] = {
+    "train": {
+        "batch": ("pod", "data"),
+        "exp_capacity": ("pod", "data"),
+        "seq": None,
+        "residual_seq": "model",   # Megatron-style sequence parallelism
+        "kv_seq": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "q_per_kv": None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "xlstm_inner": "model",
+        "xlstm_heads": "model",
+    },
+    "decode": {
+        "batch": ("pod", "data"),
+        "exp_capacity": ("pod", "data"),
+        "seq": None,
+        "residual_seq": None,
+        "kv_seq": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,
+        "q_per_kv": None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "xlstm_inner": "model",
+        "xlstm_heads": "model",
+    },
+    "long": {
+        "batch": None,
+        "exp_capacity": ("pod", "data"),
+        "seq": ("pod", "data"),
+        "residual_seq": ("pod", "data"),
+        "kv_seq": ("pod", "data", "model"),
+        "embed": None,
+        "heads": "model",
+        "kv_heads": None,
+        "q_per_kv": None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "xlstm_inner": "model",
+        "xlstm_heads": "model",
+    },
+}
+
+
+@dataclass
+class ShardingContext:
+    mesh: Mesh
+    mode: str = "train"                       # key into ACT_RULES
+    weight_overrides: dict[str, Any] = field(default_factory=dict)
+    act_overrides: dict[str, Any] = field(default_factory=dict)
+
+    def weight_rule(self, name: str):
+        if name in self.weight_overrides:
+            return self.weight_overrides[name]
+        return WEIGHT_RULES.get(name)
+
+    def act_rule(self, name: str):
+        if name in self.act_overrides:
+            return self.act_overrides[name]
+        return ACT_RULES[self.mode].get(name)
+
+
+_LOCAL = threading.local()
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_LOCAL, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingContext]):
+    prev = current_context()
+    _LOCAL.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _LOCAL.ctx = prev
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fit_axes(
+    rule: Any, dim: int, mesh: Mesh, taken: set[str], divisible: bool
+) -> tuple[str, ...]:
+    """Greedy left-to-right selection of mesh axes for one dimension.
+
+    ``divisible=True`` for weights: jit *argument* shardings reject uneven
+    dims (e.g. yi-34b's 56 heads over 16).  Activations only need
+    ``dim >= shards`` — with_sharding_constraint pads internally.
+    """
+    if rule is None:
+        return ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    sizes = _mesh_axis_sizes(mesh)
+    out: list[str] = []
+    shards = 1
+    for ax in axes:
+        if ax not in sizes or ax in taken:
+            continue
+        nxt = shards * sizes[ax]
+        ok = (dim % nxt == 0) if divisible else (dim >= nxt)
+        if ok:
+            out.append(ax)
+            shards = nxt
+            taken.add(ax)
+    return tuple(out)
+
+
+def resolve_spec(
+    logical_axes: tuple, shape: tuple[int, ...], ctx: ShardingContext, kind: str
+) -> P:
+    """Map logical axes -> PartitionSpec for a tensor of ``shape``."""
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    taken: set[str] = set()
+    entries: list = []
+    rule_fn = ctx.weight_rule if kind == "weight" else ctx.act_rule
+    divisible = kind == "weight"
+    for name, dim in zip(logical_axes, shape):
+        rule = None if name is None else rule_fn(name)
+        axes = _fit_axes(rule, dim, ctx.mesh, taken, divisible)
+        entries.append(list(axes))
+    if divisible:
+        # Fallback pass: keep weights fully sharded even when the natural
+        # dim doesn't divide (yi's 56 heads, GQA kv<TP, ...): place unused
+        # mesh axes on the largest remaining divisible dim.  This is a
+        # *storage* sharding (ZeRO-style); compute layout is re-propagated
+        # by GSPMD from the activation constraints.
+        sizes = _mesh_axis_sizes(ctx.mesh)
+        for ax in ("model", "data", "pod"):
+            if ax not in sizes or ax in taken:
+                continue
+            cands = [
+                (shape[i], i)
+                for i in range(len(shape))
+                if logical_axes[i] != "layers"
+                and shape[i] % (sizes[ax] * _prod(sizes[a] for a in entries[i])) == 0
+            ]
+            if not cands:
+                continue
+            _, best = max(cands)
+            entries[best].append(ax)
+            taken.add(ax)
+    return P(*[tuple(e) if len(e) > 1 else (e[0] if e else None) for e in entries])
+
+
+def _prod(it) -> int:
+    out = 1
+    for v in it:
+        out *= v
+    return out
+
+
+def param_sharding(params: dict, specs: dict, ctx: ShardingContext) -> dict:
+    """NamedSharding dict for a flat (params, logical-spec) pair."""
+    return {
+        k: NamedSharding(ctx.mesh, resolve_spec(tuple(specs[k]), p.shape, ctx, "weight"))
+        for k, p in params.items()
+    }
+
+
+def param_sharding_abstract(shapes: dict, specs: dict, ctx: ShardingContext) -> dict:
+    """Same as :func:`param_sharding` but from ShapeDtypeStructs."""
+    return {
+        k: NamedSharding(ctx.mesh, resolve_spec(tuple(specs[k]), s.shape, ctx, "weight"))
+        for k, s in shapes.items()
+    }
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside a context."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = resolve_spec(tuple(logical_axes), x.shape, ctx, "act")
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,8 @@
+"""Step builders: sharded train_step / serve_step factories."""
+from .steps import (
+    build_serve_step,
+    build_train_step,
+    train_state_shardings,
+)
+
+__all__ = ["build_serve_step", "build_train_step", "train_state_shardings"]

@@ -1,0 +1,131 @@
+"""Sharded step builders.
+
+``build_train_step`` returns a jit-able ``step(state, batch) -> (state,
+metrics)`` plus the in/out shardings derived from the logical rules —
+both for live execution and for the ``.lower().compile()`` dry-run.
+``build_serve_step`` does the same for one decode step over a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.data.pipeline import batch_spec
+from repro.models import Model
+from repro.models.common import ModelConfig
+from repro.models.transformer import init_cache_shapes
+from repro.optim import AdamWState, adamw_init, adamw_update
+from repro.parallel.sharding import (
+    ShardingContext,
+    param_sharding_abstract,
+    resolve_spec,
+    use_sharding,
+)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jax.Array
+
+
+def train_state_shardings(
+    model: Model, ctx: ShardingContext
+) -> tuple[TrainState, TrainState]:
+    """(abstract_state, sharding_tree) for the model under ``ctx``."""
+    shapes, specs = model.abstract_params()
+    p_shard = param_sharding_abstract(shapes, specs, ctx)
+    scalar = NamedSharding(ctx.mesh, P())
+    opt_shapes = AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=shapes, nu=shapes
+    )
+    opt_shard = AdamWState(step=scalar, mu=dict(p_shard), nu=dict(p_shard))
+    abstract = TrainState(
+        params=shapes, opt=opt_shapes, step=jax.ShapeDtypeStruct((), jnp.int32)
+    )
+    shardings = TrainState(params=p_shard, opt=opt_shard, step=scalar)
+    return abstract, shardings
+
+
+def batch_shardings(cfg: ModelConfig, ctx: ShardingContext, batch: int, seq: int) -> dict:
+    names, spec_for = batch_spec(cfg, ctx)
+    out = {}
+    for name, ndim in names.items():
+        if name == "positions":
+            shape = (3, batch, seq)
+        elif name == "embeds":
+            shape = (batch, seq, cfg.d_model)
+        else:
+            shape = (batch, seq)
+        axes = spec_for(name, ndim)
+        out[name] = NamedSharding(ctx.mesh, resolve_spec(tuple(axes), shape, ctx, "act"))
+    return out
+
+
+def build_train_step(model: Model, ctx: ShardingContext, lr: float = 3e-4):
+    """Returns (train_step_fn, state_shardings, abstract_state)."""
+    cfg = model.cfg
+
+    def train_step(state: TrainState, batch: dict):
+        with use_sharding(ctx):
+            loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+            params, opt = adamw_update(grads, state.opt, state.params, lr)
+        metrics = {"loss": loss, "step": state.step + 1}
+        return TrainState(params=params, opt=opt, step=state.step + 1), metrics
+
+    abstract, shardings = train_state_shardings(model, ctx)
+    return train_step, shardings, abstract
+
+
+def build_init_fn(model: Model, ctx: ShardingContext):
+    """Sharded-init: params materialize directly on the mesh."""
+    _, shardings = train_state_shardings(model, ctx)
+
+    def init_fn(key) -> TrainState:
+        params, _ = model.init(key)
+        opt = adamw_init(params)
+        return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+    return jax.jit(init_fn, out_shardings=shardings), shardings
+
+
+def cache_shardings(model: Model, ctx: ShardingContext, batch: int, max_len: int) -> dict:
+    shapes = init_cache_shapes(model.cfg, batch, max_len)
+    return {
+        name: NamedSharding(ctx.mesh, resolve_spec(tuple(axes), shape, ctx, "act"))
+        for name, (shape, _dt, axes, _f) in shapes.items()
+    }
+
+
+def abstract_cache(model: Model, batch: int, max_len: int) -> dict:
+    shapes = init_cache_shapes(model.cfg, batch, max_len)
+    return {
+        name: jax.ShapeDtypeStruct(shape, jnp.dtype(dt))
+        for name, (shape, dt, _axes, _f) in shapes.items()
+    }
+
+
+def build_serve_step(model: Model, ctx: ShardingContext):
+    """One-token decode step: (params, cache, tok_batch) -> (logits, cache)."""
+
+    def serve_step(params: dict, cache: dict, tok: dict):
+        with use_sharding(ctx):
+            return model.decode_step(params, cache, tok)
+
+    return serve_step
+
+
+def serving_param_shapes(model: Model) -> tuple[dict, dict]:
+    """Abstract params cast to the compute dtype (inference keeps no
+    fp32 master copy)."""
+    shapes, specs = model.abstract_params()
+    dt = model.cfg.compute_dtype
+    cast = {
+        k: jax.ShapeDtypeStruct(s.shape, dt if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype)
+        for k, s in shapes.items()
+    }
+    return cast, specs

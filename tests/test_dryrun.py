@@ -1,0 +1,95 @@
+"""Dry-run machinery tests: HLO analysis unit tests + one real cell as a
+subprocess (slow)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.hlo_analysis import analyze, split_computations
+
+SAMPLE_HLO = """\
+HloModule test
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %gte0 = s32[] get-tuple-element(%arg), index=0
+  %gte1 = f32[8,16] get-tuple-element(%arg), index=1
+  %w = f32[16,16] constant({...})
+  %dot.1 = f32[8,16] dot(%gte1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%dot.1), to_apply=%add.1
+  ROOT %tup = (s32[], f32[8,16]) tuple(%gte0, %ar)
+}
+
+%cond.1 (arg: (s32[], f32[8,16])) -> pred[] {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %gte = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+%add.1 (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %a = f32[] add(%x, %y)
+}
+
+ENTRY %main.1 (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16] parameter(0)
+  %init = (s32[], f32[8,16]) tuple(s32[] constant(0), %p0)
+  %loop = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,16] get-tuple-element(%loop), index=1
+}
+"""
+
+
+class TestHloAnalysis:
+    def test_split_finds_all_computations(self):
+        comps = split_computations(SAMPLE_HLO)
+        assert {"body.1", "cond.1", "add.1", "main.1"} <= set(comps)
+
+    def test_while_trip_count_scales_body(self):
+        r = analyze(SAMPLE_HLO)
+        # dot: 2 * 8*16 * 16 = 4096 flops, x12 trips
+        assert r["flops"] == pytest.approx(4096 * 12)
+        # all-reduce: 8*16*4 bytes * 2 (ring) * 12 trips
+        assert r["collectives"]["per_kind"]["all-reduce"] == 8 * 16 * 4 * 2 * 12
+        assert r["collectives"]["counts"]["all-reduce"] == 12
+
+    def test_no_collectives_outside_loop(self):
+        r = analyze(SAMPLE_HLO)
+        assert r["collectives"]["per_kind"]["all-gather"] == 0
+
+
+class TestSkipPolicy:
+    def test_long_500k_skip_records(self):
+        from repro.configs import SHAPES, shape_skip_reason
+
+        long = next(s for s in SHAPES if s.name == "long_500k")
+        assert shape_skip_reason("yi_34b", long) is not None
+        assert shape_skip_reason("zamba2_1p2b", long) is None
+        assert shape_skip_reason("gemma2_9b", long) is None
+        assert shape_skip_reason("xlstm_125m", long) is None
+
+
+@pytest.mark.slow
+class TestDryRunCell:
+    def test_one_cell_compiles_multi_pod(self):
+        """xlstm train_4k on the 2x16x16 mesh must lower+compile and emit
+        a well-formed record (the multi-pod dry-run deliverable)."""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        out = "/tmp/test_dryrun_cell.json"
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "xlstm_125m", "--shape", "train_4k",
+             "--mesh", "multi", "--out", out],
+            capture_output=True, text=True, timeout=1800, env=env,
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        rec = json.load(open(out))
+        assert rec["status"] == "ok"
+        assert rec["n_chips"] == 512
+        assert rec["per_device"]["flops"] > 0
+        assert rec["collectives"]["total_bytes"] > 0

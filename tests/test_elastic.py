@@ -1,0 +1,99 @@
+"""Elastic runtime tests: bookkeeping in-process, live resizing via
+subprocess (the main test process must keep seeing 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import Method, ShrinkKind, Strategy
+from repro.elastic import DevicePool, ElasticRuntime
+
+
+def make_runtime(n_free=8):
+    devs = [object() for _ in range(n_free)]  # bookkeeping-only fake devices
+    pool = DevicePool(devices=devs, devices_per_node=1)
+    return ElasticRuntime(pool=pool, initial_nodes=1)
+
+
+class TestRuntimeBookkeeping:
+    def test_expand_creates_node_confined_groups(self):
+        rt = make_runtime()
+        rec = rt.expand(5)
+        assert rec.nodes_after == 5
+        assert rec.mechanism == "hypercube"
+        # every world spans exactly one node (the TS invariant)
+        for w in rt.state.worlds.values():
+            assert len(w.nodes) == 1
+
+    def test_shrink_returns_devices_to_pool(self):
+        rt = make_runtime()
+        rt.expand(6)
+        free_before = len(rt.pool.free)
+        rec = rt.shrink(4)
+        assert rec.mechanism == ShrinkKind.TS.value
+        assert len(rec.nodes_returned) == 4
+        assert len(rt.pool.free) == free_before + 4
+        assert rt.n_nodes == 2
+
+    def test_expand_after_shrink_reuses_nodes(self):
+        rt = make_runtime()
+        rt.expand(8)
+        rt.shrink(6)
+        rec = rt.expand(5)
+        assert rec.nodes_after == 5
+
+    def test_fail_node_is_forced_ts(self):
+        rt = make_runtime()
+        rt.expand(4)
+        victim = sorted(rt.state.nodes_in_use())[-1]
+        rec = rt.fail_node(victim)
+        assert rec.kind == "fail"
+        assert victim in rec.nodes_returned
+        assert victim not in rt.state.nodes_in_use()
+
+    def test_straggler_mitigation(self):
+        rt = make_runtime()
+        rt.expand(4)
+        victim = sorted(rt.state.nodes_in_use())[1]
+        rec = rt.drop_straggler(victim)
+        assert rec.kind == "straggler"
+        assert rt.n_nodes == 3
+
+    def test_pool_exhaustion_raises(self):
+        rt = make_runtime(n_free=4)
+        with pytest.raises(RuntimeError):
+            rt.expand(16)
+
+    def test_shrink_cost_is_sub_millisecond_expand_is_not(self):
+        rt = make_runtime()
+        e = rt.expand(8)
+        s = rt.shrink(6)
+        assert s.est_wall_s < 1e-3 < e.est_wall_s
+
+    def test_diffusive_strategy(self):
+        rt = ElasticRuntime(
+            pool=DevicePool(devices=[object()] * 8, devices_per_node=1),
+            strategy=Strategy.PARALLEL_DIFFUSIVE,
+            initial_nodes=1,
+        )
+        rec = rt.expand(6)
+        assert rec.mechanism == "diffusive"
+        assert rt.n_nodes == 6
+
+
+@pytest.mark.slow
+class TestLiveElastic:
+    def test_elastic_train_example_end_to_end(self):
+        """Run the full elastic training demo (8 host devices) and assert
+        its internal loss-continuity checks pass."""
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = "src"
+        proc = subprocess.run(
+            [sys.executable, "examples/elastic_train.py"],
+            capture_output=True, text=True, timeout=1200, env=env,
+        )
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        assert "loss continuous across 4 resizes" in proc.stdout
+        assert "termination_shrinkage" in proc.stdout

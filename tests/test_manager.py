@@ -1,0 +1,66 @@
+"""MalleabilityManager facade + RMS event plumbing tests."""
+import pytest
+
+from repro.core import (
+    MalleabilityManager,
+    Method,
+    Strategy,
+    binary_connection_schedule,
+)
+from repro.elastic.rms import Event, EventKind, SimulatedRMS
+
+
+class TestManager:
+    def test_expand_plan_carries_all_stages(self):
+        mgr = MalleabilityManager(method=Method.MERGE,
+                                  strategy=Strategy.PARALLEL_HYPERCUBE)
+        plan = mgr.plan_expand(ns=4, nt=16, cores=4)
+        assert plan.kind == "expand"
+        assert plan.spawn is not None and len(plan.spawn.groups) == 3
+        assert plan.sync_graph is not None
+        assert plan.connect_rounds == len(binary_connection_schedule(3))
+        # stage 3: final layout covers the whole target world
+        assert len(plan.redistribution.layout) == 16
+
+    def test_hypercube_rejects_heterogeneous(self):
+        mgr = MalleabilityManager(strategy=Strategy.PARALLEL_HYPERCUBE)
+        with pytest.raises(ValueError):
+            mgr.plan_expand(ns=4, nt=10, cores=[4, 2, 4])
+
+    def test_diffusive_accepts_heterogeneous(self):
+        mgr = MalleabilityManager(strategy=Strategy.PARALLEL_DIFFUSIVE)
+        plan = mgr.plan_expand(ns=4, nt=10, cores=[4, 2, 4])
+        assert plan.spawn.strategy is Strategy.PARALLEL_DIFFUSIVE
+        assert sum(plan.spawn.group_sizes) == 6
+
+    def test_sequential_strategies_have_no_sync_graph(self):
+        for strat in (Strategy.SEQUENTIAL, Strategy.SINGLE,
+                      Strategy.SEQUENTIAL_PER_NODE):
+            mgr = MalleabilityManager(strategy=strat)
+            plan = mgr.plan_expand(ns=4, nt=12, cores=4)
+            assert plan.sync_graph is None
+            assert plan.connect_rounds == 0
+
+    def test_classic_merge_world_blocks_ts(self):
+        """The defining contrast: one sequential spawn -> a multi-node
+        world; parallel spawn -> node-confined groups."""
+        seq = MalleabilityManager(strategy=Strategy.SEQUENTIAL).plan_expand(4, 16, 4)
+        par = MalleabilityManager(strategy=Strategy.PARALLEL_HYPERCUBE).plan_expand(4, 16, 4)
+        assert len(seq.spawn.groups[0].nodes_spanned()) == 3
+        assert all(len(g.nodes_spanned()) == 1 for g in par.spawn.groups)
+
+
+class TestRMS:
+    def test_scripted_events_fire_once_in_order(self):
+        rms = SimulatedRMS.scripted([
+            (5, EventKind.GROW, 8),
+            (10, EventKind.SHRINK, (6, 7)),
+            (15, EventKind.FAIL, 3),
+        ])
+        assert list(rms.events_until(4)) == []
+        evs = list(rms.events_until(10))
+        assert [e.kind for e in evs] == [EventKind.GROW, EventKind.SHRINK]
+        assert evs[0].target_nodes == 8
+        assert evs[1].nodes == (6, 7)
+        assert list(rms.events_until(10)) == []          # consumed
+        assert [e.kind for e in rms.events_until(99)] == [EventKind.FAIL]

@@ -1,0 +1,156 @@
+"""Tests for the TS/ZS/SS shrink planner (paper §4.6-§4.7)."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ClusterState,
+    Method,
+    ShrinkActionKind,
+    ShrinkKind,
+    apply_shrink,
+    plan_initial_world_shrink,
+    plan_shrink,
+)
+
+
+def make_state(n_expanded=4, cores=4, initial_nodes=1):
+    st_ = ClusterState()
+    st_.add_world(list(range(initial_nodes)), [cores] * initial_nodes, is_initial=True)
+    for k in range(n_expanded):
+        st_.add_world([initial_nodes + k], [cores])
+    st_.expansions_done = 1 if n_expanded else 0
+    return st_
+
+
+class TestTS:
+    def test_whole_node_release_terminates_worlds(self):
+        s = make_state(n_expanded=4)
+        plan = plan_shrink(s, release_nodes=[3, 4])
+        assert plan.kind is ShrinkKind.TS
+        assert plan.nodes_returned == (3, 4)
+        assert plan.nodes_pinned == ()
+        kinds = [a.kind for a in plan.actions]
+        assert kinds.count(ShrinkActionKind.TERMINATE_WORLD) == 2
+        apply_shrink(s, plan)
+        assert s.nodes_in_use() == {0, 1, 2}
+
+    def test_root_migration_when_root_world_dies(self):
+        s = make_state(n_expanded=3)
+        assert s.global_root_wid == 0
+        plan = plan_shrink(s, release_nodes=[0])
+        assert any(a.kind is ShrinkActionKind.MIGRATE_ROOT for a in plan.actions)
+        apply_shrink(s, plan)
+        assert s.global_root_wid == 1
+
+    def test_all_zombie_world_awakened_and_terminated(self):
+        s = make_state(n_expanded=1)
+        w = s.worlds[1]
+        for r in w.ranks:
+            r.zombie = True
+        plan = plan_shrink(s, release_nodes=[1])
+        assert any(a.kind is ShrinkActionKind.AWAKEN_AND_TERMINATE for a in plan.actions)
+        assert plan.nodes_returned == (1,)
+
+
+class TestZS:
+    def test_partial_core_release_zombifies(self):
+        s = make_state(n_expanded=2, cores=4)
+        plan = plan_shrink(s, release_cores={1: 2})
+        assert plan.kind is ShrinkKind.ZS
+        assert plan.nodes_returned == ()
+        assert plan.nodes_pinned == (1,)
+        apply_shrink(s, plan)
+        assert len(s.worlds[1].active_ranks) == 2
+
+    def test_full_core_release_upgrades_to_ts(self):
+        """Zombifying ALL ranks of a single-node world becomes TS (§4.7)."""
+        s = make_state(n_expanded=2, cores=4)
+        plan = plan_shrink(s, release_cores={1: 4})
+        assert any(a.kind is ShrinkActionKind.AWAKEN_AND_TERMINATE for a in plan.actions)
+        assert plan.nodes_returned == (1,)
+
+    def test_multinode_world_partial_release_falls_back_to_zs(self):
+        """§4.7: multi-node MCW asked for a subset of its nodes -> ZS,
+        node stays pinned."""
+        s = ClusterState()
+        s.add_world([0, 1, 2], [4, 4, 4], is_initial=True)
+        plan = plan_shrink(s, release_nodes=[2])
+        assert plan.kind is ShrinkKind.ZS
+        assert plan.nodes_returned == ()
+        assert plan.nodes_pinned == (2,)
+        apply_shrink(s, plan)
+        assert all(r.zombie for r in s.worlds[0].ranks if r.node == 2)
+
+
+class TestInitialWorldPolicy:
+    def test_no_expansion_yet_requires_parallel_respawn(self):
+        s = ClusterState()
+        s.add_world([0, 1], [4, 4], is_initial=True)
+        act = plan_initial_world_shrink(s, nodes_to_return=1)
+        assert act.kind is ShrinkActionKind.PARALLEL_RESPAWN
+
+    def test_small_request_postpones(self):
+        s = ClusterState()
+        s.add_world([0, 1, 2], [4, 4, 4], is_initial=True)
+        s.add_world([3], [4])
+        s.expansions_done = 1
+        act = plan_initial_world_shrink(s, nodes_to_return=2)
+        assert act.kind is ShrinkActionKind.POSTPONE
+
+    def test_large_request_releases_whole_initial_world(self):
+        s = ClusterState()
+        s.add_world([0, 1], [4, 4], is_initial=True)
+        s.add_world([2], [4])
+        s.expansions_done = 1
+        act = plan_initial_world_shrink(s, nodes_to_return=2)
+        assert act.kind is ShrinkActionKind.TERMINATE_WORLD
+        assert act.nodes == (0, 1)
+
+    def test_single_node_initial_world_is_fine(self):
+        s = make_state(n_expanded=2)
+        act = plan_initial_world_shrink(s, nodes_to_return=1)
+        assert act.kind is ShrinkActionKind.POSTPONE
+
+
+class TestProperties:
+    @given(
+        n_worlds=st.integers(1, 12),
+        cores=st.integers(1, 8),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=150, deadline=None)
+    def test_returned_nodes_are_exactly_fully_freed(self, n_worlds, cores, seed):
+        import random
+
+        rng = random.Random(seed)
+        s = ClusterState()
+        s.add_world([0], [cores], is_initial=True)
+        for k in range(n_worlds):
+            s.add_world([k + 1], [rng.randint(1, cores)])
+        s.expansions_done = 1
+        release = sorted(rng.sample(range(n_worlds + 1), rng.randint(0, n_worlds)))
+        plan = plan_shrink(s, release_nodes=release)
+        apply_shrink(s, plan)
+        # every returned node hosts nothing afterwards
+        for node in plan.nodes_returned:
+            assert not s.worlds_on_node(node)
+        # non-returned release requests are pinned (zombies) or were empty
+        for node in release:
+            if node not in plan.nodes_returned:
+                assert node in plan.nodes_pinned or not s.worlds_on_node(node)
+        # a valid global root always survives
+        if s.worlds:
+            assert s.global_root_wid in s.worlds
+
+    @given(
+        cores=st.integers(2, 8),
+        take=st.integers(1, 7),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_zombie_counts_consistent(self, cores, take):
+        take = min(take, cores - 1)
+        s = make_state(n_expanded=1, cores=cores)
+        plan = plan_shrink(s, release_cores={1: take})
+        apply_shrink(s, plan)
+        assert len(s.worlds[1].active_ranks) == cores - take
+        assert sum(r.zombie for r in s.worlds[1].ranks) == take

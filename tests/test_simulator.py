@@ -1,0 +1,127 @@
+"""Simulator tests: the §5 envelopes + structural properties."""
+import itertools
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Method, ShrinkKind, plan_diffusive, plan_hypercube, plan_sequential
+from repro.malleability import MN5, NASP, simulate_expansion, simulate_shrink
+
+C = 112
+NODES = [1, 2, 4, 8, 16, 24, 32]
+
+
+def _running(alloc, ns):
+    out, rem = [], ns
+    for a in alloc:
+        take = min(a, rem)
+        out.append(take)
+        rem -= take
+    return out
+
+
+class TestPaperEnvelopes:
+    """The four headline numbers of §5 must hold on the simulator."""
+
+    def test_mn5_parallel_merge_overhead_under_1p13(self):
+        worst = 0.0
+        for i, n in itertools.combinations(NODES, 2):
+            base = simulate_expansion(
+                plan_sequential(i * C, n * C, [C] * n, Method.MERGE), MN5).total
+            par = simulate_expansion(
+                plan_hypercube(i * C, n * C, C, Method.MERGE), MN5).total
+            worst = max(worst, par / base)
+        assert worst <= 1.13
+
+    def test_mn5_parallel_baseline_up_to_1p73(self):
+        worst = 0.0
+        for i, n in itertools.combinations(NODES, 2):
+            base = simulate_expansion(
+                plan_sequential(i * C, n * C, [C] * n, Method.MERGE), MN5).total
+            par = simulate_expansion(
+                plan_hypercube(i * C, n * C, C, Method.BASELINE), MN5).total
+            worst = max(worst, par / base)
+        assert 1.3 <= worst <= 1.73
+
+    def test_mn5_ts_speedup_at_least_1387(self):
+        m = 1e18
+        for n, i in itertools.combinations(NODES, 2):
+            rp = plan_hypercube(i * C, n * C, C, Method.BASELINE)
+            ss = simulate_shrink(ShrinkKind.SS, MN5, ns=i * C, nt=n * C,
+                                 respawn_plan=rp).total
+            ts = simulate_shrink(ShrinkKind.TS, MN5, ns=i * C, nt=n * C,
+                                 doomed_world_sizes=[C] * (i - n)).total
+            m = min(m, ss / ts)
+        assert m >= 1387
+
+    def test_nasp_diffusive_overhead_under_1p25(self):
+        nodes = [1, 2, 4, 6, 8, 10, 12, 14, 16]
+        alloc = lambda n: [20 if k % 2 == 0 else 32 for k in range(n)]
+        worst = 0.0
+        for i, n in itertools.combinations(nodes, 2):
+            a = alloc(n)
+            ns, nt = sum(alloc(i)), sum(a)
+            base = simulate_expansion(
+                plan_sequential(ns, nt, a, Method.MERGE), NASP).total
+            par = simulate_expansion(
+                plan_diffusive(a, _running(a, ns), Method.MERGE), NASP).total
+            worst = max(worst, par / base)
+        assert worst <= 1.25
+
+    def test_nasp_ts_speedup_at_least_20(self):
+        nodes = [1, 2, 4, 6, 8, 10, 12, 14, 16]
+        alloc = lambda n: [20 if k % 2 == 0 else 32 for k in range(n)]
+        m = 1e18
+        for n, i in itertools.combinations(nodes, 2):
+            a = alloc(n)
+            ns, nt = sum(alloc(i)), sum(a)
+            rp = plan_diffusive(a, _running(a, min(ns, nt)), Method.BASELINE)
+            ss = simulate_shrink(ShrinkKind.SS, NASP, ns=ns, nt=nt, respawn_plan=rp).total
+            ts = simulate_shrink(ShrinkKind.TS, NASP, ns=ns, nt=nt,
+                                 doomed_world_sizes=alloc(i)[n:]).total
+            m = min(m, ss / ts)
+        assert m >= 20
+
+
+class TestStructure:
+    @given(i=st.sampled_from(NODES), n=st.sampled_from(NODES))
+    @settings(max_examples=30, deadline=None)
+    def test_phase_decomposition_sums(self, i, n):
+        if n <= i:
+            return
+        rep = simulate_expansion(plan_hypercube(i * C, n * C, C, Method.MERGE), MN5)
+        assert rep.total == pytest.approx(
+            rep.t_spawn + rep.t_sync + rep.t_connect + rep.t_reorder + rep.t_final
+        )
+        assert rep.downtime == rep.total
+
+    @given(i=st.sampled_from(NODES), n=st.sampled_from(NODES))
+    @settings(max_examples=30, deadline=None)
+    def test_async_hides_spawn(self, i, n):
+        if n <= i:
+            return
+        plan = plan_hypercube(i * C, n * C, C, Method.MERGE)
+        sync_rep = simulate_expansion(plan, MN5, asynchronous=False)
+        async_rep = simulate_expansion(plan, MN5, asynchronous=True)
+        assert async_rep.downtime == pytest.approx(sync_rep.total - sync_rep.t_spawn)
+
+    def test_per_node_sequential_scales_linearly(self):
+        """[14]'s per-node spawning: cost grows ~linearly in node count,
+        the scalability problem the paper exists to fix."""
+        t8 = simulate_expansion(
+            plan_sequential(C, 8 * C, [C] * 8, Method.MERGE, per_node=True), MN5).total
+        t32 = simulate_expansion(
+            plan_sequential(C, 32 * C, [C] * 32, Method.MERGE, per_node=True), MN5).total
+        assert t32 / t8 > 3.0
+        par8 = simulate_expansion(plan_hypercube(C, 8 * C, C, Method.MERGE), MN5).total
+        par32 = simulate_expansion(plan_hypercube(C, 32 * C, C, Method.MERGE), MN5).total
+        assert par32 / par8 < 1.5  # parallel strategy is ~flat in node count
+
+    def test_zs_does_not_return_nodes_ts_does(self):
+        ts = simulate_shrink(ShrinkKind.TS, MN5, ns=8 * C, nt=2 * C,
+                             doomed_world_sizes=[C] * 6, nodes_returned=6)
+        zs = simulate_shrink(ShrinkKind.ZS, MN5, ns=8 * C, nt=2 * C,
+                             nodes_pinned=6)
+        assert ts.nodes_returned == 6
+        assert zs.nodes_returned == 0 and zs.nodes_pinned == 6

@@ -1,0 +1,219 @@
+"""Tests for the spawn planners (paper §4.1-§4.2, Eqs. 1-8)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Method,
+    SOURCE_GID,
+    Strategy,
+    nodes_at_step,
+    plan_diffusive,
+    plan_hypercube,
+    plan_sequential,
+    procs_at_step,
+    steps_required,
+)
+
+
+# ---------------------------------------------------------------- hypercube --
+class TestHypercube:
+    def test_figure1_example(self):
+        """NS=1 -> NT=8 with C=1: 7 groups over 3 steps, cube edges."""
+        p = plan_hypercube(1, 8, 1, Method.MERGE)
+        assert p.steps == 3
+        assert len(p.groups) == 7
+        edges = {(g.parent_gid, g.gid) for g in p.groups}
+        assert edges == {(SOURCE_GID, 0), (SOURCE_GID, 1), (0, 2),
+                         (SOURCE_GID, 3), (0, 4), (1, 5), (2, 6)}
+        assert [g.step for g in p.groups] == [1, 2, 2, 3, 3, 3, 3]
+
+    def test_section41_20core_example(self):
+        """§4.1: 20 cores/node, 1 full node: step1 +20 nodes, step2 +420."""
+        assert nodes_at_step(1, 1, 20, Method.MERGE) == 21
+        assert nodes_at_step(2, 1, 20, Method.MERGE) == 441
+        assert procs_at_step(2, 1, 20, Method.MERGE) == 8820
+
+    def test_divisibility_required(self):
+        with pytest.raises(ValueError):
+            plan_hypercube(3, 8, 2, Method.MERGE)
+        with pytest.raises(ValueError):
+            plan_hypercube(2, 7, 2, Method.MERGE)
+
+    @given(
+        cores=st.integers(1, 64),
+        initial=st.integers(1, 8),
+        target=st.integers(1, 64),
+        method=st.sampled_from([Method.MERGE, Method.BASELINE]),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_plan_invariants(self, cores, initial, target, method):
+        if target < initial:
+            target = initial + target  # keep it an expansion
+        ns, nt = initial * cores, target * cores
+        p = plan_hypercube(ns, nt, cores, method)
+        want_groups = target if method is Method.BASELINE else target - initial
+        # every group spawned exactly once, ids dense, node-confined, size C
+        assert len(p.groups) == want_groups
+        assert [g.gid for g in p.groups] == list(range(want_groups))
+        assert all(g.size == cores for g in p.groups)
+        assert all(len(g.nodes_spanned()) == 1 for g in p.groups)
+        # nodes all distinct
+        assert len({g.node for g in p.groups}) == want_groups
+        # parent existed strictly before child
+        step_of = {g.gid: g.step for g in p.groups}
+        step_of[SOURCE_GID] = 0
+        for g in p.groups:
+            assert step_of[g.parent_gid] < g.step
+        # per-step spawn count <= live processes (capacity, Eq. 2)
+        for s in range(1, p.steps + 1):
+            live = ns + sum(g.size for g in p.groups if g.step < s)
+            assert len(p.groups_in_step(s)) <= live
+        # step count matches the closed form
+        if method is Method.MERGE:
+            assert p.steps == steps_required(target, initial, cores)
+        # total processes
+        assert p.trace[-1].t == ns + sum(p.group_sizes)
+
+    @given(cores=st.integers(1, 128), initial=st.integers(1, 16),
+           target=st.integers(1, 600))
+    @settings(max_examples=200, deadline=None)
+    def test_eq3_closed_form(self, cores, initial, target):
+        """Eq. 3 == smallest s with (C+1)^s * I >= N."""
+        if target < initial:
+            return
+        s = steps_required(target, initial, cores)
+        assert (cores + 1) ** s * initial >= target
+        if s > 0:
+            assert (cores + 1) ** (s - 1) * initial < target
+
+    def test_baseline_respawns_full_allocation(self):
+        p = plan_hypercube(4, 8, 2, Method.BASELINE)
+        assert len(p.groups) == 4          # N groups, not N - I
+        assert sum(p.group_sizes) == 8     # full NT
+        # R records source occupancy during reconfig (nodes 0..I-1) but the
+        # sources do not persist into the target world (method=BASELINE).
+        assert tuple(p.running) == (2, 2, 0, 0)
+        # the last groups land on the source nodes -> transient oversubscription
+        assert {g.node for g in p.groups} == {0, 1, 2, 3}
+
+    def test_baseline_shrink_direction_oversubscribes_all(self):
+        p = plan_hypercube(8, 4, 2, Method.BASELINE)
+        assert len(p.groups) == 2
+        assert {g.node for g in p.groups} == {0, 1}   # all source-occupied
+
+
+# ---------------------------------------------------------------- diffusive --
+TABLE2_A = [4, 2, 8, 12, 3, 3, 4, 4, 6, 3]
+TABLE2_R = [2, 0, 0, 0, 0, 0, 0, 0, 0, 0]
+
+
+class TestDiffusive:
+    def test_table2_exact(self):
+        """Reproduce Table 2 (t, g, T, G columns exactly; lambda per Eq. 6).
+
+        The paper's printed lambda_2=7 / lambda_3=47 is an off-by-one typo
+        (propagated); iterating Eq. 6 gives 8 and 48, and the g/t/T/G
+        values printed in the table are only consistent with 8/48.
+        """
+        p = plan_diffusive(TABLE2_A, TABLE2_R, Method.MERGE)
+        ts = [tr.t for tr in p.trace]
+        gs = [tr.g for tr in p.trace][1:]
+        Ts = [tr.T for tr in p.trace]
+        Gs = [tr.G for tr in p.trace][1:]
+        lams = [tr.lam for tr in p.trace]
+        assert ts == [2, 6, 40, 49]
+        assert gs == [4, 34, 9]
+        assert Ts == [1, 2, 8, 10]
+        assert Gs == [1, 6, 2]
+        assert lams == [0, 2, 8, 48]
+        assert p.steps == 3
+        assert p.nt == 49
+
+    def test_group_node_alignment(self):
+        p = plan_diffusive(TABLE2_A, TABLE2_R, Method.MERGE)
+        # one group per node with S_i > 0, sized S_i, in node order
+        assert [(g.node, g.size) for g in p.groups] == [
+            (i, s) for i, s in enumerate(p.to_spawn) if s > 0
+        ]
+
+    @given(
+        a_vec=st.lists(st.integers(0, 16), min_size=1, max_size=32),
+        seed=st.integers(0, 2**31),
+        method=st.sampled_from([Method.MERGE, Method.BASELINE]),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_plan_invariants(self, a_vec, seed, method):
+        import random
+
+        rng = random.Random(seed)
+        r_vec = [rng.randint(0, a) for a in a_vec]
+        if sum(r_vec) == 0:
+            r_vec[rng.randrange(len(r_vec))] = max(a_vec) or 1
+            a_vec = [max(a, r) for a, r in zip(a_vec, r_vec)]
+        p = plan_diffusive(a_vec, r_vec, method)
+        s_expected = (
+            [a - r for a, r in zip(a_vec, r_vec)] if method is Method.MERGE else a_vec
+        )
+        assert list(p.to_spawn) == s_expected
+        # every positive S entry spawns exactly one node-confined group
+        assert [(g.node, g.size) for g in p.groups] == [
+            (i, s) for i, s in enumerate(s_expected) if s > 0
+        ]
+        # lambda progression consumes contiguous, non-overlapping segments
+        for prev, cur in zip(p.trace, p.trace[1:]):
+            assert cur.lam == prev.lam + prev.t          # Eq. 6
+            lo, hi = prev.lam, min(len(a_vec), cur.lam)
+            seg = [s_expected[i] for i in range(lo, hi)]
+            assert cur.g == sum(seg)                     # Eq. 5
+            assert cur.t == prev.t + cur.g               # Eq. 4
+            assert cur.G == sum(                          # Eq. 8
+                1 for i in range(lo, hi) if r_vec[i] == 0 and s_expected[i] > 0
+            )
+            assert cur.T == prev.T + cur.G               # Eq. 7
+        # parent of each group existed before it
+        step_of = {g.gid: g.step for g in p.groups}
+        step_of[SOURCE_GID] = 0
+        for g in p.groups:
+            assert step_of[g.parent_gid] < g.step
+        # capacity: per-step groups come from distinct live spawners
+        for s in range(1, p.steps + 1):
+            live = p.trace[s - 1].t
+            assert len(p.groups_in_step(s)) <= live
+        # totals
+        assert p.nt == sum(s_expected) + (p.ns if method is Method.MERGE else 0)
+
+    def test_rejects_mixed_shrink(self):
+        with pytest.raises(ValueError):
+            plan_diffusive([2, 2], [4, 0], Method.MERGE)
+
+    def test_hypercube_is_diffusive_special_case(self):
+        """Homogeneous allocations: both strategies spawn the same groups
+        (same node/size multiset), though possibly in different steps."""
+        c, i, n = 4, 2, 9
+        hp = plan_hypercube(i * c, n * c, c, Method.MERGE)
+        dp = plan_diffusive([c] * n, [c] * i + [0] * (n - i), Method.MERGE)
+        assert sorted((g.node, g.size) for g in hp.groups) == sorted(
+            (g.node, g.size) for g in dp.groups
+        )
+
+
+# --------------------------------------------------------------- sequential --
+class TestSequential:
+    def test_collective_spawn_spans_nodes(self):
+        """Classic Merge: one world spanning all new nodes -> no TS possible."""
+        p = plan_sequential(4, 16, [4, 4, 4, 4], Method.MERGE)
+        assert p.strategy is Strategy.SEQUENTIAL
+        assert len(p.groups) == 1
+        assert p.groups[0].size == 12
+        assert len(p.groups[0].nodes_spanned()) == 3
+
+    def test_per_node_is_node_confined_but_serial(self):
+        p = plan_sequential(4, 16, [4, 4, 4, 4], Method.MERGE, per_node=True)
+        assert len(p.groups) == 3
+        assert all(len(g.nodes_spanned()) == 1 for g in p.groups)
+        # serial: steps == number of groups
+        assert p.steps == 3
+        assert [g.step for g in p.groups] == [1, 2, 3]

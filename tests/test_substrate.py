@@ -1,0 +1,185 @@
+"""Substrate tests: checkpoint store, optimizer, data pipeline, sharding
+rule resolution."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_tree, save_tree
+from repro.data import SyntheticTokens
+from repro.models.common import ModelConfig
+from repro.optim import adamw_init, adamw_update, global_norm, linear_warmup_cosine
+from repro.parallel.sharding import ShardingContext, resolve_spec
+
+
+# ------------------------------------------------------------- checkpoint --
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(12.0).reshape(3, 4), "b": {"c": jnp.ones((5,))}}
+        save_tree(tree, str(tmp_path), 7)
+        assert latest_step(str(tmp_path)) == 7
+        out = restore_tree(tree, str(tmp_path), 7)
+        np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]))
+        np.testing.assert_allclose(np.asarray(out["b"]["c"]), 1.0)
+
+    def test_manager_retention_and_async(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+        tree = {"w": jnp.zeros((4,))}
+        for s in (1, 2, 3, 4):
+            mgr.save({"w": jnp.full((4,), float(s))}, s)
+        mgr.wait()
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path))
+        assert steps == [3, 4]
+        restored, step = mgr.restore_latest(tree)
+        assert step == 4
+        np.testing.assert_allclose(np.asarray(restored["w"]), 4.0)
+
+    def test_restore_is_mesh_independent(self, tmp_path):
+        """Written under 1 device, restored with an explicit sharding."""
+        from repro.launch.mesh import make_host_mesh
+
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        save_tree(tree, str(tmp_path), 1)
+        mesh = make_host_mesh()
+        out = restore_tree(tree, str(tmp_path), 1, mesh=mesh, spec_tree=P())
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+# -------------------------------------------------------------- optimizer --
+class TestAdamW:
+    def test_minimizes_quadratic(self):
+        params = {"x": jnp.array([5.0, -3.0])}
+        state = adamw_init(params)
+        loss = lambda p: jnp.sum(p["x"] ** 2)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state = adamw_update(g, state, params, 5e-2, weight_decay=0.0)
+        assert float(loss(params)) < 1e-2
+
+    def test_clipping_bounds_update(self):
+        params = {"x": jnp.zeros((4,))}
+        state = adamw_init(params)
+        g = {"x": jnp.full((4,), 1e9)}
+        new, _ = adamw_update(g, state, params, 1e-3, clip_norm=1.0)
+        assert float(jnp.max(jnp.abs(new["x"]))) < 1.0
+
+    @given(scale=st.floats(0.1, 100.0))
+    @settings(max_examples=20, deadline=None)
+    def test_global_norm(self, scale):
+        tree = {"a": jnp.ones((3,)) * scale, "b": jnp.zeros((2,))}
+        assert float(global_norm(tree)) == pytest.approx(
+            float(np.sqrt(3) * scale), rel=1e-5
+        )
+
+    def test_schedule_warmup_then_decay(self):
+        lr = linear_warmup_cosine(1.0, warmup=10, total_steps=110)
+        assert float(lr(0)) == pytest.approx(0.0)
+        assert float(lr(10)) == pytest.approx(1.0, abs=0.05)
+        assert float(lr(110)) < float(lr(50)) < float(lr(10))
+
+
+# ------------------------------------------------------------------- data --
+class TestData:
+    def _cfg(self):
+        return ModelConfig(name="t", family="dense", n_layers=1, d_model=8,
+                           n_heads=1, n_kv_heads=1, d_ff=8, vocab=128)
+
+    def test_deterministic_per_step(self):
+        d = SyntheticTokens(self._cfg(), batch=4, seq=16, seed=3)
+        a, b = d.sample(5), d.sample(5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = d.sample(6)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticTokens(self._cfg(), batch=2, seq=16, seed=0)
+        s = d.sample(0)
+        assert s["tokens"].shape == s["labels"].shape == (2, 16)
+        # tokens[t+1] == labels[t] by construction
+        full_a = d.sample(0)
+        np.testing.assert_array_equal(full_a["tokens"][:, 1:], full_a["labels"][:, :-1])
+
+    def test_tokens_in_vocab(self):
+        d = SyntheticTokens(self._cfg(), batch=4, seq=64, seed=1)
+        s = d.sample(0)
+        assert s["tokens"].min() >= 0
+        assert s["tokens"].max() < 128
+
+    def test_prefetch_iterator(self):
+        d = SyntheticTokens(self._cfg(), batch=2, seq=8, seed=0)
+        it = d.iter(start_step=0)
+        first = next(it)
+        np.testing.assert_array_equal(first["tokens"], d.sample(0)["tokens"])
+
+
+# --------------------------------------------------------------- sharding --
+class TestShardingRules:
+    def _ctx(self, mode="train"):
+        from repro.launch.mesh import make_production_mesh
+        # abstract mesh shape via a 1-device stand-in is not possible;
+        # use a tiny host mesh with both axis names instead.
+        import numpy as np_
+        from jax.sharding import Mesh
+
+        dev = np_.array(jax.devices()[:1], dtype=object).reshape(1, 1)
+        return ShardingContext(mesh=Mesh(dev, ("data", "model")), mode=mode)
+
+    def test_resolution_drops_small_dims_with_fallback(self):
+        from jax.sharding import Mesh
+        import numpy as np_
+        # synthetic 4x4 mesh of the same device (shape logic only)
+        dev = np_.array([jax.devices()[0]] * 16, dtype=object).reshape(4, 4)
+        ctx = ShardingContext(mesh=Mesh(dev, ("data", "model")), mode="train")
+        # kv_heads=2 < 4 shards -> dropped; the fallback pass re-places
+        # 'model' on the largest divisible dim (embed=128) for storage.
+        spec = resolve_spec(("embed", "kv_heads", "head_dim"), (128, 2, 64), ctx, "weight")
+        assert spec == P(("data", "model"), None, None)
+        spec = resolve_spec(("embed", "heads", "head_dim"), (128, 8, 64), ctx, "weight")
+        assert spec == P("data", "model", None)
+
+    def test_weight_divisibility_enforced_with_fallback(self):
+        """56 heads over 16-way model: jit args reject uneven shardings,
+        so the weight spec must fall back to a divisible dim."""
+        from jax.sharding import Mesh
+        import numpy as np_
+        dev = np_.array([jax.devices()[0]] * 16, dtype=object).reshape(1, 16)
+        ctx = ShardingContext(mesh=Mesh(dev, ("data", "model")), mode="train")
+        spec = resolve_spec(("heads", "head_dim", "embed"), (56, 128, 7168), ctx, "weight")
+        flat = []
+        for e in spec:
+            flat.extend(e if isinstance(e, tuple) else [e])
+        assert "model" in flat
+        assert spec[0] != "model"  # 56 % 16 != 0
+
+    def test_uneven_dims_kept(self):
+        from jax.sharding import Mesh
+        import numpy as np_
+        dev = np_.array([jax.devices()[0]] * 16, dtype=object).reshape(4, 4)
+        ctx = ShardingContext(mesh=Mesh(dev, ("data", "model")), mode="train")
+        # 56 heads over 4-way model: uneven but allowed
+        spec = resolve_spec(("embed", "heads", "head_dim"), (128, 56, 64), ctx, "weight")
+        assert spec == P("data", "model", None)
+
+    def test_no_axis_reuse_within_tensor(self):
+        from jax.sharding import Mesh
+        import numpy as np_
+        dev = np_.array([jax.devices()[0]] * 16, dtype=object).reshape(4, 4)
+        ctx = ShardingContext(mesh=Mesh(dev, ("data", "model")), mode="train")
+        spec = resolve_spec(("mlp", "vocab"), (64, 64), ctx, "weight")
+        # both want 'model'; second must not reuse it
+        flat = [e for e in spec]
+        assert flat.count("model") <= 1
+
+    def test_batch_rule_tuple_filters_missing_axes(self):
+        from jax.sharding import Mesh
+        import numpy as np_
+        dev = np_.array([jax.devices()[0]] * 4, dtype=object).reshape(4,)
+        ctx = ShardingContext(mesh=Mesh(dev.reshape(4, 1), ("data", "model")), mode="train")
+        # 'pod' missing from this mesh -> silently skipped
+        spec = resolve_spec(("batch", "seq"), (8, 16), ctx, "act")
+        assert spec == P("data", None)

@@ -1,0 +1,169 @@
+"""Tests for §4.3 synchronization, §4.4 binary connection, §4.5 reordering."""
+import math
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Method,
+    SOURCE_GID,
+    assert_ports_before_release,
+    binary_connection_schedule,
+    build_sync_graph,
+    extend_graph_with_connection,
+    global_order,
+    node_of_rank,
+    plan_diffusive,
+    plan_hypercube,
+    port_openers,
+    required_ports,
+    simulate_merges,
+    spawn_children,
+)
+from repro.core.sync import CONNECT, DOWN, PORT_OPEN, UP_READY
+
+
+# ------------------------------------------------------------------- sync ---
+class TestSync:
+    @given(cores=st.integers(1, 8), initial=st.integers(1, 4),
+           target=st.integers(2, 40))
+    @settings(max_examples=60, deadline=None)
+    def test_ports_always_open_before_any_release(self, cores, initial, target):
+        if target <= initial:
+            target = initial + 1
+        p = plan_hypercube(initial * cores, target * cores, cores, Method.MERGE)
+        g = build_sync_graph(p)
+        extend_graph_with_connection(g, p)
+        assert_ports_before_release(g, p)   # raises on violation
+        g.topological()                     # and the graph must be acyclic
+
+    @given(
+        a_vec=st.lists(st.integers(0, 6), min_size=2, max_size=16),
+        r0=st.integers(1, 6),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_diffusive_sync_invariant(self, a_vec, r0):
+        a_vec = [max(a_vec[0], r0)] + a_vec[1:]
+        r_vec = [r0] + [0] * (len(a_vec) - 1)
+        p = plan_diffusive(a_vec, r_vec, Method.MERGE)
+        g = build_sync_graph(p)
+        extend_graph_with_connection(g, p)
+        assert_ports_before_release(g, p)
+
+    def test_randomized_latency_simulation_no_port_race(self):
+        """Event-driven execution with adversarial random latencies: no
+        CONNECT may fire before its acceptor's PORT_OPEN timestamp."""
+        p = plan_hypercube(2, 16, 2, Method.MERGE)
+        g = build_sync_graph(p)
+        extend_graph_with_connection(g, p)
+        preds = g.predecessors()
+        for trial in range(20):
+            rng = random.Random(trial)
+            finish: dict = {}
+            for ev in g.topological():
+                start = max((finish[p_] for p_ in preds[ev]), default=0.0)
+                finish[ev] = start + rng.uniform(0.1, 10.0)
+            opens = {e.gid: finish[e] for e in g.events if e.kind == PORT_OPEN}
+            for e in g.events:
+                if e.kind == CONNECT:
+                    start = max((finish[p_] for p_ in preds[e]), default=0.0)
+                    assert start >= opens[e.peer], (e, trial)
+
+    def test_spawn_children_tree(self):
+        p = plan_hypercube(1, 8, 1, Method.MERGE)
+        ch = spawn_children(p)
+        assert ch[SOURCE_GID] == [0, 1, 3]
+        assert ch[0] == [2, 4]
+        assert ch[1] == [5]
+        assert ch[2] == [6]
+        assert ch[3] == ch[4] == ch[5] == ch[6] == []
+
+    def test_up_before_down(self):
+        """Every group's UP_READY precedes every group's DOWN (no release
+        until the whole forest is ready — the §4.3 guarantee)."""
+        p = plan_hypercube(2, 18, 2, Method.MERGE)
+        g = build_sync_graph(p)
+        ups = [e for e in g.events if e.kind == UP_READY]
+        downs = [e for e in g.events if e.kind == DOWN]
+        for u in ups:
+            reach = g.reachable_from(u)
+            assert all(d in reach for d in downs)
+
+
+# ---------------------------------------------------------------- connect ---
+class TestBinaryConnection:
+    def test_figure3_seven_groups(self):
+        sched = binary_connection_schedule(7)
+        assert len(sched) == 3
+        assert sched[0].pairs == ((0, 6), (1, 5), (2, 4))
+        assert sched[0].idle == (3,)
+        assert sched[1].pairs == ((0, 3), (1, 2))
+        assert sched[2].pairs == ((0, 1),)
+
+    @given(n=st.integers(1, 4096))
+    @settings(max_examples=200, deadline=None)
+    def test_converges_to_single_group(self, n):
+        members = simulate_merges(n)
+        assert len(members) == 1
+        (rep, got), = members.items()
+        assert rep == 0
+        assert sorted(got) == list(range(n))
+
+    @given(n=st.integers(1, 2048))
+    @settings(max_examples=200, deadline=None)
+    def test_round_count_is_log2(self, n):
+        assert len(binary_connection_schedule(n)) == (0 if n <= 1 else math.ceil(math.log2(n)))
+
+    @given(n=st.integers(2, 2048))
+    @settings(max_examples=200, deadline=None)
+    def test_port_condition_matches_listing4(self, n):
+        """Acceptor ids over all rounds == {id < G/2}, the open_port
+        condition in Listing 4."""
+        assert required_ports(n) == set(range(n // 2))
+
+    @given(cores=st.integers(1, 6), target=st.integers(2, 30))
+    @settings(max_examples=50, deadline=None)
+    def test_port_openers_cover_required(self, cores, target):
+        p = plan_hypercube(cores, target * cores, cores, Method.MERGE)
+        assert {g for g in port_openers(p) if g != SOURCE_GID} >= required_ports(
+            len(p.groups)
+        )
+
+
+# ---------------------------------------------------------------- reorder ---
+class TestReorder:
+    @given(cores=st.integers(1, 8), initial=st.integers(1, 4),
+           target=st.integers(2, 40),
+           method=st.sampled_from([Method.MERGE, Method.BASELINE]))
+    @settings(max_examples=100, deadline=None)
+    def test_eq9_is_a_permutation(self, cores, initial, target, method):
+        if target <= initial:
+            target = initial + 1
+        p = plan_hypercube(initial * cores, target * cores, cores, method)
+        layout = global_order(p)  # raises on collision/gap
+        assert len(layout) == (target * cores if method is Method.BASELINE
+                               else target * cores)
+
+    @given(
+        a_vec=st.lists(st.integers(0, 6), min_size=2, max_size=16),
+        r0=st.integers(1, 6),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_diffusive_rank_order_is_node_contiguous(self, a_vec, r0):
+        a_vec = [max(a_vec[0], r0)] + a_vec[1:]
+        r_vec = [r0] + [0] * (len(a_vec) - 1)
+        p = plan_diffusive(a_vec, r_vec, Method.MERGE)
+        nodes = node_of_rank(p)
+        # Ranks walk the nodes monotonically: once we leave a node we never
+        # return (the guarantee Eq. 9 exists to provide).
+        seen: list[int] = []
+        for n in nodes:
+            if not seen or seen[-1] != n:
+                assert n not in seen[:-1]
+                seen.append(n)
+
+    def test_merge_sources_keep_their_ranks(self):
+        p = plan_hypercube(4, 12, 2, Method.MERGE)
+        layout = global_order(p)
+        assert layout[:4] == [(-1, 0), (-1, 1), (-1, 2), (-1, 3)]
