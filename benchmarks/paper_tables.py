@@ -1,26 +1,39 @@
 """One benchmark per paper table/figure (§5), on the calibrated simulator.
 
+All strategy×method variants are produced by iterating the
+:mod:`repro.core.engine` strategy registry — no hand-stitched matrices.
+
 Figure 4a  — homogeneous expansion times (MN5, 112-core nodes)
 Figure 4b  — homogeneous shrink times (TS vs B-based)
 Figure 5   — preferred-method grid
 Figure 6a/b — heterogeneous expansion/shrink (NASP, 20/32-core nodes)
 Table 2    — iterative diffusive worked example
 Figure 1 / Eq. 3 — hypercube round counts
+Scenarios  — the declarative workload traces, timeline-charged
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
 
 from repro.core import (
     Method,
+    ReconfigEngine,
     ShrinkKind,
     Strategy,
+    StrategySpec,
     plan_diffusive,
     plan_hypercube,
-    plan_sequential,
+    registered_strategies,
+    running_vector,
 )
-from repro.malleability import MN5, NASP, simulate_expansion, simulate_shrink
+from repro.malleability import (
+    MN5,
+    NASP,
+    registered_scenarios,
+    run_scenario_sim,
+    simulate_expansion,
+    simulate_shrink,
+)
 
 MN5_CORES = 112
 MN5_NODES = [1, 2, 4, 8, 16, 24, 32]
@@ -33,12 +46,40 @@ def nasp_alloc(n: int) -> list[int]:
     return [20 if i % 2 == 0 else 32 for i in range(n)]
 
 
-def _running(alloc: list[int], ns: int) -> list[int]:
-    out, rem = [], ns
-    for a in alloc:
-        take = min(a, rem)
-        out.append(take)
-        rem -= take
+def variant_label(spec: StrategySpec, method: Method) -> str:
+    """Paper-facing variant names: M / B / M+hypercube / B+diffusive / ..."""
+    m = "M" if method is Method.MERGE else "B"
+    if spec.key == Strategy.SEQUENTIAL.value:
+        return m
+    return f"{m}+{spec.key}"
+
+
+def expansion_variants(ns, nt, cores, cm, *, parallel_only=False,
+                       include_baseline=False,
+                       methods=(Method.MERGE, Method.BASELINE)):
+    """(label, ExpansionReport) for every applicable registered strategy.
+
+    ``include_baseline`` re-adds the sequential-Merge "M" row (the paper's
+    normalization baseline) when ``parallel_only`` would filter it out.
+    """
+    engine = ReconfigEngine(cost_model=cm)
+    out = []
+    for spec in registered_strategies():
+        if parallel_only and not spec.parallel:
+            if include_baseline and spec.key == Strategy.SEQUENTIAL.value:
+                plan = engine.plan_expand(
+                    ns, nt, cores, strategy=spec.key, method=Method.MERGE)
+                out.append(("M", simulate_expansion(plan.spawn, cm)))
+            continue
+        if spec.homogeneous_only and not isinstance(cores, int):
+            widths = set(cores)
+            if len(widths) != 1:
+                continue
+        for method in methods:
+            plan = engine.plan_expand(
+                ns, nt, cores, strategy=spec.key, method=method)
+            out.append((variant_label(spec, method),
+                        simulate_expansion(plan.spawn, cm)))
     return out
 
 
@@ -47,23 +88,14 @@ def fig4a_homogeneous_expansion() -> list[dict]:
     rows = []
     for i, n in itertools.combinations(MN5_NODES, 2):
         ns, nt = i * MN5_CORES, n * MN5_CORES
-        variants = {
-            "M": plan_sequential(ns, nt, [MN5_CORES] * n, Method.MERGE),
-            "M+hypercube": plan_hypercube(ns, nt, MN5_CORES, Method.MERGE),
-            "M+diffusive": plan_diffusive(
-                [MN5_CORES] * n, _running([MN5_CORES] * n, ns), Method.MERGE
-            ),
-            "B+hypercube": plan_hypercube(ns, nt, MN5_CORES, Method.BASELINE),
-            "B+diffusive": plan_diffusive(
-                [MN5_CORES] * n, _running([MN5_CORES] * n, ns), Method.BASELINE
-            ),
-        }
-        base = simulate_expansion(variants["M"], MN5).total
-        for name, plan in variants.items():
-            t = simulate_expansion(plan, MN5).total
+        variants = dict(expansion_variants(
+            ns, nt, MN5_CORES, MN5, parallel_only=True, include_baseline=True))
+        base = variants["M"].total
+        for name, rep in variants.items():
             rows.append({
                 "figure": "4a", "I": i, "N": n, "method": name,
-                "time_s": round(t, 4), "vs_merge": round(t / base, 3),
+                "time_s": round(rep.total, 4),
+                "vs_merge": round(rep.total / base, 3),
             })
     return rows
 
@@ -93,23 +125,22 @@ def fig4b_homogeneous_shrink() -> list[dict]:
 
 # ------------------------------------------------ Fig 5: preferred method --
 def fig5_preferred_grid() -> list[dict]:
-    """Best method per (I, N) cell: expansion upper triangle, shrink lower."""
+    """Best method per (I, N) cell: expansion upper triangle, shrink lower.
+
+    Expansion candidates come from the full strategy registry (classic
+    strategies included: they never win, which is the paper's point)."""
     rows = []
     for i in MN5_NODES:
         for n in MN5_NODES:
             if i == n:
                 continue
+            ns, nt = i * MN5_CORES, n * MN5_CORES
             if n > i:   # expansion
-                cand = {}
-                ns, nt = i * MN5_CORES, n * MN5_CORES
-                cand["M"] = simulate_expansion(
-                    plan_sequential(ns, nt, [MN5_CORES] * n, Method.MERGE), MN5).total
-                cand["M+par"] = simulate_expansion(
-                    plan_hypercube(ns, nt, MN5_CORES, Method.MERGE), MN5).total
-                cand["B+par"] = simulate_expansion(
-                    plan_hypercube(ns, nt, MN5_CORES, Method.BASELINE), MN5).total
+                cand = {
+                    label: rep.total
+                    for label, rep in expansion_variants(ns, nt, MN5_CORES, MN5)
+                }
             else:       # shrink
-                ns, nt = i * MN5_CORES, n * MN5_CORES
                 cand = {
                     "M+TS": simulate_shrink(
                         ShrinkKind.TS, MN5, ns=ns, nt=nt,
@@ -131,25 +162,21 @@ def fig6_heterogeneous() -> list[dict]:
     for i, n in itertools.combinations(NASP_NODES, 2):
         alloc = nasp_alloc(n)
         ns, nt = sum(nasp_alloc(i)), sum(alloc)
-        r = _running(alloc, ns)
-        base = simulate_expansion(
-            plan_sequential(ns, nt, alloc, Method.MERGE), NASP).total
-        for name, plan in {
-            "M": plan_sequential(ns, nt, alloc, Method.MERGE),
-            "M+diffusive": plan_diffusive(alloc, r, Method.MERGE),
-            "B+diffusive": plan_diffusive(alloc, r, Method.BASELINE),
-        }.items():
-            t = simulate_expansion(plan, NASP).total
+        variants = dict(expansion_variants(
+            ns, nt, alloc, NASP, parallel_only=True, include_baseline=True))
+        base = variants["M"].total
+        for name, rep in variants.items():
             rows.append({"figure": "6a", "I": i, "N": n, "method": name,
-                         "time_s": round(t, 4), "vs_merge": round(t / base, 3)})
+                         "time_s": round(rep.total, 4),
+                         "vs_merge": round(rep.total / base, 3)})
     for n, i in itertools.combinations(NASP_NODES, 2):
         alloc_t = nasp_alloc(n)
         ns, nt = sum(nasp_alloc(i)), sum(alloc_t)
         doomed = nasp_alloc(i)[n:]
         ts = simulate_shrink(ShrinkKind.TS, NASP, ns=ns, nt=nt,
                              doomed_world_sizes=doomed).total
-        rp = plan_diffusive(alloc_t, [0] * len(alloc_t) or None, Method.BASELINE) \
-            if False else plan_diffusive(alloc_t, _running(alloc_t, min(ns, nt)), Method.BASELINE)
+        rp = plan_diffusive(alloc_t, running_vector(alloc_t, min(ns, nt)),
+                            Method.BASELINE)
         ss = simulate_shrink(ShrinkKind.SS, NASP, ns=ns, nt=nt, respawn_plan=rp).total
         rows.append({"figure": "6b", "I": i, "N": n, "method": "B+diffusive",
                      "time_s": round(ss, 4), "speedup_ts": round(ss / ts, 1)})
@@ -177,6 +204,22 @@ def fig1_hypercube_rounds() -> list[dict]:
         plan = plan_hypercube(i * cores, n * cores, cores, Method.MERGE)
         rows.append({"figure": "1/Eq3", "C": cores, "I": i, "N": n,
                      "rounds": plan.steps, "groups": len(plan.groups)})
+    return rows
+
+
+# --------------------------------------------------- declarative scenarios --
+def scenario_traces() -> list[dict]:
+    """Every registered scenario, timeline-charged by the engine."""
+    rows = []
+    for sc in registered_scenarios():
+        for rec in run_scenario_sim(sc):
+            rows.append({
+                "scenario": sc.name, "step": rec.step, "kind": rec.kind,
+                "mechanism": rec.mechanism,
+                "nodes": f"{rec.nodes_before}->{rec.nodes_after}",
+                "time_s": round(rec.est_wall_s, 6),
+                "downtime_s": round(rec.downtime_s, 6),
+            })
     return rows
 
 

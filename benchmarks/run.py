@@ -20,6 +20,7 @@ from paper_tables import (  # noqa: E402
     fig5_preferred_grid,
     fig6_heterogeneous,
     paper_envelopes,
+    scenario_traces,
     table2_trace,
 )
 
@@ -51,6 +52,11 @@ def main() -> None:
     for r in fig1_hypercube_rounds():
         name = f"fig1/C{r['C']}-I{r['I']}-N{r['N']}"
         print(f"{name},0,rounds={r['rounds']};groups={r['groups']}")
+
+    for r in scenario_traces():
+        name = f"scenario/{r['scenario']}/s{r['step']}-{r['kind']}"
+        print(f"{name},{r['time_s']*1e6:.0f},"
+              f"downtime_us={r['downtime_s']*1e6:.0f};{r['mechanism']};{r['nodes']}")
 
     print()
     print("=== paper envelope check (simulator vs paper §5) ===")

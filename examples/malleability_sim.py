@@ -1,43 +1,53 @@
-"""Reconfiguration-cost explorer: the paper's §5 on the simulator.
+"""Reconfiguration-cost explorer: the paper's §5 on the engine.
 
 Prints the preferred-method grid (paper Fig. 5) for a chosen cluster
-profile and shows the phase breakdown for one expansion.
+profile — candidates come from the engine's strategy registry — shows
+the event timeline for one expansion, and can replay any registered
+declarative scenario.
 
     PYTHONPATH=src python examples/malleability_sim.py [--profile mn5|nasp]
+    PYTHONPATH=src python examples/malleability_sim.py --scenario burst-arrival
+    PYTHONPATH=src python examples/malleability_sim.py --list-scenarios
 """
 import argparse
-import itertools
 
-from repro.core import Method, ShrinkKind, plan_hypercube, plan_sequential
-from repro.malleability import MN5, NASP, simulate_expansion, simulate_shrink
+from repro.core import (
+    Method,
+    ReconfigEngine,
+    ShrinkKind,
+    Strategy,
+    plan_hypercube,
+    registered_strategies,
+)
+from repro.malleability import (
+    MN5,
+    NASP,
+    get_scenario,
+    registered_scenarios,
+    run_scenario_sim,
+    simulate_expansion,
+    simulate_shrink,
+)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--profile", choices=["mn5", "nasp"], default="mn5")
-    ap.add_argument("--cores", type=int, default=112)
-    args = ap.parse_args()
-    cm = MN5 if args.profile == "mn5" else NASP
-    C = args.cores
-    nodes = [1, 2, 4, 8, 16, 24, 32]
-
-    print(f"preferred method per (I -> N), profile={args.profile}, C={C}")
-    print("(rows I, cols N; upper triangle = expand, lower = TS shrink)\n")
-    header = "I\\N " + "".join(f"{n:>8}" for n in nodes)
+def preferred_grid(cm, C, nodes):
+    print(f"(rows I, cols N; upper triangle = expand, lower = TS shrink)\n")
+    header = "I\\N " + "".join(f"{n:>12}" for n in nodes)
     print(header)
+    engine = ReconfigEngine(cost_model=cm)
     for i in nodes:
         row = [f"{i:<4}"]
         for n in nodes:
             if n == i:
-                row.append(f"{'—':>8}")
+                row.append(f"{'—':>12}")
                 continue
             if n > i:
-                cand = {
-                    "M": simulate_expansion(
-                        plan_sequential(i * C, n * C, [C] * n, Method.MERGE), cm).total,
-                    "M+par": simulate_expansion(
-                        plan_hypercube(i * C, n * C, C, Method.MERGE), cm).total,
-                }
+                cand = {}
+                for spec in registered_strategies():
+                    label = ("M" if spec.key == "sequential" else f"M+{spec.key}")
+                    plan = engine.plan_expand(
+                        i * C, n * C, C, strategy=spec.key, method=Method.MERGE)
+                    cand[label] = simulate_expansion(plan.spawn, cm).total
             else:
                 cand = {
                     "M+TS": simulate_shrink(
@@ -48,19 +58,66 @@ def main():
                         respawn_plan=plan_hypercube(i * C, n * C, C, Method.BASELINE),
                     ).total,
                 }
-            row.append(f"{min(cand, key=cand.get):>8}")
+            row.append(f"{min(cand, key=cand.get):>12}")
         print("".join(row))
 
-    print("\nphase breakdown, expansion 1 -> 32 nodes (parallel Merge):")
-    rep = simulate_expansion(plan_hypercube(C, 32 * C, C, Method.MERGE), cm)
-    for k in ("t_spawn", "t_sync", "t_connect", "t_reorder", "t_final"):
-        print(f"  {k:<10} {getattr(rep, k)*1e3:9.2f} ms")
-    print(f"  {'total':<10} {rep.total*1e3:9.2f} ms "
-          f"({rep.steps} spawn rounds, {rep.groups} groups)")
+
+def show_timeline(cm, C):
+    print("\nevent timeline, expansion 1 -> 32 nodes (parallel Merge):")
+    engine = ReconfigEngine(cost_model=cm, strategy=Strategy.PARALLEL_HYPERCUBE)
+    plan = engine.plan_expand(C, 32 * C, C)
+    tl = engine.timeline(plan)
+    for e in tl.events:
+        flag = " (async-overlappable)" if e.overlappable else ""
+        print(f"  {e.start*1e3:9.2f} -> {e.end*1e3:9.2f} ms  "
+              f"{e.stage.value:<10} {e.label}{flag}")
+    print(f"  total {tl.total*1e3:.2f} ms, "
+          f"ASYNC downtime {tl.downtime(asynchronous=True)*1e3:.2f} ms "
+          f"({plan.spawn.steps} spawn rounds, {len(plan.spawn.groups)} groups)")
     ts = simulate_shrink(ShrinkKind.TS, cm, ns=32 * C, nt=C,
                          doomed_world_sizes=[C] * 31)
     print(f"\nTS shrink 32 -> 1: {ts.total*1e3:.3f} ms "
-          f"({rep.total/ts.total:.0f}x faster than the expansion)")
+          f"({tl.total/ts.total:.0f}x faster than the expansion)")
+
+
+def replay_scenario(name):
+    sc = get_scenario(name)
+    print(f"scenario {sc.name!r}: {sc.description}")
+    print(f"  pool: {sc.core_pool or f'{sc.cores_per_node} cores/node'}, "
+          f"initial {sc.initial_nodes} nodes, profile {sc.profile}")
+    total = down = 0.0
+    for rec in run_scenario_sim(sc):
+        print(f"  step {rec.step:>3} {rec.kind:<10} {rec.mechanism:<22} "
+              f"{rec.nodes_before}->{rec.nodes_after} nodes  "
+              f"total {rec.est_wall_s*1e3:9.3f} ms  "
+              f"downtime {rec.downtime_s*1e3:9.3f} ms")
+        total += rec.est_wall_s
+        down += rec.downtime_s
+    print(f"  cumulative reconfiguration {total*1e3:.2f} ms, downtime {down*1e3:.2f} ms")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", choices=["mn5", "nasp"], default="mn5")
+    ap.add_argument("--cores", type=int, default=112)
+    ap.add_argument("--scenario", default=None,
+                    help="replay a registered declarative scenario")
+    ap.add_argument("--list-scenarios", action="store_true")
+    args = ap.parse_args()
+
+    if args.list_scenarios:
+        for sc in registered_scenarios():
+            print(f"{sc.name:<18} {sc.description}")
+        return
+    if args.scenario:
+        replay_scenario(args.scenario)
+        return
+
+    cm = MN5 if args.profile == "mn5" else NASP
+    nodes = [1, 2, 4, 8, 16, 24, 32]
+    print(f"preferred method per (I -> N), profile={args.profile}, C={args.cores}")
+    preferred_grid(cm, args.cores, nodes)
+    show_timeline(cm, args.cores)
 
 
 if __name__ == "__main__":

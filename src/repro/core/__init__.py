@@ -18,13 +18,28 @@ from .connect import (
     simulate_merges,
 )
 from .diffusive import plan_diffusive
-from .hypercube import nodes_at_step, plan_hypercube, procs_at_step, steps_required
-from .manager import (
-    MalleabilityManager,
+from .engine import (
+    ExecutionBackend,
+    ReconfigEngine,
+    ReconfigOutcome,
     ReconfigPlan,
     RedistributionSpec,
-    plan_sequential,
+    Stage,
+    StrategySpec,
+    Timeline,
+    TimelineEvent,
+    as_core_vector,
+    expansion_timeline,
+    get_strategy,
+    register_strategy,
+    registered_strategies,
+    running_vector,
+    shrink_timeline,
+    strategy_key,
 )
+from .hypercube import nodes_at_step, plan_hypercube, procs_at_step, steps_required
+from .manager import MalleabilityManager
+from .sequential import plan_sequential
 from .reorder import global_order, node_of_rank, reorder_key
 from .shrink import ClusterState, apply_shrink, plan_initial_world_shrink, plan_shrink
 from .sync import (
@@ -56,12 +71,19 @@ __all__ = [
     "ConnectRound",
     "Event",
     "EventGraph",
+    "ExecutionBackend",
     "GroupSpec",
     "MalleabilityManager",
     "Method",
     "RankInfo",
+    "ReconfigEngine",
+    "ReconfigOutcome",
     "ReconfigPlan",
     "RedistributionSpec",
+    "Stage",
+    "StrategySpec",
+    "Timeline",
+    "TimelineEvent",
     "ShrinkAction",
     "ShrinkActionKind",
     "ShrinkKind",
@@ -71,10 +93,13 @@ __all__ = [
     "Strategy",
     "World",
     "apply_shrink",
+    "as_core_vector",
     "assert_ports_before_release",
     "binary_connection_schedule",
     "build_sync_graph",
+    "expansion_timeline",
     "extend_graph_with_connection",
+    "get_strategy",
     "global_order",
     "node_of_rank",
     "nodes_at_step",
@@ -85,9 +110,14 @@ __all__ = [
     "plan_shrink",
     "port_openers",
     "procs_at_step",
+    "register_strategy",
+    "registered_strategies",
     "reorder_key",
     "required_ports",
+    "running_vector",
+    "shrink_timeline",
     "simulate_merges",
     "spawn_children",
     "steps_required",
+    "strategy_key",
 ]

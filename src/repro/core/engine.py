@@ -1,0 +1,612 @@
+"""ReconfigEngine: the single owner of the reconfiguration pipeline.
+
+The paper describes ONE cooperative pipeline (spawn rounds → tree sync →
+binary connect → reorder → final intercomm, plus TS/ZS/SS shrinks); this
+module is its single implementation point:
+
+* a **strategy registry** — the five spawning strategies (SEQUENTIAL,
+  SEQUENTIAL_PER_NODE, SINGLE, PARALLEL_HYPERCUBE, PARALLEL_DIFFUSIVE)
+  register themselves here, and third-party strategies can too, so the
+  simulator, the elastic runtime, the trainer, and the benchmarks all
+  dispatch through one table instead of hand-stitching strategy×method
+  matrices;
+* an **event timeline** — every plan is executed as an explicit list of
+  typed stage events with start/end times charged by a ``CostModel``.
+  ASYNC overlap is a *property of the timeline* (events flagged
+  ``overlappable`` hide under application compute), not downtime
+  arithmetic re-derived per consumer;
+* an **execution protocol** — backends (the cost simulator, the live
+  NodeGroup runtime) receive the same :class:`ReconfigPlan` objects and
+  apply them to their substrate while the engine charges the timeline.
+
+Stages map onto the paper: SPAWN (§4.1/§4.2), SYNC (§4.3), CONNECT
+(§4.4), REORDER (§4.5 Eq. 9), FINAL (the sources↔children intercomm),
+REDISTRIBUTION (stage 3), TERMINATE/ZOMBIFY/RESPAWN/TEARDOWN (§4.6-4.7
+TS/ZS/SS shrink mechanisms).
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable, Optional, Protocol, Sequence, Union
+
+from .connect import binary_connection_schedule, extend_graph_with_connection
+from .diffusive import plan_diffusive
+from .hypercube import plan_hypercube
+from .reorder import global_order
+from .sequential import plan_sequential
+from .shrink import ClusterState
+from .shrink import plan_shrink as _plan_shrink_actions
+from .sync import EventGraph, build_sync_graph
+from .types import Method, ShrinkKind, ShrinkPlan, SpawnPlan, Strategy
+
+if TYPE_CHECKING:  # runtime import would be circular (malleability → core)
+    from repro.malleability.cost_model import CostModel
+
+
+# =============================================================== timeline ==
+class Stage(enum.Enum):
+    """Typed reconfiguration stages (paper §4 + §4.6-4.7 shrinks)."""
+
+    SPAWN = "spawn"
+    SYNC = "sync"
+    CONNECT = "connect"
+    REORDER = "reorder"
+    FINAL = "final"
+    REDISTRIBUTION = "redistribution"
+    TERMINATE = "terminate"      # TS: doomed node-confined worlds exit
+    ZOMBIFY = "zombify"          # ZS: ranks sleep, nodes stay pinned
+    RESPAWN = "respawn"          # SS: the replacement world comes up
+    TEARDOWN = "teardown"        # SS: old world finalize + dealloc
+
+
+@dataclass(frozen=True)
+class TimelineEvent:
+    """One charged stage interval on the reconfiguration timeline."""
+
+    stage: Stage
+    start: float
+    end: float
+    label: str = ""
+    # True when MaM's ASYNC mode can hide this event under application
+    # compute (the spawn phase); downtime() subtracts exactly these.
+    overlappable: bool = False
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+@dataclass(frozen=True)
+class Timeline:
+    """An executed plan: ordered stage events + derived cost queries.
+
+    Both ``ExpansionReport.downtime`` and ``ReconfigRecord.downtime_s``
+    read off this object, so the two layers cannot disagree.
+    """
+
+    events: tuple[TimelineEvent, ...] = ()
+
+    @property
+    def total(self) -> float:
+        """Wall time of the whole reconfiguration."""
+        return max((e.end for e in self.events), default=0.0)
+
+    def span(self, stage: Stage) -> float:
+        """Summed duration of every event of ``stage``."""
+        return sum(e.duration for e in self.events if e.stage is stage)
+
+    def downtime(self, asynchronous: bool = False) -> float:
+        """App-visible stall.
+
+        ASYNC overlap is a property of the timeline: overlappable events
+        (the spawn phase) run under application compute, everything else
+        stalls the app.
+        """
+        if not asynchronous:
+            return self.total
+        return self.total - sum(e.duration for e in self.events if e.overlappable)
+
+    def as_rows(self) -> list[dict]:
+        return [
+            {
+                "stage": e.stage.value,
+                "label": e.label,
+                "start_s": e.start,
+                "end_s": e.end,
+                "duration_s": e.duration,
+                "overlappable": e.overlappable,
+            }
+            for e in self.events
+        ]
+
+
+class _TimelineBuilder:
+    """Appends events back-to-back (the pipeline stages are serial)."""
+
+    def __init__(self) -> None:
+        self._events: list[TimelineEvent] = []
+        self._t = 0.0
+
+    def add(self, stage: Stage, duration: float, label: str = "",
+            overlappable: bool = False) -> None:
+        if duration <= 0.0:
+            return
+        self._events.append(
+            TimelineEvent(stage, self._t, self._t + duration, label, overlappable)
+        )
+        self._t += duration
+
+    def extend(self, events: Sequence[TimelineEvent]) -> None:
+        for e in events:
+            self.add(e.stage, e.duration, e.label, e.overlappable)
+
+    def build(self) -> Timeline:
+        return Timeline(events=tuple(self._events))
+
+
+# ======================================================= strategy registry ==
+PlannerFn = Callable[[int, int, Union[int, Sequence[int]], Method], SpawnPlan]
+
+StrategyLike = Union[Strategy, str]
+
+
+@dataclass(frozen=True)
+class StrategySpec:
+    """One registered spawning strategy.
+
+    ``planner`` has the normalized signature ``(ns, nt, cores, method)``
+    where ``cores`` is either C (homogeneous cores-per-node) or the
+    per-node A vector.
+    """
+
+    key: str                      # registry key, e.g. "hypercube"
+    planner: PlannerFn
+    parallel: bool = False        # pays sync/connect/reorder phases (§4.3-4.5)
+    homogeneous_only: bool = False
+    description: str = ""
+
+
+_STRATEGY_REGISTRY: dict[str, StrategySpec] = {}
+
+
+def strategy_key(strategy: StrategyLike) -> str:
+    return strategy.value if isinstance(strategy, Strategy) else str(strategy)
+
+
+def register_strategy(spec: StrategySpec, *, overwrite: bool = False) -> StrategySpec:
+    """Register a spawning strategy (third-party strategies welcome)."""
+    if spec.key in _STRATEGY_REGISTRY and not overwrite:
+        raise ValueError(f"strategy {spec.key!r} already registered")
+    _STRATEGY_REGISTRY[spec.key] = spec
+    return spec
+
+
+def get_strategy(strategy: StrategyLike) -> StrategySpec:
+    key = strategy_key(strategy)
+    try:
+        return _STRATEGY_REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {key!r}; registered: {sorted(_STRATEGY_REGISTRY)}"
+        ) from None
+
+
+def registered_strategies() -> tuple[StrategySpec, ...]:
+    """All specs in registration order (built-ins first)."""
+    return tuple(_STRATEGY_REGISTRY.values())
+
+
+# ---- cores normalization helpers -------------------------------------------
+def as_core_vector(cores: Union[int, Sequence[int]], nt: int) -> list[int]:
+    """C scalar -> per-node A vector wide enough for NT ranks."""
+    if isinstance(cores, int):
+        n_nodes = -(-nt // cores)
+        return [cores] * n_nodes
+    return [int(c) for c in cores]
+
+
+def running_vector(a_vec: Sequence[int], ns: int) -> list[int]:
+    """Pack the NS sources greedily into the allocation vector (R)."""
+    out = []
+    remaining = ns
+    for a in a_vec:
+        take = min(a, remaining)
+        out.append(take)
+        remaining -= take
+    if remaining:
+        raise ValueError("sources do not fit in the allocation vector")
+    return out
+
+
+def _as_homogeneous(cores: Union[int, Sequence[int]]) -> int:
+    if isinstance(cores, int):
+        return cores
+    widths = {int(c) for c in cores}
+    if len(widths) != 1:
+        raise ValueError(
+            "hypercube strategy requires homogeneous allocations; "
+            "use PARALLEL_DIFFUSIVE (paper §4.2)"
+        )
+    return widths.pop()
+
+
+# ---- built-in planners (normalized signatures) ------------------------------
+def _plan_seq(ns: int, nt: int, cores, method: Method) -> SpawnPlan:
+    return plan_sequential(ns, nt, as_core_vector(cores, nt), method)
+
+
+def _plan_per_node(ns: int, nt: int, cores, method: Method) -> SpawnPlan:
+    return plan_sequential(ns, nt, as_core_vector(cores, nt), method, per_node=True)
+
+
+def _plan_single(ns: int, nt: int, cores, method: Method) -> SpawnPlan:
+    return plan_sequential(ns, nt, as_core_vector(cores, nt), method, single=True)
+
+
+def _plan_hypercube(ns: int, nt: int, cores, method: Method) -> SpawnPlan:
+    return plan_hypercube(ns, nt, _as_homogeneous(cores), method)
+
+
+def _plan_diffusive(ns: int, nt: int, cores, method: Method) -> SpawnPlan:
+    a_vec = as_core_vector(cores, nt)
+    return plan_diffusive(a_vec, running_vector(a_vec, ns), method)
+
+
+register_strategy(StrategySpec(
+    key=Strategy.SEQUENTIAL.value, planner=_plan_seq,
+    description="one collective spawn; multi-node world (classic Merge)"))
+register_strategy(StrategySpec(
+    key=Strategy.SEQUENTIAL_PER_NODE.value, planner=_plan_per_node,
+    description="one spawn per node, serial ([14]); O(nodes) latency"))
+register_strategy(StrategySpec(
+    key=Strategy.SINGLE.value, planner=_plan_single,
+    description="rank 0 spawns alone, informs the rest (MaM Single)"))
+register_strategy(StrategySpec(
+    key=Strategy.PARALLEL_HYPERCUBE.value, planner=_plan_hypercube,
+    parallel=True, homogeneous_only=True,
+    description="§4.1 hypercube: (C+1)^s growth, homogeneous pools"))
+register_strategy(StrategySpec(
+    key=Strategy.PARALLEL_DIFFUSIVE.value, planner=_plan_diffusive,
+    parallel=True,
+    description="§4.2 iterative diffusive: heterogeneous pools"))
+
+
+# ================================================================== plans ==
+@dataclass(frozen=True)
+class RedistributionSpec:
+    """Stage-3 data movement: which final ranks receive which data shards.
+
+    ``layout`` maps final global rank -> (group_id, local_rank); the
+    elastic runtime turns this into a device permutation + resharding
+    plan; the simulator charges bytes/bandwidth for it.
+    """
+
+    layout: tuple[tuple[int, int], ...]
+    ns: int
+    nt: int
+    bytes_per_rank: int = 0
+
+
+@dataclass(frozen=True)
+class ReconfigPlan:
+    """Full output of the process-management stage.
+
+    Self-contained: carries everything a backend or the timeline builder
+    needs (including doomed world sizes for shrink charging), so it can
+    be executed by any backend without consulting cluster state again.
+    """
+
+    kind: str                      # "expand" | "shrink" | "noop"
+    method: Method
+    strategy: StrategyLike
+    asynchronous: bool
+    ns: int = 0
+    nt: int = 0
+    spawn: Optional[SpawnPlan] = None
+    shrink: Optional[ShrinkPlan] = None
+    sync_graph: Optional[EventGraph] = None
+    connect_rounds: int = 0
+    redistribution: Optional[RedistributionSpec] = None
+    shrink_world_sizes: tuple[int, ...] = ()   # sizes of TS-doomed worlds
+
+
+@dataclass(frozen=True)
+class ReconfigOutcome:
+    """One executed reconfiguration: the plan + its charged timeline."""
+
+    plan: ReconfigPlan
+    timeline: Timeline
+
+    @property
+    def total_s(self) -> float:
+        return self.timeline.total
+
+    @property
+    def downtime_s(self) -> float:
+        return self.timeline.downtime(self.plan.asynchronous)
+
+
+class ExecutionBackend(Protocol):
+    """A substrate that applies plans (live NodeGroups, bookkeeping, ...)."""
+
+    def apply_expand(self, plan: ReconfigPlan) -> None: ...
+
+    def apply_shrink(self, plan: ReconfigPlan) -> None: ...
+
+
+# ======================================================= timeline builders ==
+def _is_parallel(plan: SpawnPlan) -> bool:
+    if isinstance(plan.strategy, Strategy):
+        spec = _STRATEGY_REGISTRY.get(plan.strategy.value)
+    else:  # third-party plans carry their registry key
+        spec = _STRATEGY_REGISTRY.get(str(plan.strategy))
+    if spec is not None:
+        return spec.parallel
+    return plan.strategy in (Strategy.PARALLEL_HYPERCUBE, Strategy.PARALLEL_DIFFUSIVE)
+
+
+def _spawn_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
+    """Spawn phase per strategy; every event is ASYNC-overlappable."""
+    if not plan.groups:
+        return
+    if plan.strategy in (Strategy.SEQUENTIAL, Strategy.SINGLE):
+        g = plan.groups[0]
+        dur = cm.spawn_call(g.size, len(g.nodes_spanned()))
+        if plan.strategy is Strategy.SINGLE:
+            # rank 0 informs the rest afterwards (MaM Single strategy)
+            dur += cm.t_token * math.ceil(math.log2(max(plan.ns, 2)))
+        tb.add(Stage.SPAWN, dur, label="collective spawn", overlappable=True)
+        return
+    if plan.strategy is Strategy.SEQUENTIAL_PER_NODE:
+        for g in plan.groups:
+            tb.add(Stage.SPAWN, cm.spawn_call(g.size, 1),
+                   label=f"spawn node {g.node}", overlappable=True)
+        return
+    # Parallel strategies: rounds of concurrent single-node spawns.
+    initial_nodes = sum(1 for r in plan.running if r > 0)
+    for s in range(1, plan.steps + 1):
+        round_groups = plan.groups_in_step(s)
+        if not round_groups:
+            continue
+        oversub = plan.method is Method.BASELINE and any(
+            g.node < initial_nodes for g in round_groups
+        )
+        dur = cm.concurrent_round(
+            [(g.size, 1) for g in round_groups], oversubscribed=oversub
+        )
+        tb.add(Stage.SPAWN, dur, label=f"round {s} ({len(round_groups)} groups)",
+               overlappable=True)
+
+
+def _sync_event(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
+    """§4.3 three-stage synchronization along the spawn tree.
+
+    Critical path: deepest leaf sends up through ``depth`` levels (token +
+    per-group barrier each), source barriers, then the release token walks
+    back down the same depth.
+    """
+    if not _is_parallel(plan) or not plan.groups:
+        return
+    depth = plan.steps
+    max_group = max(plan.group_sizes)
+    per_level = cm.t_token + cm.barrier(max_group) + cm.comm_split(max_group)
+    ports = cm.t_port  # opened concurrently by all acceptor roots
+    dur = ports + per_level + depth * 2 * (cm.t_token + cm.barrier(max_group))
+    tb.add(Stage.SYNC, dur, label=f"tree sync depth {depth}")
+
+
+def _connect_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
+    """§4.4 binary connection: ceil(log2 G) rounds of pairwise merges."""
+    if not _is_parallel(plan):
+        return
+    sizes = {g.gid: g.size for g in plan.groups}
+    for i, rnd in enumerate(binary_connection_schedule(len(plan.groups))):
+        round_cost = 0.0
+        for acc, conn in rnd.pairs:
+            merged = sizes[acc] + sizes[conn]
+            round_cost = max(round_cost, cm.connect_merge(merged))
+            sizes[acc] = merged
+            del sizes[conn]
+        tb.add(Stage.CONNECT, round_cost,
+               label=f"connect round {i + 1} ({len(rnd.pairs)} merges)")
+
+
+def expansion_timeline(
+    plan: SpawnPlan, cm: "CostModel", bytes_total: int = 0
+) -> Timeline:
+    """Charge one expansion as the paper's serial stage pipeline."""
+    tb = _TimelineBuilder()
+    _spawn_events(tb, plan, cm)
+    _sync_event(tb, plan, cm)
+    _connect_events(tb, plan, cm)
+    parallel = _is_parallel(plan)
+    if parallel:
+        tb.add(Stage.REORDER, cm.comm_split(sum(plan.group_sizes)),
+               label="Eq. 9 reorder split")
+    # Final sources<->children intercomm (all strategies pay a merge of the
+    # full target world; the classic strategies do it inside the spawn call
+    # via the intercommunicator MPI_Comm_spawn returns).
+    final = cm.connect_merge(plan.nt) if parallel else cm.beta_connect * plan.nt
+    tb.add(Stage.FINAL, final, label="final intercomm merge")
+    if bytes_total > 0:
+        tb.add(Stage.REDISTRIBUTION, cm.redistribution(bytes_total),
+               label=f"redistribute {bytes_total} B")
+    return tb.build()
+
+
+def shrink_timeline(
+    kind: ShrinkKind,
+    cm: "CostModel",
+    *,
+    ns: int = 0,
+    nt: int = 0,
+    doomed_world_sizes: Optional[Sequence[int]] = None,
+    respawn_plan: Optional[SpawnPlan] = None,
+) -> Timeline:
+    """Charge one shrink by mechanism (§4.6-4.7).
+
+    * TS — release tokens to doomed worlds; they exit; root updates its
+      structure.  No spawning at all (the paper's headline).
+    * ZS — same token path, but ranks only go to sleep; nodes stay pinned.
+    * SS — the Baseline path: spawn the NT-sized world (optionally with a
+      parallel strategy: pass ``respawn_plan``), tear the old world down.
+    """
+    tb = _TimelineBuilder()
+    doomed = list(doomed_world_sizes or [])
+    if kind is ShrinkKind.TS:
+        dur = cm.ts_terminate(doomed or [1]) + cm.t_token
+        tb.add(Stage.TERMINATE, dur,
+               label=f"TS terminate {len(doomed) or 1} worlds")
+    elif kind is ShrinkKind.ZS:
+        tb.add(Stage.ZOMBIFY, cm.t_token * 2, label="ZS mark + ack")
+    else:  # SS
+        if respawn_plan is not None:
+            tb.extend(expansion_timeline(respawn_plan, cm).events)
+            tb.add(Stage.TEARDOWN, cm.t_teardown_per_proc * ns,
+                   label="old world finalize")
+        else:
+            # No respawn plan: estimate the target node count from the doomed
+            # world widths (worlds are node-confined, so a world size is a
+            # node width); with no width information degenerate to 1
+            # proc/node.
+            width = max(doomed) if doomed else 1
+            tb.add(
+                Stage.RESPAWN,
+                cm.ss_respawn(nt, max(1, -(-nt // width)), ns),
+                label="SS respawn",
+            )
+    return tb.build()
+
+
+# ================================================================== engine ==
+@dataclass
+class ReconfigEngine:
+    """Plans and executes reconfigurations through the strategy registry.
+
+    One engine per job.  All four consumer layers sit on top of it:
+    :class:`repro.core.MalleabilityManager` (facade),
+    :mod:`repro.malleability.simulator` (timeline-charging backend),
+    :class:`repro.elastic.ElasticRuntime` (live NodeGroup backend), and
+    the benchmark drivers (registry iteration).
+    """
+
+    method: Method = Method.MERGE
+    strategy: StrategyLike = Strategy.PARALLEL_HYPERCUBE
+    asynchronous: bool = False
+    bytes_per_rank: int = 0
+    cost_model: Optional["CostModel"] = None
+
+    def __post_init__(self) -> None:
+        if self.cost_model is None:
+            # Runtime-local import: core must stay importable without
+            # triggering the malleability package at module load.
+            from repro.malleability.cost_model import MN5
+
+            self.cost_model = MN5
+
+    # ------------------------------------------------------------- planning --
+    def plan_expand(
+        self,
+        ns: int,
+        nt: int,
+        cores: Union[int, Sequence[int]],
+        *,
+        strategy: Optional[StrategyLike] = None,
+        method: Optional[Method] = None,
+    ) -> ReconfigPlan:
+        """Plan an NS -> NT expansion onto the given allocation.
+
+        ``cores`` is either C (homogeneous) or the per-node A vector
+        (heterogeneous, requires a vector-capable strategy).
+        """
+        spec = get_strategy(strategy if strategy is not None else self.strategy)
+        m = method if method is not None else self.method
+        spawn = spec.planner(ns, nt, cores, m)
+        graph = None
+        rounds = 0
+        if spec.parallel and spawn.groups:
+            graph = build_sync_graph(spawn)
+            extend_graph_with_connection(graph, spawn)
+            rounds = len(binary_connection_schedule(len(spawn.groups)))
+        redistribution = RedistributionSpec(
+            layout=tuple(global_order(spawn)) if spawn.groups else (),
+            ns=ns,
+            nt=nt,
+            bytes_per_rank=self.bytes_per_rank,
+        )
+        return ReconfigPlan(
+            kind="expand",
+            method=m,
+            strategy=spawn.strategy,
+            asynchronous=self.asynchronous,
+            ns=ns,
+            nt=nt,
+            spawn=spawn,
+            sync_graph=graph,
+            connect_rounds=rounds,
+            redistribution=redistribution,
+        )
+
+    def plan_shrink(
+        self,
+        state: ClusterState,
+        release_nodes=None,
+        release_cores=None,
+    ) -> ReconfigPlan:
+        """Plan a shrink against live cluster bookkeeping.
+
+        The doomed world sizes are captured into the plan so the timeline
+        can be charged later without re-reading (possibly mutated) state.
+        """
+        shrink = _plan_shrink_actions(state, release_nodes, release_cores)
+        doomed_sizes = tuple(
+            state.worlds[wid].size
+            for wid in shrink.doomed_wids()
+            if wid in state.worlds
+        )
+        zombified = sum(
+            len(a.ranks) for a in shrink.actions if a.kind.value == "zombify_ranks"
+        )
+        ns = sum(w.size for w in state.worlds.values())
+        return ReconfigPlan(
+            kind="shrink",
+            method=self.method,
+            strategy=self.strategy,
+            asynchronous=self.asynchronous,
+            ns=ns,
+            nt=max(0, ns - sum(doomed_sizes) - zombified),
+            shrink=shrink,
+            shrink_world_sizes=doomed_sizes,
+        )
+
+    # ------------------------------------------------------------- timeline --
+    def timeline(self, plan: ReconfigPlan) -> Timeline:
+        """Charge a plan as an event timeline with this engine's CostModel."""
+        if plan.kind == "expand":
+            assert plan.spawn is not None
+            return expansion_timeline(plan.spawn, self.cost_model)
+        if plan.kind == "shrink":
+            assert plan.shrink is not None
+            return shrink_timeline(
+                plan.shrink.kind,
+                self.cost_model,
+                ns=plan.ns,
+                nt=plan.nt,
+                doomed_world_sizes=list(plan.shrink_world_sizes) or [1],
+            )
+        return Timeline()
+
+    # ------------------------------------------------------------- execution --
+    def execute(
+        self, plan: ReconfigPlan, backend: Optional[ExecutionBackend] = None
+    ) -> ReconfigOutcome:
+        """Charge the timeline, then let the backend apply the plan."""
+        tl = self.timeline(plan)
+        if backend is not None:
+            if plan.kind == "expand":
+                backend.apply_expand(plan)
+            elif plan.kind == "shrink":
+                backend.apply_shrink(plan)
+        return ReconfigOutcome(plan=plan, timeline=tl)

@@ -1,10 +1,12 @@
 """MalleabilityManager — the MaM-equivalent facade (paper §3, §4.6).
 
-Given a current cluster state and a target allocation, produce a
-:class:`ReconfigPlan` describing the four malleability stages:
+A thin application-facing wrapper over :class:`repro.core.engine.ReconfigEngine`:
+it holds the job-wide configuration (method, strategy, ASYNC flag, data
+volume) plus the live :class:`ClusterState`, and delegates all planning
+to the engine's strategy registry.  The four malleability stages:
 
   1. reconfiguration feasibility (delegated to the RMS / caller),
-  2. process management        (spawn plan or shrink plan),
+  2. process management        (spawn plan or shrink plan — the engine),
   3. data redistribution       (a declarative spec the elastic runtime
                                 or the simulator executes),
   4. resume.
@@ -16,138 +18,16 @@ PARALLEL_DIFFUSIVE spawning strategies and the ASYNC overlap flag.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Sequence
 
-from .connect import binary_connection_schedule, extend_graph_with_connection
-from .diffusive import plan_diffusive
-from .hypercube import plan_hypercube
-from .reorder import global_order
-from .shrink import ClusterState, plan_shrink
-from .sync import EventGraph, build_sync_graph
-from .types import (
-    SOURCE_GID,
-    GroupSpec,
-    Method,
-    ShrinkPlan,
-    SpawnPlan,
-    Strategy,
-    StepTrace,
+from .engine import (
+    ReconfigEngine,
+    ReconfigPlan,
+    RedistributionSpec,  # noqa: F401  (re-exported: historical home)
 )
-
-
-def plan_sequential(
-    ns: int,
-    nt: int,
-    cores: Sequence[int],
-    method: Method,
-    per_node: bool = False,
-    single: bool = False,
-) -> SpawnPlan:
-    """Classic (non-parallel) spawn plans used as baselines.
-
-    * ``per_node=False``: ONE collective ``MPI_Comm_spawn`` creating every
-      new rank at once; the spawned world spans all target nodes — fast to
-      expand but structurally incapable of TS (the paper's motivation).
-    * ``per_node=True``: one spawn per node, issued serially by the root
-      ([14]'s approach) — node-confined worlds but O(nodes) latency.
-    * ``single``: only rank 0 drives the spawns (MaM's Single strategy).
-    """
-    cores = tuple(int(c) for c in cores)
-    n_nodes = len(cores)
-    spawn_total = nt - ns if method is Method.MERGE else nt
-    if spawn_total < 0:
-        raise ValueError("expansion planner called for a shrink")
-    running: list[int] = []
-    remaining = ns
-    for c in cores:
-        take = min(c, remaining)
-        running.append(take)
-        remaining -= take
-    s_vec = [a - r for a, r in zip(cores, running)] if method is Method.MERGE else list(cores)
-
-    groups: list[GroupSpec] = []
-    if per_node:
-        gid = 0
-        for node, size in enumerate(s_vec):
-            if size <= 0:
-                continue
-            groups.append(
-                GroupSpec(
-                    gid=gid,
-                    node=node,
-                    size=size,
-                    step=gid + 1,  # serial: one round each
-                    parent_gid=SOURCE_GID,
-                    parent_rank=0,
-                )
-            )
-            gid += 1
-    elif spawn_total > 0:
-        spanned = tuple(i for i, s in enumerate(s_vec) if s > 0)
-        groups.append(
-            GroupSpec(
-                gid=0,
-                node=spanned[0] if spanned else 0,
-                size=spawn_total,
-                step=1,
-                parent_gid=SOURCE_GID,
-                parent_rank=0,
-                spans=spanned,
-            )
-        )
-
-    strategy = (
-        Strategy.SEQUENTIAL_PER_NODE if per_node else (Strategy.SINGLE if single else Strategy.SEQUENTIAL)
-    )
-    steps = len(groups) if per_node else (1 if groups else 0)
-    trace = [StepTrace(s=0, t=ns, g=0, lam=0, T=sum(1 for r in running if r), G=0)]
-    t = ns
-    for i, g in enumerate(groups):
-        t += g.size
-        trace.append(StepTrace(s=i + 1, t=t, g=g.size, lam=0, T=0, G=0))
-    return SpawnPlan(
-        method=method,
-        strategy=strategy,
-        nodes=n_nodes,
-        cores=cores,
-        running=tuple(running),
-        to_spawn=tuple(s_vec),
-        groups=tuple(groups),
-        steps=steps,
-        trace=tuple(trace),
-        ns=ns,
-        nt=nt,
-    )
-
-
-@dataclass(frozen=True)
-class RedistributionSpec:
-    """Stage-3 data movement: which final ranks receive which data shards.
-
-    ``layout`` maps final global rank -> (group_id, local_rank); the
-    elastic runtime turns this into a device permutation + resharding
-    plan; the simulator charges bytes/bandwidth for it.
-    """
-
-    layout: tuple[tuple[int, int], ...]
-    ns: int
-    nt: int
-    bytes_per_rank: int = 0
-
-
-@dataclass(frozen=True)
-class ReconfigPlan:
-    """Full output of the process-management stage."""
-
-    kind: str                      # "expand" | "shrink" | "noop"
-    method: Method
-    strategy: Strategy
-    asynchronous: bool
-    spawn: Optional[SpawnPlan] = None
-    shrink: Optional[ShrinkPlan] = None
-    sync_graph: Optional[EventGraph] = None
-    connect_rounds: int = 0
-    redistribution: Optional[RedistributionSpec] = None
+from .sequential import plan_sequential  # noqa: F401  (re-exported: historical home)
+from .shrink import ClusterState
+from .types import Method, Strategy
 
 
 @dataclass
@@ -159,6 +39,15 @@ class MalleabilityManager:
     asynchronous: bool = False
     bytes_per_rank: int = 0
     state: ClusterState = field(default_factory=ClusterState)
+
+    @property
+    def engine(self) -> ReconfigEngine:
+        return ReconfigEngine(
+            method=self.method,
+            strategy=self.strategy,
+            asynchronous=self.asynchronous,
+            bytes_per_rank=self.bytes_per_rank,
+        )
 
     # -- stage 2: process management --------------------------------------------
     def plan_expand(
@@ -172,78 +61,7 @@ class MalleabilityManager:
         ``cores`` is either C (homogeneous, enables the hypercube) or the
         per-node A vector (heterogeneous, requires the diffusive strategy).
         """
-        homogeneous = isinstance(cores, int)
-        if self.strategy is Strategy.PARALLEL_HYPERCUBE:
-            if not homogeneous:
-                raise ValueError(
-                    "hypercube strategy requires homogeneous allocations; "
-                    "use PARALLEL_DIFFUSIVE (paper §4.2)"
-                )
-            spawn = plan_hypercube(ns, nt, cores, self.method)
-        elif self.strategy is Strategy.PARALLEL_DIFFUSIVE:
-            a_vec = self._as_vector(cores, nt)
-            r_vec = self._running_vector(a_vec, ns)
-            spawn = plan_diffusive(a_vec, r_vec, self.method)
-        else:
-            a_vec = self._as_vector(cores, nt)
-            spawn = plan_sequential(
-                ns,
-                nt,
-                a_vec,
-                self.method,
-                per_node=self.strategy is Strategy.SEQUENTIAL_PER_NODE,
-                single=self.strategy is Strategy.SINGLE,
-            )
-
-        graph = None
-        rounds = 0
-        if spawn.strategy in (Strategy.PARALLEL_HYPERCUBE, Strategy.PARALLEL_DIFFUSIVE):
-            graph = build_sync_graph(spawn)
-            extend_graph_with_connection(graph, spawn)
-            rounds = len(binary_connection_schedule(len(spawn.groups)))
-        redistribution = RedistributionSpec(
-            layout=tuple(global_order(spawn)) if spawn.groups else (),
-            ns=ns,
-            nt=nt,
-            bytes_per_rank=self.bytes_per_rank,
-        )
-        return ReconfigPlan(
-            kind="expand",
-            method=self.method,
-            strategy=spawn.strategy,
-            asynchronous=self.asynchronous,
-            spawn=spawn,
-            sync_graph=graph,
-            connect_rounds=rounds,
-            redistribution=redistribution,
-        )
+        return self.engine.plan_expand(ns, nt, cores)
 
     def plan_shrink(self, release_nodes=None, release_cores=None) -> ReconfigPlan:
-        shrink = plan_shrink(self.state, release_nodes, release_cores)
-        return ReconfigPlan(
-            kind="shrink",
-            method=self.method,
-            strategy=self.strategy,
-            asynchronous=self.asynchronous,
-            shrink=shrink,
-        )
-
-    # -- helpers -----------------------------------------------------------------
-    @staticmethod
-    def _as_vector(cores: Sequence[int] | int, nt: int) -> list[int]:
-        if isinstance(cores, int):
-            n_nodes = -(-nt // cores)
-            return [cores] * n_nodes
-        return [int(c) for c in cores]
-
-    @staticmethod
-    def _running_vector(a_vec: Sequence[int], ns: int) -> list[int]:
-        out = []
-        remaining = ns
-        for a in a_vec:
-            take = min(a, remaining)
-            out.append(take)
-            remaining -= take
-        if remaining:
-            raise ValueError("sources do not fit in the allocation vector")
-        return out
+        return self.engine.plan_shrink(self.state, release_nodes, release_cores)

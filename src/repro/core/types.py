@@ -183,3 +183,14 @@ class ShrinkPlan:
     actions: tuple[ShrinkAction, ...]
     nodes_returned: tuple[int, ...]    # nodes actually handed back to the RMS
     nodes_pinned: tuple[int, ...]      # nodes that stay pinned by zombies
+
+    def doomed_wids(self) -> tuple[int, ...]:
+        """Worlds this plan terminates (the single source both the engine's
+        timeline charging and the live backend's node release consume)."""
+        return tuple(
+            a.wid
+            for a in self.actions
+            if a.wid is not None
+            and a.kind in (ShrinkActionKind.TERMINATE_WORLD,
+                           ShrinkActionKind.AWAKEN_AND_TERMINATE)
+        )

@@ -48,3 +48,19 @@ class SimulatedRMS:
                 nodes = (arg,) if isinstance(arg, int) else tuple(arg)
                 out.append(Event(step=step, kind=kind, nodes=nodes))
         return SimulatedRMS(script=out)
+
+    @staticmethod
+    def from_scenario(scenario) -> "SimulatedRMS":
+        """Feed a declarative :class:`repro.malleability.scenarios.Scenario`
+        trace through the live event loop — the exact trace the simulator
+        executes, so timeline-derived downtimes agree across both paths."""
+        out = [
+            Event(
+                step=e.step,
+                kind=EventKind(e.kind),
+                nodes=tuple(e.nodes),
+                target_nodes=e.target_nodes,
+            )
+            for e in sorted(scenario.events, key=lambda e: e.step)
+        ]
+        return SimulatedRMS(script=out)

@@ -1,42 +1,39 @@
 """ElasticRuntime: the paper's reconfiguration pipeline on live JAX state.
 
-Maps the four malleability stages onto real device groups:
+A live :class:`~repro.core.engine.ExecutionBackend`: the
+:class:`~repro.core.engine.ReconfigEngine` plans every resize through its
+strategy registry and charges the event timeline; this backend applies
+the same plan objects to real device groups:
 
   1. feasibility        — the (simulated) RMS grants/reclaims nodes;
-  2. process management — a parallel SpawnPlan brings NodeGroups up
-                          (hypercube for homogeneous pools, diffusive for
-                          heterogeneous), TS terminates whole groups;
+  2. process management — a SpawnPlan brings NodeGroups up (hypercube for
+                          homogeneous pools, diffusive for heterogeneous),
+                          TS terminates whole groups;
   3. data redistribution— the caller reshards its pytrees onto the new
                           mesh (see :mod:`repro.elastic.reshard`);
   4. resume             — the caller re-jits its step for the new mesh.
 
-Reconfiguration *cost* is charged by the calibrated simulator (this host
-has one real device), so every record carries the estimated wall time a
-real cluster would observe alongside the actual resharding stats.
+Reconfiguration *cost* is read off the engine's timeline (this host has
+one real device), so every record carries the estimated wall time a real
+cluster would observe alongside the actual resharding stats — the same
+timeline the simulator reports, by construction.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
-import jax
 from jax.sharding import Mesh
 
 from repro.core import (
     ClusterState,
-    MalleabilityManager,
     Method,
-    ShrinkKind,
+    ReconfigEngine,
+    ReconfigPlan,
     Strategy,
     apply_shrink,
-    plan_shrink,
 )
-from repro.malleability import (
-    MN5,
-    CostModel,
-    simulate_expansion,
-    simulate_shrink,
-)
+from repro.malleability import MN5, CostModel
 
 from .node_group import DevicePool, NodeGroup
 
@@ -47,8 +44,8 @@ class ReconfigRecord:
     mechanism: str             # strategy or TS/ZS/SS
     nodes_before: int
     nodes_after: int
-    est_wall_s: float          # simulated reconfiguration cost
-    downtime_s: float          # app-visible stall (Async overlaps spawn)
+    est_wall_s: float          # timeline total (simulated reconfiguration cost)
+    downtime_s: float          # timeline downtime (Async overlaps spawn)
     steps: int = 0             # spawn rounds (expansions)
     groups: int = 0
     nodes_returned: tuple[int, ...] = ()
@@ -66,13 +63,33 @@ class ElasticRuntime:
         cost_model: CostModel = MN5,
         asynchronous: bool = False,
         initial_nodes: int = 1,
+        engine: Optional[ReconfigEngine] = None,
     ):
         self.pool = pool or DevicePool()
-        self.cost_model = cost_model
-        self.manager = MalleabilityManager(
-            method=method, strategy=strategy, asynchronous=asynchronous
+        if engine is not None:
+            overridden = [
+                name for name, value, default in (
+                    ("method", method, Method.MERGE),
+                    ("strategy", strategy, Strategy.PARALLEL_HYPERCUBE),
+                    ("cost_model", cost_model, MN5),
+                    ("asynchronous", asynchronous, False),
+                )
+                if value is not default and value != default
+            ]
+            if overridden:
+                raise ValueError(
+                    f"pass {overridden} on the engine, not the runtime: an "
+                    "explicit `engine` already carries those knobs and the "
+                    "runtime would silently ignore them"
+                )
+        self.engine = engine or ReconfigEngine(
+            method=method,
+            strategy=strategy,
+            asynchronous=asynchronous,
+            cost_model=cost_model,
         )
-        self.state: ClusterState = self.manager.state
+        self.cost_model = self.engine.cost_model
+        self.state = ClusterState()
         self.groups: dict[int, NodeGroup] = {}   # wid -> NodeGroup
         self.history: list[ReconfigRecord] = []
         # initial allocation: one world; if it spans several nodes it is the
@@ -107,6 +124,32 @@ class ElasticRuntime:
 
         return Mesh(np.asarray(devs, dtype=object).reshape(shape), axes)
 
+    # -------------------------------------------------- backend protocol --
+    def apply_expand(self, plan: ReconfigPlan) -> None:
+        """Bring up one NodeGroup per spawned group (each node-confined)."""
+        assert plan.spawn is not None
+        for _g in plan.spawn.groups:
+            node, devs = self.pool.acquire_any()
+            w = self.state.add_world([node], [len(devs)])
+            self.groups[w.wid] = NodeGroup(gid=w.wid, node=node, devices=devs)
+        self.state.expansions_done += 1
+
+    def apply_shrink(self, plan: ReconfigPlan) -> None:
+        """Terminate doomed worlds, return their devices to the pool."""
+        assert plan.shrink is not None
+        doomed_wids = plan.shrink.doomed_wids()
+        doomed_nodes = {
+            wid: self.state.worlds[wid].nodes
+            for wid in doomed_wids
+            if wid in self.state.worlds
+        }
+        apply_shrink(self.state, plan.shrink)
+        for wid in doomed_wids:
+            group = self.groups.pop(wid, None)
+            if group is not None:
+                for node in doomed_nodes.get(wid, (group.node,)):
+                    self.pool.release(node)
+
     # ---------------------------------------------------------------- expand --
     def expand(self, target_nodes: int) -> ReconfigRecord:
         """Grow the job to ``target_nodes`` NodeGroup-confined nodes."""
@@ -115,83 +158,52 @@ class ElasticRuntime:
             raise ValueError("expand() requires target_nodes > current nodes")
         cpn = self.pool.devices_per_node
         ns, nt = before * cpn, target_nodes * cpn
-        if self.manager.strategy is Strategy.PARALLEL_DIFFUSIVE:
-            plan = self.manager.plan_expand(ns, nt, [cpn] * target_nodes)
-        else:
-            plan = self.manager.plan_expand(ns, nt, cpn)
+        plan = self.engine.plan_expand(ns, nt, self._cores_arg(cpn, target_nodes))
+        outcome = self.engine.execute(plan, backend=self)
+
         spawn = plan.spawn
         assert spawn is not None
-        sim = simulate_expansion(spawn, self.cost_model, self.manager.asynchronous)
-
-        # Bring up one NodeGroup per spawned group (each node-confined).
-        for g in spawn.groups:
-            node, devs = self.pool.acquire_any()
-            w = self.state.add_world([node], [len(devs)])
-            self.groups[w.wid] = NodeGroup(gid=w.wid, node=node, devices=devs)
-        self.state.expansions_done += 1
-
         rec = ReconfigRecord(
             kind="expand",
             mechanism=spawn.strategy.value,
             nodes_before=before,
             nodes_after=self.n_nodes,
-            est_wall_s=sim.total,
-            downtime_s=sim.downtime,
-            steps=sim.steps,
-            groups=sim.groups,
+            est_wall_s=outcome.total_s,
+            downtime_s=outcome.downtime_s,
+            steps=spawn.steps,
+            groups=len(spawn.groups),
         )
         self.history.append(rec)
         return rec
 
+    def _cores_arg(self, cpn: int, target_nodes: int):
+        """Vector-capable strategies get the explicit A vector."""
+        from repro.core import get_strategy
+
+        if get_strategy(self.engine.strategy).homogeneous_only:
+            return cpn
+        return [cpn] * target_nodes
+
     # ---------------------------------------------------------------- shrink --
     def shrink(self, n_nodes_to_release: int, kind: str = "shrink") -> ReconfigRecord:
         """TS-shrink: terminate the highest-node groups, return their devices."""
-        before = self.n_nodes
         victims = sorted(self.state.nodes_in_use())[-n_nodes_to_release:]
         return self.shrink_nodes(victims, kind=kind)
 
     def shrink_nodes(self, victims: list[int], kind: str = "shrink") -> ReconfigRecord:
         before = self.n_nodes
-        plan = plan_shrink(self.state, release_nodes=victims)
-        doomed_sizes = [
-            self.state.worlds[a.wid].size
-            for a in plan.actions
-            if a.wid is not None and a.wid in self.state.worlds
-            and a.kind.value in ("terminate_world", "awaken_and_terminate")
-        ]
-        sim = simulate_shrink(
-            plan.kind,
-            self.cost_model,
-            ns=sum(w.size for w in self.state.worlds.values()),
-            nt=0,
-            doomed_world_sizes=doomed_sizes or [1],
-            nodes_returned=len(plan.nodes_returned),
-            nodes_pinned=len(plan.nodes_pinned),
-        )
-        doomed_wids = [
-            a.wid for a in plan.actions
-            if a.wid is not None and a.kind.value in ("terminate_world", "awaken_and_terminate")
-        ]
-        doomed_nodes = {
-            wid: self.state.worlds[wid].nodes
-            for wid in doomed_wids
-            if wid in self.state.worlds
-        }
-        apply_shrink(self.state, plan)
-        for wid in doomed_wids:
-            group = self.groups.pop(wid, None)
-            if group is not None:
-                for node in doomed_nodes.get(wid, (group.node,)):
-                    self.pool.release(node)
+        plan = self.engine.plan_shrink(self.state, release_nodes=victims)
+        outcome = self.engine.execute(plan, backend=self)
+        assert plan.shrink is not None
         rec = ReconfigRecord(
             kind=kind,
-            mechanism=plan.kind.value,
+            mechanism=plan.shrink.kind.value,
             nodes_before=before,
             nodes_after=self.n_nodes,
-            est_wall_s=sim.total,
-            downtime_s=sim.total,
-            nodes_returned=plan.nodes_returned,
-            nodes_pinned=plan.nodes_pinned,
+            est_wall_s=outcome.total_s,
+            downtime_s=outcome.downtime_s,
+            nodes_returned=plan.shrink.nodes_returned,
+            nodes_pinned=plan.shrink.nodes_pinned,
         )
         self.history.append(rec)
         return rec

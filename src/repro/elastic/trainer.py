@@ -16,6 +16,7 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticTokens, make_batch_on_mesh
+from repro.malleability.scenarios import RuntimeAdapter, dispatch_event
 from repro.models import Model
 from repro.parallel.sharding import ShardingContext
 from repro.train.steps import (
@@ -60,6 +61,37 @@ class ElasticTrainer:
             CheckpointManager(self.checkpoint_dir) if self.checkpoint_dir else None
         )
 
+    @classmethod
+    def from_scenario(cls, model: Model, scenario, pool=None, **kwargs) -> "ElasticTrainer":
+        """Build the full loop from a declarative scenario: the runtime
+        executes the trace through the same ReconfigEngine the simulator
+        charges, so per-event downtimes agree across both paths."""
+        from repro.elastic.node_group import DevicePool
+
+        if scenario.sim_only:
+            raise ValueError(
+                f"scenario {scenario.name!r} has a heterogeneous core pool "
+                "(simulator-only); the live DevicePool partitions devices "
+                "uniformly"
+            )
+        pool = pool or DevicePool(devices_per_node=scenario.cores_per_node)
+        if pool.n_nodes < scenario.max_nodes():
+            raise ValueError(
+                f"scenario {scenario.name!r} peaks at {scenario.max_nodes()} "
+                f"nodes but the device pool only has {pool.n_nodes} "
+                f"({scenario.cores_per_node} devices/node); set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count="
+                f"{scenario.max_nodes() * scenario.cores_per_node} before "
+                "importing jax, or pass a larger pool"
+            )
+        runtime = ElasticRuntime(
+            pool=pool,
+            initial_nodes=scenario.initial_nodes,
+            engine=scenario.default_engine(),
+        )
+        rms = SimulatedRMS.from_scenario(scenario)
+        return cls(model=model, runtime=runtime, rms=rms, **kwargs)
+
     # ------------------------------------------------------------------ mesh --
     def _make_ctx(self) -> ShardingContext:
         return ShardingContext(mesh=self.runtime.mesh(("data",)), mode="train")
@@ -92,24 +124,15 @@ class ElasticTrainer:
 
     # -------------------------------------------------------------------- events --
     def _handle(self, ev: Event):
-        rt = self.runtime
-        if ev.kind is EventKind.GROW and ev.target_nodes > rt.n_nodes:
-            rt.expand(ev.target_nodes)
-        elif ev.kind is EventKind.SHRINK:
-            victims = [n for n in ev.nodes if n in rt.state.nodes_in_use()]
-            if victims:
-                rt.shrink_nodes(victims)
-        elif ev.kind is EventKind.FAIL:
-            for n in ev.nodes:
-                if n in rt.state.nodes_in_use():
-                    rt.fail_node(n)
-        elif ev.kind is EventKind.STRAGGLER:
-            for n in ev.nodes:
-                if n in rt.state.nodes_in_use():
-                    rt.drop_straggler(n)
-        else:
+        """One RMS event through the SAME dispatch the scenario executors
+        use — the mapping lives once, in repro.malleability.scenarios."""
+        if ev.kind is EventKind.NOOP:
             return False
-        return True
+        applied = list(dispatch_event(
+            RuntimeAdapter(self.runtime), ev.kind.value,
+            nodes=ev.nodes, target_nodes=ev.target_nodes,
+        ))
+        return bool(applied)
 
     # ---------------------------------------------------------------------- run --
     def run(self, steps: int) -> list[StepRecord]:

@@ -185,6 +185,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax < 0.5 wraps it per-program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
 
     # While-aware analysis: cost_analysis() counts scan bodies once on this

@@ -2,8 +2,9 @@
 
 Runs real steps on the host's devices (reduced config by default — the
 full configs only fit the production mesh, which is exercised via the
-dry-run).  Integrates the elastic runtime: pass ``--elastic-script`` to
-trigger grow/shrink/fail events mid-run.
+dry-run).  Integrates the elastic runtime: pass ``--scenario <name>`` to
+run the malleable loop against a registered declarative workload trace
+(grow/shrink/fail/straggler events planned by the ReconfigEngine).
 """
 from __future__ import annotations
 
@@ -34,10 +35,17 @@ def main() -> None:
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--scenario", default=None,
+                    help="run the elastic loop against a registered scenario "
+                         "(see repro.malleability.registered_scenarios)")
     args = ap.parse_args()
 
     cfg = arch_config(args.arch) if args.full_config else smoke_config(args.arch)
     model = Model(cfg)
+
+    if args.scenario:
+        run_scenario(model, args)
+        return
     mesh = make_host_mesh(args.model_parallel)
     ctx = ShardingContext(mesh=mesh, mode="train")
 
@@ -66,6 +74,36 @@ def main() -> None:
             ckpt.save({"params": state.params}, i + 1)
     if ckpt:
         ckpt.wait()
+
+
+def run_scenario(model: Model, args) -> None:
+    """Malleable training: the declarative trace drives the live runtime."""
+    from repro.elastic import ElasticTrainer
+    from repro.malleability import get_scenario
+
+    scenario = get_scenario(args.scenario)
+    if scenario.sim_only:
+        raise SystemExit(
+            f"scenario {scenario.name!r} is heterogeneous (simulator-only); "
+            "pick a homogeneous one for live training"
+        )
+    trainer = ElasticTrainer.from_scenario(
+        model, scenario, lr=args.lr, batch=args.batch, seq=args.seq,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+    )
+    steps = max(args.steps, scenario.steps)
+    t0 = time.time()
+    hist = trainer.run(steps)
+    for rec in trainer.runtime.history:
+        print(f"reconfig {rec.kind:<10} {rec.mechanism:<22} "
+              f"{rec.nodes_before}->{rec.nodes_after} nodes  "
+              f"est {rec.est_wall_s*1e3:.2f} ms  downtime {rec.downtime_s*1e3:.2f} ms",
+              flush=True)
+    print(f"scenario {scenario.name!r}: {len(hist)} steps, "
+          f"loss {hist[0].loss:.4f} -> {hist[-1].loss:.4f} "
+          f"({time.time()-t0:.1f}s, {len(trainer.runtime.history)} reconfigs)",
+          flush=True)
 
 
 if __name__ == "__main__":

@@ -5,6 +5,23 @@ objects against a calibrated MPI cost model to estimate reconfiguration
 wall time, reproducing the paper's §5 experiments on this CPU-only host.
 """
 from .cost_model import MN5, NASP, CostModel
+from .scenarios import (
+    RuntimeAdapter,
+    Scenario,
+    ScenarioEvent,
+    ScenarioRecord,
+    burst_arrival,
+    dispatch_event,
+    get_scenario,
+    heterogeneous_pool,
+    node_failures,
+    register_scenario,
+    registered_scenarios,
+    run_scenario_live,
+    run_scenario_sim,
+    steady_cycle,
+    straggler_churn,
+)
 from .simulator import (
     ExpansionReport,
     ShrinkReport,
@@ -18,8 +35,23 @@ __all__ = [
     "NASP",
     "CostModel",
     "ExpansionReport",
+    "RuntimeAdapter",
+    "Scenario",
+    "ScenarioEvent",
+    "ScenarioRecord",
     "ShrinkReport",
+    "burst_arrival",
+    "dispatch_event",
+    "get_scenario",
+    "heterogeneous_pool",
+    "node_failures",
+    "register_scenario",
+    "registered_scenarios",
+    "run_scenario_live",
+    "run_scenario_sim",
     "simulate_expansion",
     "simulate_redistribution",
     "simulate_shrink",
+    "steady_cycle",
+    "straggler_churn",
 ]

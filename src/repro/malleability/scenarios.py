@@ -1,0 +1,493 @@
+"""Declarative workload scenarios shared by every consumer layer.
+
+A :class:`Scenario` is a pure-data trace of RMS events (grow / shrink /
+fail / straggler) against a node pool.  The SAME object drives:
+
+* the **simulator** — :func:`run_scenario_sim` walks the trace against a
+  device-free :class:`ClusterState`, planning each reconfiguration
+  through the :class:`~repro.core.engine.ReconfigEngine` and charging
+  its event timeline;
+* the **elastic runtime / trainer** — :meth:`repro.elastic.rms.SimulatedRMS
+  .from_scenario` feeds the identical trace into the live NodeGroup
+  backend (:func:`run_scenario_live` for bookkeeping-only runs,
+  :class:`~repro.elastic.trainer.ElasticTrainer` for full training);
+* the **benchmarks** — iterate :func:`registered_scenarios` instead of
+  hard-coding event scripts.
+
+Because both executors plan through the same engine and read cost off
+the same timeline, their downtime numbers agree *exactly* — that is the
+dedup the engine exists for.
+
+Built-in scenarios model the paper's two testbeds: steady expand/shrink
+cycles and burst arrivals (MN5-style homogeneous pools, §5.2), node
+failures and straggler churn (the dynamic-awareness motivation, §1), and
+heterogeneous-core pools (NASP-style alternating node widths, §5.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional, Union
+
+from repro.core import ClusterState, Method, ReconfigEngine, Strategy, apply_shrink
+
+from .cost_model import MN5, NASP, CostModel
+
+# Event kinds (string-typed so scenarios stay pure data; they map 1:1 to
+# repro.elastic.rms.EventKind values).
+GROW = "grow"
+SHRINK = "shrink"
+FAIL = "fail"
+STRAGGLER = "straggler"
+
+
+@dataclass(frozen=True)
+class ScenarioEvent:
+    """One RMS decision at a given application step."""
+
+    step: int
+    kind: str                       # grow | shrink | fail | straggler
+    target_nodes: int = 0           # GROW: new total node count
+    nodes: tuple[int, ...] = ()     # SHRINK/FAIL/STRAGGLER: victim node ids
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A declarative workload trace over a node pool."""
+
+    name: str
+    description: str
+    initial_nodes: int
+    events: tuple[ScenarioEvent, ...]
+    cores_per_node: int = 1          # homogeneous node width (== devices/node
+    #                                  when executed on the live runtime)
+    core_pool: tuple[int, ...] = ()  # heterogeneous A vector; when set the
+    #                                  scenario is simulator-only (the live
+    #                                  DevicePool partitions uniformly)
+    steps: int = 20                  # application steps the trace spans
+    profile: str = "mn5"             # default cost-model profile
+
+    @property
+    def sim_only(self) -> bool:
+        return bool(self.core_pool)
+
+    @property
+    def heterogeneous(self) -> bool:
+        return bool(self.core_pool)
+
+    def cores_for(self, n_nodes: int) -> Union[int, list[int]]:
+        """Allocation argument for an expansion to ``n_nodes`` nodes."""
+        if self.core_pool:
+            if n_nodes > len(self.core_pool):
+                raise ValueError(
+                    f"scenario {self.name!r}: pool has {len(self.core_pool)} "
+                    f"nodes, {n_nodes} requested"
+                )
+            return list(self.core_pool[:n_nodes])
+        return self.cores_per_node
+
+    def ranks_for(self, n_nodes: int) -> int:
+        cores = self.cores_for(n_nodes)
+        return sum(cores) if isinstance(cores, list) else cores * n_nodes
+
+    def max_nodes(self) -> int:
+        """Peak node count along the trace (sizes pools/device counts)."""
+        count = peak = self.initial_nodes
+        for ev in sorted(self.events, key=lambda e: e.step):
+            if ev.kind == GROW:
+                count = max(count, ev.target_nodes)
+            else:
+                count = max(1, count - len(ev.nodes))
+            peak = max(peak, count)
+        return peak
+
+    def cost_model(self) -> CostModel:
+        return NASP if self.profile == "nasp" else MN5
+
+    def default_engine(self) -> ReconfigEngine:
+        """Heterogeneous pools require the diffusive strategy (§4.2)."""
+        strategy = (
+            Strategy.PARALLEL_DIFFUSIVE if self.heterogeneous
+            else Strategy.PARALLEL_HYPERCUBE
+        )
+        return ReconfigEngine(
+            method=Method.MERGE, strategy=strategy, cost_model=self.cost_model()
+        )
+
+    def with_cores_per_node(self, cpn: int) -> "Scenario":
+        return replace(self, cores_per_node=cpn, core_pool=())
+
+
+# ================================================================ registry ==
+_SCENARIO_REGISTRY: dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario, *, overwrite: bool = False) -> Scenario:
+    if scenario.name in _SCENARIO_REGISTRY and not overwrite:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _SCENARIO_REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _SCENARIO_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(_SCENARIO_REGISTRY)}"
+        ) from None
+
+
+def registered_scenarios() -> tuple[Scenario, ...]:
+    return tuple(_SCENARIO_REGISTRY.values())
+
+
+# ================================================================ builders ==
+def steady_cycle(
+    name: str = "steady-cycle",
+    low: int = 1,
+    high: int = 4,
+    cycles: int = 2,
+    period: int = 5,
+    cores_per_node: int = 1,
+) -> Scenario:
+    """Steady expand/shrink cycles: low -> high -> low, repeated.
+
+    The malleable-batch workload of §5: the job breathes with cluster
+    load, exercising both the parallel expansion and the TS shrink path.
+    """
+    events: list[ScenarioEvent] = []
+    step = period
+    for _ in range(cycles):
+        events.append(ScenarioEvent(step=step, kind=GROW, target_nodes=high))
+        step += period
+        # shrink back down to `low` by releasing the highest node ids
+        events.append(ScenarioEvent(
+            step=step, kind=SHRINK, nodes=tuple(range(low, high))))
+        step += period
+    return Scenario(
+        name=name,
+        description=f"{cycles}x expand {low}->{high} then TS-shrink back",
+        initial_nodes=low,
+        cores_per_node=cores_per_node,
+        events=tuple(events),
+        steps=step + period,
+    )
+
+
+def burst_arrival(
+    name: str = "burst-arrival",
+    start: int = 1,
+    burst: int = 8,
+    cores_per_node: int = 1,
+) -> Scenario:
+    """A sudden grant of many nodes, then staged halving reclamation.
+
+    Stresses exactly what the parallel strategies are for: one large
+    expansion (log-depth spawn rounds) followed by staged TS shrinks as
+    the RMS takes half the remaining nodes back per wave.  Halving keeps
+    every settled node count a divisor of the burst width, so the trace
+    also runs through live data-parallel training (batch % nodes == 0).
+    """
+    events = [ScenarioEvent(step=3, kind=GROW, target_nodes=burst)]
+    step, count = 8, burst
+    while count > start:
+        nxt = max(start, count // 2)
+        events.append(ScenarioEvent(
+            step=step, kind=SHRINK, nodes=tuple(range(nxt, count))))
+        count = nxt
+        step += 3
+    return Scenario(
+        name=name,
+        description=f"burst {start}->{burst}, then halving TS reclaim waves",
+        initial_nodes=start,
+        cores_per_node=cores_per_node,
+        events=tuple(events),
+        steps=step + 2,
+    )
+
+
+def node_failures(
+    name: str = "node-failures",
+    nodes: int = 8,
+    failure_waves: tuple[tuple[int, ...], ...] = ((4, 5, 6, 7), (2, 3)),
+    cores_per_node: int = 1,
+) -> Scenario:
+    """Grow once, then lose whole groups of nodes to correlated failures
+    (a rack or switch dying takes several nodes at once).
+
+    §1's dynamic-awareness case: node-confined worlds mean each failed
+    node kills exactly one group, and recovery is a forced TS shrink of
+    that wave.  The default waves settle at 8 -> 4 -> 2 nodes so the
+    trace also runs through live data-parallel training.
+    """
+    events = [ScenarioEvent(step=2, kind=GROW, target_nodes=nodes)]
+    for i, wave in enumerate(failure_waves):
+        events.append(ScenarioEvent(step=6 + 4 * i, kind=FAIL, nodes=tuple(wave)))
+    return Scenario(
+        name=name,
+        description=f"grow to {nodes}, then {len(failure_waves)} failure waves",
+        initial_nodes=1,
+        cores_per_node=cores_per_node,
+        events=tuple(events),
+        steps=6 + 4 * len(failure_waves) + 2,
+    )
+
+
+def straggler_churn(
+    name: str = "straggler-churn",
+    nodes: int = 4,
+    churns: int = 2,
+    cores_per_node: int = 1,
+) -> Scenario:
+    """Repeatedly drop the slowest node and immediately replace it.
+
+    Straggler mitigation as continuous reconfiguration: at each churn
+    step the slow group is TS-shrunk out AND the job grows back to the
+    target width in the same reconfiguration drain (the settled node
+    count never changes, so live training shards cleanly throughout).
+    """
+    events = [ScenarioEvent(step=2, kind=GROW, target_nodes=nodes)]
+    step = 5
+    for i in range(churns):
+        # the live pool hands back the lowest free node id, so dropping
+        # node (nodes-1-i) keeps sim and live trajectories identical
+        events.append(ScenarioEvent(step=step, kind=STRAGGLER, nodes=(nodes - 1 - i,)))
+        events.append(ScenarioEvent(step=step, kind=GROW, target_nodes=nodes))
+        step += 3
+    return Scenario(
+        name=name,
+        description=f"{churns}x same-step straggler drop + replacement at {nodes} nodes",
+        initial_nodes=1,
+        cores_per_node=cores_per_node,
+        events=tuple(events),
+        steps=step + 2,
+    )
+
+
+def heterogeneous_pool(
+    name: str = "hetero-nasp",
+    nodes: int = 8,
+    widths: tuple[int, ...] = (20, 32),
+    profile: str = "nasp",
+) -> Scenario:
+    """NASP-style heterogeneous pool (§5.3): alternating node widths.
+
+    Requires the diffusive strategy; simulator-only (the live DevicePool
+    partitions the host's devices uniformly).
+    """
+    pool = tuple(widths[i % len(widths)] for i in range(nodes))
+    events = (
+        ScenarioEvent(step=2, kind=GROW, target_nodes=nodes),
+        ScenarioEvent(step=8, kind=SHRINK, nodes=tuple(range(nodes // 2, nodes))),
+        ScenarioEvent(step=12, kind=GROW, target_nodes=nodes - 1),
+    )
+    return Scenario(
+        name=name,
+        description=f"heterogeneous {widths} pool, grow/shrink/regrow",
+        initial_nodes=1,
+        core_pool=pool,
+        events=events,
+        steps=16,
+        profile=profile,
+    )
+
+
+for _sc in (
+    steady_cycle(),
+    burst_arrival(),
+    node_failures(),
+    straggler_churn(),
+    heterogeneous_pool(),
+):
+    register_scenario(_sc)
+
+
+# =============================================================== executors ==
+@dataclass(frozen=True)
+class ScenarioRecord:
+    """One reconfiguration along a scenario run (either executor)."""
+
+    step: int
+    kind: str                  # expand | shrink | fail | straggler
+    mechanism: str             # strategy value or TS/ZS/SS value
+    nodes_before: int
+    nodes_after: int
+    est_wall_s: float          # timeline total
+    downtime_s: float          # timeline downtime
+
+
+@dataclass
+class _SimCluster:
+    """Device-free twin of the live runtime's bookkeeping.
+
+    Mirrors :class:`repro.elastic.ElasticRuntime` exactly — same world
+    creation order, same greedy lowest-free-node acquisition — so the
+    engine sees identical plans and charges identical timelines.
+    """
+
+    scenario: Scenario
+    engine: ReconfigEngine
+    state: ClusterState = field(default_factory=ClusterState)
+
+    def __post_init__(self) -> None:
+        pool = self.scenario.max_nodes()
+        self._free = set(range(pool))
+        initial = list(range(self.scenario.initial_nodes))
+        self._free -= set(initial)
+        cpn = [self._width(n) for n in initial]
+        self.state.add_world(initial, cpn, is_initial=True)
+
+    def _width(self, node: int) -> int:
+        if self.scenario.core_pool:
+            return self.scenario.core_pool[node]
+        return self.scenario.cores_per_node
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.state.nodes_in_use())
+
+    def ranks_in_use(self) -> int:
+        return sum(w.size for w in self.state.worlds.values())
+
+    def expand(self, target_nodes: int) -> ScenarioRecord:
+        before = self.n_nodes
+        ns = self.ranks_in_use()
+        nt = self.scenario.ranks_for(target_nodes)
+        plan = self.engine.plan_expand(ns, nt, self.scenario.cores_for(target_nodes))
+        outcome = self.engine.execute(plan)
+        assert plan.spawn is not None
+        for g in plan.spawn.groups:
+            node = min(self._free)
+            self._free.discard(node)
+            self.state.add_world([node], [g.size])
+        self.state.expansions_done += 1
+        return ScenarioRecord(
+            step=-1, kind="expand", mechanism=plan.spawn.strategy.value,
+            nodes_before=before, nodes_after=self.n_nodes,
+            est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
+        )
+
+    def shrink_nodes(self, victims: list[int], kind: str) -> ScenarioRecord:
+        before = self.n_nodes
+        plan = self.engine.plan_shrink(self.state, release_nodes=victims)
+        outcome = self.engine.execute(plan)
+        assert plan.shrink is not None
+        apply_shrink(self.state, plan.shrink)
+        self._free.update(plan.shrink.nodes_returned)
+        return ScenarioRecord(
+            step=-1, kind=kind, mechanism=plan.shrink.kind.value,
+            nodes_before=before, nodes_after=self.n_nodes,
+            est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
+        )
+
+
+def dispatch_event(
+    cluster, kind: str, *, nodes: tuple[int, ...] = (), target_nodes: int = 0
+) -> Iterable[ScenarioRecord]:
+    """THE event-to-action mapping, shared by every executor.
+
+    ``cluster`` is anything with ``n_nodes``, ``state``, ``expand`` and
+    ``shrink_nodes`` — the device-free sim cluster, or a live runtime
+    behind :class:`RuntimeAdapter` (used by both :func:`run_scenario_live`
+    and :class:`repro.elastic.ElasticTrainer`)."""
+    if kind == GROW:
+        if target_nodes > cluster.n_nodes:
+            yield cluster.expand(target_nodes)
+    elif kind == SHRINK:
+        victims = [n for n in nodes if n in cluster.state.nodes_in_use()]
+        if victims:
+            yield cluster.shrink_nodes(victims, kind="shrink")
+    elif kind in (FAIL, STRAGGLER):
+        for n in nodes:
+            if n in cluster.state.nodes_in_use():
+                yield cluster.shrink_nodes([n], kind=kind)
+    else:
+        raise ValueError(f"unknown scenario event kind {kind!r}")
+
+
+def _dispatch(cluster, ev: ScenarioEvent) -> Iterable[ScenarioRecord]:
+    return dispatch_event(cluster, ev.kind, nodes=ev.nodes,
+                          target_nodes=ev.target_nodes)
+
+
+class RuntimeAdapter:
+    """Present a live :class:`~repro.elastic.ElasticRuntime` through the
+    dispatch interface, converting its records to :class:`ScenarioRecord`."""
+
+    def __init__(self, runtime) -> None:
+        self._rt = runtime
+
+    @property
+    def state(self):
+        return self._rt.state
+
+    @property
+    def n_nodes(self) -> int:
+        return self._rt.n_nodes
+
+    @staticmethod
+    def _convert(rec) -> ScenarioRecord:
+        return ScenarioRecord(
+            step=-1, kind=rec.kind, mechanism=rec.mechanism,
+            nodes_before=rec.nodes_before, nodes_after=rec.nodes_after,
+            est_wall_s=rec.est_wall_s, downtime_s=rec.downtime_s,
+        )
+
+    def expand(self, target_nodes: int) -> ScenarioRecord:
+        return self._convert(self._rt.expand(target_nodes))
+
+    def shrink_nodes(self, victims: list[int], kind: str) -> ScenarioRecord:
+        if kind == FAIL and len(victims) == 1:
+            rec = self._rt.fail_node(victims[0])
+        elif kind == STRAGGLER and len(victims) == 1:
+            rec = self._rt.drop_straggler(victims[0])
+        else:
+            rec = self._rt.shrink_nodes(victims)
+        return self._convert(rec)
+
+
+def run_scenario_sim(
+    scenario: Scenario, engine: Optional[ReconfigEngine] = None
+) -> list[ScenarioRecord]:
+    """Execute a scenario on the timeline-charging simulator backend."""
+    engine = engine or scenario.default_engine()
+    cluster = _SimCluster(scenario=scenario, engine=engine)
+    records: list[ScenarioRecord] = []
+    for ev in sorted(scenario.events, key=lambda e: e.step):
+        for rec in _dispatch(cluster, ev):
+            records.append(replace(rec, step=ev.step))
+    return records
+
+
+def run_scenario_live(
+    scenario: Scenario,
+    pool=None,
+    engine: Optional[ReconfigEngine] = None,
+) -> list[ScenarioRecord]:
+    """Execute a scenario against the live NodeGroup runtime.
+
+    Bookkeeping-only (fake devices by default): exercises the identical
+    engine/backend path the :class:`ElasticTrainer` uses, without JAX
+    compilation, so tests can assert sim/live timeline agreement cheaply.
+    """
+    if scenario.sim_only:
+        raise ValueError(
+            f"scenario {scenario.name!r} has a heterogeneous core pool; "
+            "the live DevicePool partitions devices uniformly"
+        )
+    from repro.elastic.node_group import DevicePool
+    from repro.elastic.runtime import ElasticRuntime
+
+    engine = engine or scenario.default_engine()
+    cpn = scenario.cores_per_node
+    if pool is None:
+        fake = [object() for _ in range(scenario.max_nodes() * cpn)]
+        pool = DevicePool(devices=fake, devices_per_node=cpn)
+    rt = ElasticRuntime(pool=pool, initial_nodes=scenario.initial_nodes,
+                        engine=engine)
+    adapter = RuntimeAdapter(rt)
+    records: list[ScenarioRecord] = []
+    for ev in sorted(scenario.events, key=lambda e: e.step):
+        for rec in _dispatch(adapter, ev):
+            records.append(replace(rec, step=ev.step))
+    return records

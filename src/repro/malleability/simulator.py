@@ -1,25 +1,32 @@
-"""Event/phase-driven simulator for reconfiguration cost (paper §5).
+"""Timeline-charging backend for reconfiguration cost (paper §5).
 
-Executes a :class:`repro.core.SpawnPlan` phase by phase — spawn rounds,
-tree synchronization, binary connection, reordering, final intercomm —
-charging each phase with the :class:`CostModel`.  Shrinks are charged per
-mechanism (TS / ZS / SS).  The phase structure mirrors §4.6's task lists,
-so per-phase output is directly comparable to the paper's discussion
-(e.g. "overhead grows when more than 8 groups are created": that is the
-connect phase growing with ceil(log2 G) unbalanced rounds).
+The phase math lives in :mod:`repro.core.engine`: every plan is executed
+as an explicit event timeline (spawn rounds, tree synchronization, binary
+connection rounds, reordering, final intercomm; TS/ZS/SS for shrinks)
+charged with the :class:`CostModel`.  This module is the report-shaped
+view over those timelines — :class:`ExpansionReport` / :class:`ShrinkReport`
+read *every* number (per-phase spans, total, ASYNC downtime) off the
+timeline, so they can never disagree with the elastic runtime's
+:class:`~repro.elastic.runtime.ReconfigRecord`, which reads the same one.
+
+The event structure mirrors §4.6's task lists, so per-phase output is
+directly comparable to the paper's discussion (e.g. "overhead grows when
+more than 8 groups are created": that is the connect phase growing with
+ceil(log2 G) unbalanced rounds).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 from repro.core import (
-    Method,
     ShrinkKind,
     SpawnPlan,
-    Strategy,
-    binary_connection_schedule,
+    Stage,
+    Timeline,
+    expansion_timeline,
+    shrink_timeline,
 )
+from repro.core.types import Method, Strategy
 
 from .cost_model import CostModel
 
@@ -39,6 +46,7 @@ class ExpansionReport:
     downtime: float      # app-visible stall (== total unless Async overlaps)
     steps: int
     groups: int
+    timeline: Timeline = field(default_factory=Timeline, repr=False, compare=False)
 
     def as_row(self) -> dict:
         return {
@@ -65,105 +73,29 @@ class ShrinkReport:
     nodes_returned: int
     nodes_pinned: int
     detail: dict = field(default_factory=dict)
-
-
-def _spawn_phase(plan: SpawnPlan, cm: CostModel) -> float:
-    """Wall time of the spawn phase according to the plan's strategy."""
-    if not plan.groups:
-        return 0.0
-    if plan.strategy is Strategy.SEQUENTIAL or plan.strategy is Strategy.SINGLE:
-        g = plan.groups[0]
-        t = cm.spawn_call(g.size, len(g.nodes_spanned()))
-        if plan.strategy is Strategy.SINGLE:
-            # rank 0 informs the rest afterwards (MaM Single strategy)
-            t += cm.t_token * math.ceil(math.log2(max(plan.ns, 2)))
-        return t
-    if plan.strategy is Strategy.SEQUENTIAL_PER_NODE:
-        return sum(cm.spawn_call(g.size, 1) for g in plan.groups)
-    # Parallel strategies: rounds of concurrent single-node spawns.
-    total = 0.0
-    initial_nodes = sum(1 for r in plan.running if r > 0)
-    for s in range(1, plan.steps + 1):
-        round_groups = plan.groups_in_step(s)
-        if not round_groups:
-            continue
-        oversub = plan.method is Method.BASELINE and any(
-            g.node < initial_nodes for g in round_groups
-        )
-        total += cm.concurrent_round(
-            [(g.size, 1) for g in round_groups], oversubscribed=oversub
-        )
-    return total
-
-
-def _sync_phase(plan: SpawnPlan, cm: CostModel) -> float:
-    """§4.3 three-stage synchronization along the spawn tree.
-
-    Critical path: deepest leaf sends up through ``depth`` levels (token +
-    per-group barrier each), source barriers, then the release token walks
-    back down the same depth.
-    """
-    if plan.strategy not in (Strategy.PARALLEL_HYPERCUBE, Strategy.PARALLEL_DIFFUSIVE):
-        return 0.0
-    if not plan.groups:
-        return 0.0
-    depth = plan.steps
-    max_group = max(plan.group_sizes)
-    per_level = cm.t_token + cm.barrier(max_group) + cm.comm_split(max_group)
-    ports = cm.t_port  # opened concurrently by all acceptor roots
-    return ports + per_level + depth * 2 * (cm.t_token + cm.barrier(max_group))
-
-
-def _connect_phase(plan: SpawnPlan, cm: CostModel) -> float:
-    """§4.4 binary connection: ceil(log2 G) rounds of pairwise merges."""
-    if plan.strategy not in (Strategy.PARALLEL_HYPERCUBE, Strategy.PARALLEL_DIFFUSIVE):
-        return 0.0
-    sizes = {g.gid: g.size for g in plan.groups}
-    total = 0.0
-    for rnd in binary_connection_schedule(len(plan.groups)):
-        round_cost = 0.0
-        for acc, conn in rnd.pairs:
-            merged = sizes[acc] + sizes[conn]
-            round_cost = max(round_cost, cm.connect_merge(merged))
-            sizes[acc] = merged
-            del sizes[conn]
-        total += round_cost
-    return total
+    timeline: Timeline = field(default_factory=Timeline, repr=False, compare=False)
 
 
 def simulate_expansion(
     plan: SpawnPlan, cm: CostModel, asynchronous: bool = False
 ) -> ExpansionReport:
-    t_spawn = _spawn_phase(plan, cm)
-    t_sync = _sync_phase(plan, cm)
-    t_connect = _connect_phase(plan, cm)
-    parallel = plan.strategy in (
-        Strategy.PARALLEL_HYPERCUBE,
-        Strategy.PARALLEL_DIFFUSIVE,
-    )
-    t_reorder = cm.comm_split(sum(plan.group_sizes)) if parallel else 0.0
-    # Final sources<->children intercomm (all strategies pay a merge of the
-    # full target world; the classic strategies do it inside the spawn call
-    # via the intercommunicator MPI_Comm_spawn returns).
-    t_final = cm.connect_merge(plan.nt) if parallel else cm.beta_connect * plan.nt
-    total = t_spawn + t_sync + t_connect + t_reorder + t_final
-    # MaM's Async strategy overlaps the spawn phase with app compute; the
-    # app only stalls for sync + connect + reorder + final.
-    downtime = total - t_spawn if asynchronous else total
+    """Charge one expansion plan and report its per-phase breakdown."""
+    tl = expansion_timeline(plan, cm)
     return ExpansionReport(
         strategy=plan.strategy,
         method=plan.method,
         ns=plan.ns,
         nt=plan.nt,
-        t_spawn=t_spawn,
-        t_sync=t_sync,
-        t_connect=t_connect,
-        t_reorder=t_reorder,
-        t_final=t_final,
-        total=total,
-        downtime=downtime,
+        t_spawn=tl.span(Stage.SPAWN),
+        t_sync=tl.span(Stage.SYNC),
+        t_connect=tl.span(Stage.CONNECT),
+        t_reorder=tl.span(Stage.REORDER),
+        t_final=tl.span(Stage.FINAL),
+        total=tl.total,
+        downtime=tl.downtime(asynchronous),
         steps=plan.steps,
         groups=len(plan.groups),
+        timeline=tl,
     )
 
 
@@ -177,34 +109,30 @@ def simulate_shrink(
     nodes_returned: int = 0,
     nodes_pinned: int = 0,
 ) -> ShrinkReport:
-    """Cost of one shrink by mechanism.
-
-    * TS — release tokens to doomed worlds; they exit; root updates its
-      structure.  No spawning at all (this is the paper's headline).
-    * ZS — same token path, but ranks only go to sleep; nodes stay pinned.
-    * SS — the Baseline path: spawn the NT-sized world (optionally with a
-      parallel strategy: pass ``respawn_plan``), tear the old world down.
-    """
+    """Charge one shrink by mechanism (TS / ZS / SS) off its timeline."""
+    tl = shrink_timeline(
+        kind,
+        cm,
+        ns=ns,
+        nt=nt,
+        doomed_world_sizes=doomed_world_sizes,
+        respawn_plan=respawn_plan,
+    )
     if kind is ShrinkKind.TS:
-        total = cm.ts_terminate(doomed_world_sizes or [1]) + cm.t_token
         detail = {"worlds_terminated": len(doomed_world_sizes or [])}
     elif kind is ShrinkKind.ZS:
-        total = cm.t_token * 2  # mark + ack; zombies just stop progressing
         detail = {"zombified": ns - nt}
-    else:  # SS
-        if respawn_plan is not None:
-            exp = simulate_expansion(respawn_plan, cm)
-            total = exp.total + cm.t_teardown_per_proc * ns
-            detail = {"respawn_total_s": exp.total}
-        else:
-            total = cm.ss_respawn(nt, max(1, nt // max(ns // max(ns, 1), 1)), ns)
-            detail = {}
+    elif respawn_plan is not None:
+        detail = {"respawn_total_s": tl.total - tl.span(Stage.TEARDOWN)}
+    else:
+        detail = {}
     return ShrinkReport(
         kind=kind,
-        total=total,
+        total=tl.total,
         nodes_returned=nodes_returned,
         nodes_pinned=nodes_pinned,
         detail=detail,
+        timeline=tl,
     )
 
 

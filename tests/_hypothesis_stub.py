@@ -1,0 +1,156 @@
+"""Minimal deterministic stand-in for the slice of `hypothesis` this
+test-suite uses.
+
+Installed by ``conftest.py`` into ``sys.modules`` only when the real
+``hypothesis`` package is unavailable (the tier-1 environment does not
+ship it).  It is NOT a property-based testing engine: ``@given`` simply
+replays ``max_examples`` pseudo-random draws from a fixed seed, so runs
+are reproducible and the suite collects and passes everywhere.  When the
+real hypothesis is installed it is always preferred.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    """A draw rule: ``sample(rng) -> value``."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def _integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2**20) if min_value is None else int(min_value)
+    hi = 2**20 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def _floats(min_value=None, max_value=None, **_kw) -> _Strategy:
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = 1.0 if max_value is None else float(max_value)
+    # Sample log-uniformly when the range spans orders of magnitude and is
+    # positive (mirrors how these tests use floats: scales like 1e-3..1e3).
+    if lo > 0 and hi / lo > 1e3:
+        return _Strategy(
+            lambda rng: math.exp(rng.uniform(math.log(lo), math.log(hi)))
+        )
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def _just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def _lists(elements: _Strategy, min_size=0, max_size=None, **_kw) -> _Strategy:
+    hi = (min_size + 8) if max_size is None else max_size
+
+    def sample(rng: random.Random):
+        n = rng.randint(min_size, hi)
+        return [elements.sample(rng) for _ in range(n)]
+
+    return _Strategy(sample)
+
+
+def _tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.booleans = _booleans
+strategies.sampled_from = _sampled_from
+strategies.just = _just
+strategies.lists = _lists
+strategies.tuples = _tuples
+
+
+class settings:
+    """Records ``max_examples``; everything else is accepted and ignored."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Replay a fixed number of deterministic draws through the test."""
+    if arg_strategies:
+        raise TypeError(
+            "the hypothesis stub supports keyword strategies only "
+            "(all tests in this repo use @given(name=st...))"
+        )
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", None
+            )
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except _UnsatisfiedAssumption:
+                    continue
+
+        # pytest must not see the drawn parameters (it would treat them as
+        # fixtures): hide the original signature and advertise only the
+        # pass-through parameters (``self`` for methods, fixtures if any).
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        passthrough = [
+            p for name, p in sig.parameters.items() if name not in kw_strategies
+        ]
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        wrapper.hypothesis_stub = True
+        return wrapper
+
+    return decorate
+
+
+def assume(condition) -> bool:
+    """Best-effort: abort the current example quietly when unsatisfied."""
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much]

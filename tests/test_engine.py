@@ -1,0 +1,240 @@
+"""ReconfigEngine tests: registry parity with the pre-refactor planners,
+timeline structure, and the downtime-dedup regression (simulator report
+and runtime record must read the same timeline)."""
+import pytest
+
+from repro.core import (
+    Method,
+    ReconfigEngine,
+    ShrinkKind,
+    Stage,
+    Strategy,
+    StrategySpec,
+    expansion_timeline,
+    get_strategy,
+    plan_diffusive,
+    plan_hypercube,
+    plan_sequential,
+    register_strategy,
+    registered_strategies,
+    shrink_timeline,
+    strategy_key,
+)
+from repro.core.engine import _STRATEGY_REGISTRY
+from repro.elastic import DevicePool, ElasticRuntime
+from repro.malleability import MN5, NASP, simulate_expansion, simulate_shrink
+
+C = 112
+
+# (ns, nt, cores) grid: scalar widths and heterogeneous vectors.
+HOMOGENEOUS_CASES = [
+    (C, 2 * C, C),
+    (C, 8 * C, C),
+    (2 * C, 32 * C, C),
+    (4, 16, 4),
+    (2, 20, 2),
+]
+HETEROGENEOUS_CASES = [
+    (4, 10, [4, 2, 4]),
+    (20, 104, [20, 32, 20, 32]),
+    (6, 33, [6, 3, 8, 12, 4]),
+]
+
+
+def _running(alloc, ns):
+    out, rem = [], ns
+    for a in alloc:
+        take = min(a, rem)
+        out.append(take)
+        rem -= take
+    return out
+
+
+class TestRegistryParity:
+    """Every registered built-in must reproduce its pre-refactor planner
+    exactly (plan objects compare field-by-field: frozen dataclasses)."""
+
+    @pytest.mark.parametrize("ns,nt,cores", HOMOGENEOUS_CASES)
+    @pytest.mark.parametrize("method", [Method.MERGE, Method.BASELINE])
+    def test_hypercube_parity(self, ns, nt, cores, method):
+        spec = get_strategy(Strategy.PARALLEL_HYPERCUBE)
+        assert spec.planner(ns, nt, cores, method) == plan_hypercube(
+            ns, nt, cores, method)
+
+    @pytest.mark.parametrize("ns,nt,cores", HOMOGENEOUS_CASES + HETEROGENEOUS_CASES)
+    @pytest.mark.parametrize("method", [Method.MERGE, Method.BASELINE])
+    def test_diffusive_parity(self, ns, nt, cores, method):
+        a_vec = [cores] * (-(-nt // cores)) if isinstance(cores, int) else cores
+        spec = get_strategy(Strategy.PARALLEL_DIFFUSIVE)
+        assert spec.planner(ns, nt, cores, method) == plan_diffusive(
+            a_vec, _running(a_vec, ns), method)
+
+    @pytest.mark.parametrize("ns,nt,cores", HOMOGENEOUS_CASES + HETEROGENEOUS_CASES)
+    @pytest.mark.parametrize("method", [Method.MERGE, Method.BASELINE])
+    @pytest.mark.parametrize(
+        "strategy,kwargs",
+        [
+            (Strategy.SEQUENTIAL, {}),
+            (Strategy.SEQUENTIAL_PER_NODE, {"per_node": True}),
+            (Strategy.SINGLE, {"single": True}),
+        ],
+    )
+    def test_classic_parity(self, ns, nt, cores, method, strategy, kwargs):
+        a_vec = [cores] * (-(-nt // cores)) if isinstance(cores, int) else cores
+        spec = get_strategy(strategy)
+        assert spec.planner(ns, nt, cores, method) == plan_sequential(
+            ns, nt, a_vec, method, **kwargs)
+
+    def test_all_five_builtins_registered(self):
+        keys = {s.key for s in registered_strategies()}
+        assert {s.value for s in Strategy} <= keys
+
+    def test_hypercube_collapses_uniform_vector(self):
+        spec = get_strategy(Strategy.PARALLEL_HYPERCUBE)
+        assert spec.planner(4, 16, [4, 4, 4, 4], Method.MERGE) == plan_hypercube(
+            4, 16, 4, Method.MERGE)
+
+    def test_hypercube_rejects_heterogeneous_vector(self):
+        with pytest.raises(ValueError):
+            get_strategy(Strategy.PARALLEL_HYPERCUBE).planner(
+                4, 10, [4, 2, 4], Method.MERGE)
+
+
+class TestRegistry:
+    def test_unknown_strategy_raises(self):
+        with pytest.raises(KeyError):
+            get_strategy("warp-drive")
+
+    def test_duplicate_registration_raises(self):
+        spec = registered_strategies()[0]
+        with pytest.raises(ValueError):
+            register_strategy(spec)
+
+    def test_third_party_strategy_registers_and_dispatches(self):
+        key = "test-third-party"
+
+        def planner(ns, nt, cores, method):
+            return plan_hypercube(ns, nt, cores, method)
+
+        register_strategy(StrategySpec(key=key, planner=planner, parallel=True,
+                                       description="test"))
+        try:
+            engine = ReconfigEngine(strategy=key, cost_model=MN5)
+            plan = engine.plan_expand(C, 4 * C, C)
+            assert plan.spawn == plan_hypercube(C, 4 * C, C, Method.MERGE)
+            assert plan.sync_graph is not None  # parallel spec gets the graph
+        finally:
+            _STRATEGY_REGISTRY.pop(key, None)
+
+    def test_strategy_key_accepts_enum_and_string(self):
+        assert strategy_key(Strategy.PARALLEL_HYPERCUBE) == "hypercube"
+        assert strategy_key("hypercube") == "hypercube"
+
+
+class TestTimeline:
+    def test_events_are_contiguous_and_sum_to_total(self):
+        plan = plan_hypercube(C, 16 * C, C, Method.MERGE)
+        tl = expansion_timeline(plan, MN5)
+        assert tl.events[0].start == 0.0
+        for prev, nxt in zip(tl.events, tl.events[1:]):
+            assert nxt.start == pytest.approx(prev.end)
+        assert tl.total == pytest.approx(sum(e.duration for e in tl.events))
+
+    def test_only_spawn_events_are_overlappable(self):
+        plan = plan_hypercube(C, 16 * C, C, Method.BASELINE)
+        tl = expansion_timeline(plan, MN5)
+        for e in tl.events:
+            assert e.overlappable == (e.stage is Stage.SPAWN)
+
+    def test_async_downtime_is_total_minus_spawn(self):
+        plan = plan_diffusive([20, 32, 20, 32], [20, 0, 0, 0], Method.MERGE)
+        tl = expansion_timeline(plan, NASP)
+        assert tl.downtime(asynchronous=False) == tl.total
+        assert tl.downtime(asynchronous=True) == pytest.approx(
+            tl.total - tl.span(Stage.SPAWN))
+
+    def test_connect_round_count_matches_log2_groups(self):
+        plan = plan_hypercube(C, 16 * C, C, Method.MERGE)
+        rounds = [e for e in expansion_timeline(plan, MN5).events
+                  if e.stage is Stage.CONNECT]
+        import math
+        assert len(rounds) == math.ceil(math.log2(len(plan.groups)))
+
+    def test_classic_strategies_skip_parallel_stages(self):
+        plan = plan_sequential(4, 16, [4, 4, 4, 4], Method.MERGE)
+        tl = expansion_timeline(plan, MN5)
+        assert tl.span(Stage.SYNC) == 0.0
+        assert tl.span(Stage.CONNECT) == 0.0
+        assert tl.span(Stage.REORDER) == 0.0
+        assert tl.span(Stage.SPAWN) > 0.0
+
+    def test_shrink_timelines_by_mechanism(self):
+        ts = shrink_timeline(ShrinkKind.TS, MN5, doomed_world_sizes=[C] * 4)
+        assert [e.stage for e in ts.events] == [Stage.TERMINATE]
+        zs = shrink_timeline(ShrinkKind.ZS, MN5)
+        assert [e.stage for e in zs.events] == [Stage.ZOMBIFY]
+        rp = plan_hypercube(4 * C, C, C, Method.BASELINE)
+        ss = shrink_timeline(ShrinkKind.SS, MN5, ns=4 * C, nt=C, respawn_plan=rp)
+        stages = {e.stage for e in ss.events}
+        assert Stage.TEARDOWN in stages and Stage.SPAWN in stages
+        assert ts.total < zs.total * 100  # TS stays micro-scale
+        assert ss.total > ts.total * 100  # SS respawn dwarfs TS
+
+
+class TestDowntimeDedup:
+    """Regression for the satellite: ExpansionReport.downtime (simulator)
+    and ReconfigRecord.downtime_s (runtime) must agree exactly — both are
+    reads of the same engine timeline, not independent arithmetic."""
+
+    @pytest.mark.parametrize("asynchronous", [False, True])
+    def test_expand_downtime_agrees(self, asynchronous):
+        pool = DevicePool(devices=[object() for _ in range(8)], devices_per_node=1)
+        rt = ElasticRuntime(pool=pool, initial_nodes=1, asynchronous=asynchronous)
+        rec = rt.expand(8)
+        plan = plan_hypercube(1, 8, 1, Method.MERGE)
+        rep = simulate_expansion(plan, MN5, asynchronous=asynchronous)
+        assert rec.est_wall_s == rep.total
+        assert rec.downtime_s == rep.downtime
+        if asynchronous:
+            assert rec.downtime_s < rec.est_wall_s
+
+    def test_shrink_downtime_agrees(self):
+        pool = DevicePool(devices=[object() for _ in range(8)], devices_per_node=1)
+        rt = ElasticRuntime(pool=pool, initial_nodes=1)
+        rt.expand(8)
+        rec = rt.shrink(5)
+        rep = simulate_shrink(ShrinkKind.TS, MN5, ns=8, nt=3,
+                              doomed_world_sizes=[1] * 5)
+        assert rec.est_wall_s == rep.total
+        assert rec.downtime_s == rep.total
+
+    def test_expansion_report_phases_read_off_timeline(self):
+        plan = plan_hypercube(C, 8 * C, C, Method.MERGE)
+        rep = simulate_expansion(plan, MN5)
+        tl = rep.timeline
+        assert rep.t_spawn == tl.span(Stage.SPAWN)
+        assert rep.t_sync == tl.span(Stage.SYNC)
+        assert rep.t_connect == tl.span(Stage.CONNECT)
+        assert rep.t_reorder == tl.span(Stage.REORDER)
+        assert rep.t_final == tl.span(Stage.FINAL)
+        assert rep.total == tl.total
+
+
+class TestEnginePlanning:
+    def test_plan_shrink_captures_doomed_sizes(self):
+        pool = DevicePool(devices=[object() for _ in range(6)], devices_per_node=1)
+        rt = ElasticRuntime(pool=pool, initial_nodes=1)
+        rt.expand(6)
+        victims = sorted(rt.state.nodes_in_use())[-2:]
+        plan = rt.engine.plan_shrink(rt.state, release_nodes=victims)
+        assert plan.kind == "shrink"
+        assert plan.shrink_world_sizes == (1, 1)
+        assert plan.ns == 6 and plan.nt == 4
+
+    def test_plan_expand_via_string_key(self):
+        engine = ReconfigEngine(cost_model=MN5)
+        plan = engine.plan_expand(C, 4 * C, C, strategy="diffusive")
+        assert plan.spawn.strategy is Strategy.PARALLEL_DIFFUSIVE
+
+    def test_engine_default_cost_model_is_mn5(self):
+        assert ReconfigEngine().cost_model is MN5

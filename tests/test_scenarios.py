@@ -1,0 +1,161 @@
+"""Scenario subsystem tests: declarative traces run end-to-end through
+both the timeline-charging simulator and the live NodeGroup runtime with
+identical timeline-derived downtime numbers, and through the full
+ElasticTrainer loop (slow)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.elastic.rms import EventKind, SimulatedRMS
+from repro.malleability import (
+    Scenario,
+    ScenarioEvent,
+    get_scenario,
+    register_scenario,
+    registered_scenarios,
+    run_scenario_live,
+    run_scenario_sim,
+    steady_cycle,
+)
+
+DUAL_PATH = ["steady-cycle", "burst-arrival", "node-failures", "straggler-churn"]
+
+
+def _key(rec):
+    return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
+            rec.nodes_after, rec.est_wall_s, rec.downtime_s)
+
+
+class TestSimLiveAgreement:
+    """Acceptance: >= 4 declarative scenarios through both executors with
+    identical timeline-derived downtime numbers (exact float equality —
+    both paths charge the same engine timeline)."""
+
+    @pytest.mark.parametrize("name", DUAL_PATH)
+    def test_downtimes_identical(self, name):
+        sc = get_scenario(name)
+        sim = run_scenario_sim(sc)
+        live = run_scenario_live(sc)
+        assert len(sim) >= 2, "scenario must actually reconfigure"
+        assert [_key(r) for r in sim] == [_key(r) for r in live]
+
+    @pytest.mark.parametrize("name", DUAL_PATH)
+    def test_async_engine_agrees_too(self, name):
+        sc = get_scenario(name)
+        engine = sc.default_engine()
+        engine.asynchronous = True
+        sim = run_scenario_sim(sc, engine=engine)
+        engine2 = sc.default_engine()
+        engine2.asynchronous = True
+        live = run_scenario_live(sc, engine=engine2)
+        assert [_key(r) for r in sim] == [_key(r) for r in live]
+        # ASYNC hides spawn on expansions
+        for r in sim:
+            if r.kind == "expand":
+                assert r.downtime_s < r.est_wall_s
+
+
+class TestScenarioStructure:
+    def test_registry_has_the_builtin_five(self):
+        names = {s.name for s in registered_scenarios()}
+        assert set(DUAL_PATH) <= names
+        assert "hetero-nasp" in names
+
+    def test_heterogeneous_is_sim_only(self):
+        sc = get_scenario("hetero-nasp")
+        assert sc.sim_only
+        with pytest.raises(ValueError):
+            run_scenario_live(sc)
+        recs = run_scenario_sim(sc)
+        assert any(r.mechanism == "diffusive" for r in recs)
+        assert any(r.mechanism == "termination_shrinkage" for r in recs)
+
+    def test_duplicate_registration_raises(self):
+        sc = registered_scenarios()[0]
+        with pytest.raises(ValueError):
+            register_scenario(sc)
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError):
+            get_scenario("no-such-trace")
+
+    def test_max_nodes_tracks_peak(self):
+        sc = Scenario(
+            name="tmp", description="", initial_nodes=2,
+            events=(
+                ScenarioEvent(step=1, kind="grow", target_nodes=6),
+                ScenarioEvent(step=2, kind="shrink", nodes=(4, 5)),
+                ScenarioEvent(step=3, kind="grow", target_nodes=5),
+            ),
+        )
+        assert sc.max_nodes() == 6
+
+    def test_shrink_events_return_to_low_watermark(self):
+        recs = run_scenario_sim(steady_cycle(name="tmp-cycle", low=2, high=5))
+        assert recs[0].nodes_before == 2 and recs[0].nodes_after == 5
+        assert recs[-1].nodes_after == 2
+
+    def test_ts_is_orders_of_magnitude_cheaper_than_expand(self):
+        """The paper's headline, visible in every scenario trace."""
+        recs = run_scenario_sim(get_scenario("steady-cycle"))
+        expands = [r.est_wall_s for r in recs if r.kind == "expand"]
+        shrinks = [r.est_wall_s for r in recs if r.kind == "shrink"]
+        assert min(expands) / max(shrinks) > 100
+
+
+class TestRMSBridge:
+    def test_from_scenario_preserves_trace(self):
+        sc = get_scenario("node-failures")
+        rms = SimulatedRMS.from_scenario(sc)
+        evs = list(rms.events_until(10**9))
+        assert [e.step for e in evs] == sorted(e.step for e in sc.events)
+        kinds = [e.kind for e in evs]
+        assert kinds[0] is EventKind.GROW
+        assert EventKind.FAIL in kinds
+
+
+TRAINER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.configs import smoke_config
+    from repro.elastic import ElasticTrainer
+    from repro.malleability import get_scenario, run_scenario_sim
+    from repro.models import Model
+
+    model = Model(smoke_config("stablelm_3b"))
+    for name in ("steady-cycle", "burst-arrival", "node-failures",
+                 "straggler-churn"):
+        sc = get_scenario(name)
+        sim = run_scenario_sim(sc)
+        tr = ElasticTrainer.from_scenario(model, sc, batch=8, seq=32)
+        hist = tr.run(sc.steps)
+        live = tr.runtime.history
+        assert len(live) == len(sim), (name, len(live), len(sim))
+        for s, l in zip(sim, live):
+            assert l.downtime_s == s.downtime_s, (name, s, l)
+            assert l.est_wall_s == s.est_wall_s, (name, s, l)
+            assert (l.nodes_before, l.nodes_after) == (
+                s.nodes_before, s.nodes_after), (name, s, l)
+        losses = np.array(tr.losses())
+        assert np.isfinite(losses).all(), name
+        print("SCENARIO_TRAINER_OK", name, len(live), "reconfigs")
+""")
+
+
+@pytest.mark.slow
+def test_trainer_loop_matches_simulator_downtime():
+    """Full ElasticTrainer loop on every dual-path scenario: its runtime
+    history must carry exactly the simulator's timeline-derived downtimes."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", TRAINER_SCRIPT], capture_output=True, text=True,
+        timeout=1200, env=env,
+    )
+    assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
+    for name in DUAL_PATH:
+        assert f"SCENARIO_TRAINER_OK {name}" in proc.stdout
