@@ -10,6 +10,8 @@ Figure 6a/b — heterogeneous expansion/shrink (NASP, 20/32-core nodes)
 Table 2    — iterative diffusive worked example
 Figure 1 / Eq. 3 — hypercube round counts
 Scenarios  — the declarative workload traces, timeline-charged
+Redistribution — stage-3 bytes-moved sweep over model configs
+Overlap    — partial-overlap (fraction x contention) downtime sweep
 """
 from __future__ import annotations
 
@@ -19,17 +21,22 @@ from repro.core import (
     Method,
     ReconfigEngine,
     ShrinkKind,
+    Stage,
     Strategy,
     StrategySpec,
     plan_diffusive,
     plan_hypercube,
     registered_strategies,
     running_vector,
+    shrink_timeline,
 )
 from repro.malleability import (
     MN5,
     NASP,
+    fsdp_bytes_model,
+    param_bytes_for_arch,
     registered_scenarios,
+    replicated_bytes_model,
     run_scenario_sim,
     simulate_expansion,
     simulate_shrink,
@@ -219,6 +226,86 @@ def scenario_traces() -> list[dict]:
                 "nodes": f"{rec.nodes_before}->{rec.nodes_after}",
                 "time_s": round(rec.est_wall_s, 6),
                 "downtime_s": round(rec.downtime_s, 6),
+                "bytes_moved": rec.bytes_moved,
+            })
+    return rows
+
+
+# ------------------------------------------- stage-3 redistribution tables --
+REDIST_ARCHS = ("xlstm_125m", "stablelm_3b", "gemma2_9b")
+REDIST_RESIZES = ((1, 4), (1, 8), (4, 8), (8, 4), (8, 1))
+
+
+def table_redistribution(archs: tuple[str, ...] = REDIST_ARCHS) -> list[dict]:
+    """Expansion/shrink wall time once stage-3 prices real pytree sizes.
+
+    For each model config and (I -> N) resize, charge the timeline with
+    both analytic bytes models (replicated = grow-heavy, fsdp =
+    every-resize-heavy).  The redistribution share of est_wall is the
+    paper's motivation for overlap: it dominates once spawning is
+    parallel.
+    """
+    rows = []
+    for arch in archs:
+        pb = param_bytes_for_arch(arch)
+        for model_name, bytes_model in (
+            ("replicated", replicated_bytes_model(pb)),
+            ("fsdp", fsdp_bytes_model(pb)),
+        ):
+            engine = ReconfigEngine(cost_model=MN5, bytes_model=bytes_model)
+            for i, n in REDIST_RESIZES:
+                if n > i:
+                    kind = "expand"
+                    tl = engine.timeline(engine.plan_expand(i, n, 1))
+                else:
+                    kind = "shrink"
+                    # TS shrink of the doomed single-rank worlds
+                    tl = shrink_timeline(
+                        ShrinkKind.TS, MN5, ns=i, nt=n,
+                        doomed_world_sizes=[1] * (i - n),
+                        bytes_total=engine.redistribution_bytes(i, n),
+                    )
+                rows.append({
+                    "arch": arch, "bytes_model": model_name, "kind": kind,
+                    "I": i, "N": n, "time_s": round(tl.total, 6),
+                    "bytes_moved": tl.bytes_moved,
+                    "redist_share": round(
+                        tl.span(Stage.REDISTRIBUTION) / tl.total, 3
+                    ) if tl.total else 0.0,
+                })
+    return rows
+
+
+OVERLAP_FRACTIONS = (0.0, 0.5, 1.0)
+CONTENTIONS = (1.0, 1.25, 1.5)
+
+
+def overlap_sweep(arch: str = "stablelm_3b") -> list[dict]:
+    """ASYNC downtime under partial redistribution overlap x contention.
+
+    One expansion (1 -> 8 ranks) moving ``arch``'s pytree; sweep how much
+    of the redistribution phase hides under compute and how hard the
+    hidden portion contends with it.  fraction=0 or contention=2 degrade
+    to the synchronous stall; fraction=1, contention=1 is MaM's binary
+    hiding applied to stage 3.
+    """
+    pb = param_bytes_for_arch(arch)
+    rows = []
+    for f in OVERLAP_FRACTIONS:
+        for c in CONTENTIONS:
+            cm = MN5.with_overlap(redistribution=f, contention=c)
+            engine = ReconfigEngine(
+                cost_model=cm, asynchronous=True,
+                bytes_model=replicated_bytes_model(pb),
+            )
+            outcome = engine.execute(engine.plan_expand(1, 8, 1))
+            rows.append({
+                "arch": arch, "overlap_fraction": f, "contention": c,
+                "est_wall_s": round(outcome.total_s, 6),
+                "downtime_s": round(outcome.downtime_s, 6),
+                "hidden_share": round(
+                    1.0 - outcome.downtime_s / outcome.total_s, 3),
+                "bytes_moved": outcome.bytes_moved,
             })
     return rows
 

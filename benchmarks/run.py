@@ -19,9 +19,11 @@ from paper_tables import (  # noqa: E402
     fig4b_homogeneous_shrink,
     fig5_preferred_grid,
     fig6_heterogeneous,
+    overlap_sweep,
     paper_envelopes,
     scenario_traces,
     table2_trace,
+    table_redistribution,
 )
 
 
@@ -56,7 +58,18 @@ def main() -> None:
     for r in scenario_traces():
         name = f"scenario/{r['scenario']}/s{r['step']}-{r['kind']}"
         print(f"{name},{r['time_s']*1e6:.0f},"
-              f"downtime_us={r['downtime_s']*1e6:.0f};{r['mechanism']};{r['nodes']}")
+              f"downtime_us={r['downtime_s']*1e6:.0f};{r['mechanism']};{r['nodes']};"
+              f"bytes={r['bytes_moved']}")
+
+    for r in table_redistribution():
+        name = f"redist/{r['arch']}/{r['bytes_model']}/I{r['I']}-N{r['N']}"
+        print(f"{name},{r['time_s']*1e6:.0f},"
+              f"bytes={r['bytes_moved']};redist_share={r['redist_share']}")
+
+    for r in overlap_sweep():
+        name = f"overlap/{r['arch']}/f{r['overlap_fraction']}-c{r['contention']}"
+        print(f"{name},{r['downtime_s']*1e6:.0f},"
+              f"wall_us={r['est_wall_s']*1e6:.0f};hidden={r['hidden_share']}")
 
     print()
     print("=== paper envelope check (simulator vs paper §5) ===")

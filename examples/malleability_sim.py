@@ -2,14 +2,20 @@
 
 Prints the preferred-method grid (paper Fig. 5) for a chosen cluster
 profile — candidates come from the engine's strategy registry — shows
-the event timeline for one expansion, and can replay any registered
-declarative scenario.
+the event timeline for one expansion (bytes-moved included), and can
+replay any registered declarative scenario.
+
+Doubles as a smoke check: every replay of a homogeneous scenario (and
+the final sweep in the default mode) runs the trace through BOTH the
+simulator and the live bookkeeping runtime and exits non-zero if any
+per-event wall time, downtime, or bytes-moved number disagrees.
 
     PYTHONPATH=src python examples/malleability_sim.py [--profile mn5|nasp]
     PYTHONPATH=src python examples/malleability_sim.py --scenario burst-arrival
     PYTHONPATH=src python examples/malleability_sim.py --list-scenarios
 """
 import argparse
+import sys
 
 from repro.core import (
     Method,
@@ -24,6 +30,7 @@ from repro.malleability import (
     NASP,
     get_scenario,
     registered_scenarios,
+    run_scenario_live,
     run_scenario_sim,
     simulate_expansion,
     simulate_shrink,
@@ -68,9 +75,10 @@ def show_timeline(cm, C):
     plan = engine.plan_expand(C, 32 * C, C)
     tl = engine.timeline(plan)
     for e in tl.events:
-        flag = " (async-overlappable)" if e.overlappable else ""
+        flag = (f" (overlap {e.overlap_fraction:.0%})" if e.overlappable else "")
+        moved = f"  moved {e.bytes_moved/1e6:.1f} MB" if e.bytes_moved else ""
         print(f"  {e.start*1e3:9.2f} -> {e.end*1e3:9.2f} ms  "
-              f"{e.stage.value:<10} {e.label}{flag}")
+              f"{e.stage.value:<10} {e.label}{flag}{moved}")
     print(f"  total {tl.total*1e3:.2f} ms, "
           f"ASYNC downtime {tl.downtime(asynchronous=True)*1e3:.2f} ms "
           f"({plan.spawn.steps} spawn rounds, {len(plan.spawn.groups)} groups)")
@@ -80,20 +88,66 @@ def show_timeline(cm, C):
           f"({tl.total/ts.total:.0f}x faster than the expansion)")
 
 
+def _record_key(r):
+    return (r.step, r.kind, r.mechanism, r.nodes_before,
+            r.nodes_after, r.est_wall_s, r.downtime_s, r.bytes_moved)
+
+
+def check_sim_live_agreement(scenarios, sim_records=None) -> int:
+    """Run each homogeneous scenario through both executors; report diffs.
+
+    ``sim_records`` optionally maps scenario name -> already-computed
+    simulator records, so callers that just simmed a trace don't pay for
+    a rerun.
+    """
+    events = 0
+    bad = 0
+    checked = 0
+    for sc in scenarios:
+        if sc.sim_only:
+            continue
+        checked += 1
+        sim = [_record_key(r) for r in
+               (sim_records or {}).get(sc.name) or run_scenario_sim(sc)]
+        live = [_record_key(r) for r in run_scenario_live(sc)]
+        diffs = [(s, l) for s, l in zip(sim, live) if s != l] + (
+            [("length", (len(sim), len(live)))] if len(sim) != len(live) else [])
+        events += len(sim)
+        if diffs:
+            bad += 1
+            print(f"SIM/LIVE DISAGREEMENT in {sc.name!r}:", file=sys.stderr)
+            for s, l in diffs:
+                print(f"  sim={s}\n  live={l}", file=sys.stderr)
+    if bad:
+        return 1
+    print(f"sim/live agreement OK ({checked} scenarios, "
+          f"{events} events, bytes included)")
+    return 0
+
+
 def replay_scenario(name):
     sc = get_scenario(name)
     print(f"scenario {sc.name!r}: {sc.description}")
     print(f"  pool: {sc.core_pool or f'{sc.cores_per_node} cores/node'}, "
-          f"initial {sc.initial_nodes} nodes, profile {sc.profile}")
+          f"initial {sc.initial_nodes} nodes, profile {sc.profile}"
+          + (f", pytree {sc.resolved_param_bytes()/1e9:.2f} GB ({sc.arch})"
+             if sc.resolved_param_bytes() else ""))
     total = down = 0.0
-    for rec in run_scenario_sim(sc):
+    moved = 0
+    records = run_scenario_sim(sc)
+    for rec in records:
         print(f"  step {rec.step:>3} {rec.kind:<10} {rec.mechanism:<22} "
               f"{rec.nodes_before}->{rec.nodes_after} nodes  "
               f"total {rec.est_wall_s*1e3:9.3f} ms  "
-              f"downtime {rec.downtime_s*1e3:9.3f} ms")
+              f"downtime {rec.downtime_s*1e3:9.3f} ms  "
+              f"moved {rec.bytes_moved/1e6:10.1f} MB")
         total += rec.est_wall_s
         down += rec.downtime_s
-    print(f"  cumulative reconfiguration {total*1e3:.2f} ms, downtime {down*1e3:.2f} ms")
+        moved += rec.bytes_moved
+    print(f"  cumulative reconfiguration {total*1e3:.2f} ms, "
+          f"downtime {down*1e3:.2f} ms, {moved/1e9:.2f} GB moved")
+    if not sc.sim_only:
+        sys.exit(check_sim_live_agreement([sc], sim_records={sc.name: records}))
 
 
 def main():
@@ -118,6 +172,8 @@ def main():
     print(f"preferred method per (I -> N), profile={args.profile}, C={args.cores}")
     preferred_grid(cm, args.cores, nodes)
     show_timeline(cm, args.cores)
+    print()
+    sys.exit(check_sim_live_agreement(list(registered_scenarios())))
 
 
 if __name__ == "__main__":

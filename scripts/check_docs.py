@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Docs health checks (the CI `docs` job).
+
+Two checks, selectable by flag (default: both):
+
+* ``--links``  — every intra-repo markdown link (``[text](path)`` with a
+  relative, non-http target) in ``*.md`` files must resolve to an
+  existing file, anchor stripped.
+* ``--imports`` — every module under ``src/repro`` must be
+  ``python -m pydoc``-importable (imported via ``pydoc.safeimport``, the
+  machinery behind pydoc), so the documented API surface can always be
+  rendered.
+
+Exits non-zero listing every failure.
+"""
+from __future__ import annotations
+
+import argparse
+import pydoc
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", ".github", "results", "__pycache__", ".claude"}
+
+
+def iter_markdown() -> list[Path]:
+    return [
+        p for p in REPO.rglob("*.md")
+        if not any(part in SKIP_DIRS for part in p.parts)
+    ]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in iter_markdown():
+        for target in MD_LINK.findall(md.read_text()):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, ...
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure in-page anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def repro_modules() -> list[str]:
+    src = REPO / "src"
+    mods = []
+    for py in sorted((src / "repro").rglob("*.py")):
+        rel = py.relative_to(src).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        mods.append(".".join(parts))
+    return sorted(set(mods))
+
+
+def check_imports() -> list[str]:
+    sys.path.insert(0, str(REPO / "src"))
+    errors = []
+    for mod in repro_modules():
+        try:
+            if pydoc.safeimport(mod) is None:
+                errors.append(f"{mod}: not found by pydoc")
+        except pydoc.ErrorDuringImport as exc:
+            errors.append(f"{mod}: {exc}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links", action="store_true")
+    ap.add_argument("--imports", action="store_true")
+    args = ap.parse_args()
+    run_all = not (args.links or args.imports)
+
+    errors = []
+    if args.links or run_all:
+        errors += check_links()
+    if args.imports or run_all:
+        errors += check_imports()
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        checked = []
+        if args.links or run_all:
+            checked.append(f"{len(iter_markdown())} markdown files")
+        if args.imports or run_all:
+            checked.append(f"{len(repro_modules())} modules")
+        print("docs OK:", ", ".join(checked))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,9 +12,12 @@ module is its single implementation point:
   matrices;
 * an **event timeline** — every plan is executed as an explicit list of
   typed stage events with start/end times charged by a ``CostModel``.
-  ASYNC overlap is a *property of the timeline* (events flagged
-  ``overlappable`` hide under application compute), not downtime
-  arithmetic re-derived per consumer;
+  ASYNC overlap is a *property of the timeline*: each event carries an
+  ``overlap_fraction`` (how much of it can hide under application
+  compute) and the timeline a contention factor, so downtime is never
+  arithmetic re-derived per consumer.  Stage-3 data movement is a
+  first-class term: events carry ``bytes_moved`` and the engine charges
+  them through a pluggable *bytes model* (see ``ReconfigEngine``);
 * an **execution protocol** — backends (the cost simulator, the live
   NodeGroup runtime) receive the same :class:`ReconfigPlan` objects and
   apply them to their substrate while the engine charges the timeline.
@@ -63,19 +66,45 @@ class Stage(enum.Enum):
 
 @dataclass(frozen=True)
 class TimelineEvent:
-    """One charged stage interval on the reconfiguration timeline."""
+    """One charged stage interval on the reconfiguration timeline.
+
+    ``overlap_fraction`` is the share of this event's work that can
+    proceed under application compute when the job runs ASYNC (MaM's
+    binary model is the special case 1.0 for spawn, 0.0 elsewhere).
+    ``bytes_moved`` is the stage-3 data volume this event accounts for
+    (non-zero only on REDISTRIBUTION events today).
+    """
 
     stage: Stage
     start: float
     end: float
     label: str = ""
-    # True when MaM's ASYNC mode can hide this event under application
-    # compute (the spawn phase); downtime() subtracts exactly these.
-    overlappable: bool = False
+    overlap_fraction: float = 0.0
+    bytes_moved: int = 0
 
     @property
     def duration(self) -> float:
         return self.end - self.start
+
+    @property
+    def overlappable(self) -> bool:
+        """True when any part of this event can hide under compute."""
+        return self.overlap_fraction > 0.0
+
+    def hidden_under_compute(self, contention: float = 1.0) -> float:
+        """Seconds of this event that ASYNC execution hides from the app.
+
+        The hidden portion (``duration * overlap_fraction``) shares the
+        network and launcher daemons with compute, so hiding a fraction
+        ``f`` still costs ``f * (contention - 1)`` of the duration in
+        lost application progress: the effective hidden time is
+        ``duration * f * (2 - contention)``, clamped to ``[0, d*f]``.
+        ``contention=1`` is perfect hiding; ``contention>=2`` means the
+        overlap buys nothing.
+        """
+        f = min(max(self.overlap_fraction, 0.0), 1.0)
+        eff = f * max(0.0, 2.0 - max(contention, 1.0))
+        return self.duration * min(eff, f)
 
 
 @dataclass(frozen=True)
@@ -84,31 +113,43 @@ class Timeline:
 
     Both ``ExpansionReport.downtime`` and ``ReconfigRecord.downtime_s``
     read off this object, so the two layers cannot disagree.
+    ``contention`` is the CostModel's overlap-contention factor, captured
+    at build time so downtime queries need no cost model.
     """
 
     events: tuple[TimelineEvent, ...] = ()
+    contention: float = 1.0
 
     @property
     def total(self) -> float:
         """Wall time of the whole reconfiguration."""
         return max((e.end for e in self.events), default=0.0)
 
+    @property
+    def bytes_moved(self) -> int:
+        """Total stage-3 bytes charged across all events."""
+        return sum(e.bytes_moved for e in self.events)
+
     def span(self, stage: Stage) -> float:
         """Summed duration of every event of ``stage``."""
         return sum(e.duration for e in self.events if e.stage is stage)
 
     def downtime(self, asynchronous: bool = False) -> float:
-        """App-visible stall.
+        """App-visible stall in seconds.
 
-        ASYNC overlap is a property of the timeline: overlappable events
-        (the spawn phase) run under application compute, everything else
-        stalls the app.
+        Synchronous jobs stall for the whole timeline.  ASYNC jobs hide
+        each event's ``overlap_fraction`` under compute, degraded by the
+        timeline's contention factor (see
+        :meth:`TimelineEvent.hidden_under_compute`).
         """
         if not asynchronous:
             return self.total
-        return self.total - sum(e.duration for e in self.events if e.overlappable)
+        return self.total - sum(
+            e.hidden_under_compute(self.contention) for e in self.events
+        )
 
     def as_rows(self) -> list[dict]:
+        """Timeline as plain dict rows (for tables/CSV)."""
         return [
             {
                 "stage": e.stage.value,
@@ -116,7 +157,9 @@ class Timeline:
                 "start_s": e.start,
                 "end_s": e.end,
                 "duration_s": e.duration,
+                "overlap_fraction": e.overlap_fraction,
                 "overlappable": e.overlappable,
+                "bytes_moved": e.bytes_moved,
             }
             for e in self.events
         ]
@@ -125,25 +168,28 @@ class Timeline:
 class _TimelineBuilder:
     """Appends events back-to-back (the pipeline stages are serial)."""
 
-    def __init__(self) -> None:
+    def __init__(self, contention: float = 1.0) -> None:
         self._events: list[TimelineEvent] = []
         self._t = 0.0
+        self._contention = contention
 
     def add(self, stage: Stage, duration: float, label: str = "",
-            overlappable: bool = False) -> None:
+            overlap_fraction: float = 0.0, bytes_moved: int = 0) -> None:
         if duration <= 0.0:
             return
         self._events.append(
-            TimelineEvent(stage, self._t, self._t + duration, label, overlappable)
+            TimelineEvent(stage, self._t, self._t + duration, label,
+                          overlap_fraction, bytes_moved)
         )
         self._t += duration
 
     def extend(self, events: Sequence[TimelineEvent]) -> None:
         for e in events:
-            self.add(e.stage, e.duration, e.label, e.overlappable)
+            self.add(e.stage, e.duration, e.label, e.overlap_fraction,
+                     e.bytes_moved)
 
     def build(self) -> Timeline:
-        return Timeline(events=tuple(self._events))
+        return Timeline(events=tuple(self._events), contention=self._contention)
 
 
 # ======================================================= strategy registry ==
@@ -172,11 +218,21 @@ _STRATEGY_REGISTRY: dict[str, StrategySpec] = {}
 
 
 def strategy_key(strategy: StrategyLike) -> str:
+    """Normalize a Strategy enum or plain string to its registry key."""
     return strategy.value if isinstance(strategy, Strategy) else str(strategy)
 
 
 def register_strategy(spec: StrategySpec, *, overwrite: bool = False) -> StrategySpec:
-    """Register a spawning strategy (third-party strategies welcome)."""
+    """Register a spawning strategy (third-party strategies welcome).
+
+    Args:
+        spec: the strategy spec; ``spec.key`` becomes the registry key.
+        overwrite: replace an existing entry instead of raising.
+    Returns:
+        The spec, for chaining.
+    Raises:
+        ValueError: on a duplicate key without ``overwrite``.
+    """
     if spec.key in _STRATEGY_REGISTRY and not overwrite:
         raise ValueError(f"strategy {spec.key!r} already registered")
     _STRATEGY_REGISTRY[spec.key] = spec
@@ -184,6 +240,7 @@ def register_strategy(spec: StrategySpec, *, overwrite: bool = False) -> Strateg
 
 
 def get_strategy(strategy: StrategyLike) -> StrategySpec:
+    """Look up a registered spec by enum or key (KeyError lists known)."""
     key = strategy_key(strategy)
     try:
         return _STRATEGY_REGISTRY[key]
@@ -200,7 +257,15 @@ def registered_strategies() -> tuple[StrategySpec, ...]:
 
 # ---- cores normalization helpers -------------------------------------------
 def as_core_vector(cores: Union[int, Sequence[int]], nt: int) -> list[int]:
-    """C scalar -> per-node A vector wide enough for NT ranks."""
+    """C scalar -> per-node A vector wide enough for NT ranks.
+
+    Args:
+        cores: homogeneous cores-per-node C, or an explicit A vector
+            (returned as a list unchanged).
+        nt: target rank count the vector must cover.
+    Returns:
+        The per-node allocation vector.
+    """
     if isinstance(cores, int):
         n_nodes = -(-nt // cores)
         return [cores] * n_nodes
@@ -208,7 +273,16 @@ def as_core_vector(cores: Union[int, Sequence[int]], nt: int) -> list[int]:
 
 
 def running_vector(a_vec: Sequence[int], ns: int) -> list[int]:
-    """Pack the NS sources greedily into the allocation vector (R)."""
+    """Pack the NS sources greedily into the allocation vector (R).
+
+    Args:
+        a_vec: per-node allocation vector A.
+        ns: number of currently running source ranks.
+    Returns:
+        Per-node running counts R (same length prefix semantics as A).
+    Raises:
+        ValueError: if the sources do not fit in A.
+    """
     out = []
     remaining = ns
     for a in a_vec:
@@ -281,12 +355,18 @@ class RedistributionSpec:
     ``layout`` maps final global rank -> (group_id, local_rank); the
     elastic runtime turns this into a device permutation + resharding
     plan; the simulator charges bytes/bandwidth for it.
+
+    ``bytes_total`` is the resolved data volume for THIS event (from the
+    engine's bytes model, or ``bytes_per_rank * |nt - ns|`` as the
+    scalar fallback); it is what the timeline charges as a
+    REDISTRIBUTION event and what ``bytes_moved`` reports read.
     """
 
     layout: tuple[tuple[int, int], ...]
     ns: int
     nt: int
     bytes_per_rank: int = 0
+    bytes_total: int = 0
 
 
 @dataclass(frozen=True)
@@ -321,11 +401,18 @@ class ReconfigOutcome:
 
     @property
     def total_s(self) -> float:
+        """Timeline wall time in seconds."""
         return self.timeline.total
 
     @property
     def downtime_s(self) -> float:
+        """App-visible stall (honours the plan's ASYNC flag)."""
         return self.timeline.downtime(self.plan.asynchronous)
+
+    @property
+    def bytes_moved(self) -> int:
+        """Stage-3 bytes charged on the timeline."""
+        return self.timeline.bytes_moved
 
 
 class ExecutionBackend(Protocol):
@@ -348,21 +435,22 @@ def _is_parallel(plan: SpawnPlan) -> bool:
 
 
 def _spawn_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
-    """Spawn phase per strategy; every event is ASYNC-overlappable."""
+    """Spawn phase per strategy; events overlap by ``cm.spawn_overlap``."""
     if not plan.groups:
         return
+    f = cm.spawn_overlap
     if plan.strategy in (Strategy.SEQUENTIAL, Strategy.SINGLE):
         g = plan.groups[0]
         dur = cm.spawn_call(g.size, len(g.nodes_spanned()))
         if plan.strategy is Strategy.SINGLE:
             # rank 0 informs the rest afterwards (MaM Single strategy)
             dur += cm.t_token * math.ceil(math.log2(max(plan.ns, 2)))
-        tb.add(Stage.SPAWN, dur, label="collective spawn", overlappable=True)
+        tb.add(Stage.SPAWN, dur, label="collective spawn", overlap_fraction=f)
         return
     if plan.strategy is Strategy.SEQUENTIAL_PER_NODE:
         for g in plan.groups:
             tb.add(Stage.SPAWN, cm.spawn_call(g.size, 1),
-                   label=f"spawn node {g.node}", overlappable=True)
+                   label=f"spawn node {g.node}", overlap_fraction=f)
         return
     # Parallel strategies: rounds of concurrent single-node spawns.
     initial_nodes = sum(1 for r in plan.running if r > 0)
@@ -377,7 +465,7 @@ def _spawn_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> Non
             [(g.size, 1) for g in round_groups], oversubscribed=oversub
         )
         tb.add(Stage.SPAWN, dur, label=f"round {s} ({len(round_groups)} groups)",
-               overlappable=True)
+               overlap_fraction=f)
 
 
 def _sync_event(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
@@ -394,7 +482,8 @@ def _sync_event(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
     per_level = cm.t_token + cm.barrier(max_group) + cm.comm_split(max_group)
     ports = cm.t_port  # opened concurrently by all acceptor roots
     dur = ports + per_level + depth * 2 * (cm.t_token + cm.barrier(max_group))
-    tb.add(Stage.SYNC, dur, label=f"tree sync depth {depth}")
+    tb.add(Stage.SYNC, dur, label=f"tree sync depth {depth}",
+           overlap_fraction=cm.sync_overlap)
 
 
 def _connect_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
@@ -410,14 +499,25 @@ def _connect_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> N
             sizes[acc] = merged
             del sizes[conn]
         tb.add(Stage.CONNECT, round_cost,
-               label=f"connect round {i + 1} ({len(rnd.pairs)} merges)")
+               label=f"connect round {i + 1} ({len(rnd.pairs)} merges)",
+               overlap_fraction=cm.connect_overlap)
 
 
 def expansion_timeline(
     plan: SpawnPlan, cm: "CostModel", bytes_total: int = 0
 ) -> Timeline:
-    """Charge one expansion as the paper's serial stage pipeline."""
-    tb = _TimelineBuilder()
+    """Charge one expansion as the paper's serial stage pipeline.
+
+    Args:
+        plan: the spawn plan to execute.
+        cm: latency/bandwidth model (also supplies per-stage overlap
+            fractions and the contention factor).
+        bytes_total: stage-3 data volume; when positive a REDISTRIBUTION
+            event carrying ``bytes_moved`` is appended.
+    Returns:
+        The charged :class:`Timeline`.
+    """
+    tb = _TimelineBuilder(contention=cm.overlap_contention)
     _spawn_events(tb, plan, cm)
     _sync_event(tb, plan, cm)
     _connect_events(tb, plan, cm)
@@ -432,7 +532,8 @@ def expansion_timeline(
     tb.add(Stage.FINAL, final, label="final intercomm merge")
     if bytes_total > 0:
         tb.add(Stage.REDISTRIBUTION, cm.redistribution(bytes_total),
-               label=f"redistribute {bytes_total} B")
+               label=f"redistribute {bytes_total} B",
+               overlap_fraction=cm.redist_overlap, bytes_moved=bytes_total)
     return tb.build()
 
 
@@ -444,6 +545,7 @@ def shrink_timeline(
     nt: int = 0,
     doomed_world_sizes: Optional[Sequence[int]] = None,
     respawn_plan: Optional[SpawnPlan] = None,
+    bytes_total: int = 0,
 ) -> Timeline:
     """Charge one shrink by mechanism (§4.6-4.7).
 
@@ -452,8 +554,11 @@ def shrink_timeline(
     * ZS — same token path, but ranks only go to sleep; nodes stay pinned.
     * SS — the Baseline path: spawn the NT-sized world (optionally with a
       parallel strategy: pass ``respawn_plan``), tear the old world down.
+
+    ``bytes_total`` > 0 appends a REDISTRIBUTION event (survivors absorb
+    the doomed ranks' shards) after the mechanism's own events.
     """
-    tb = _TimelineBuilder()
+    tb = _TimelineBuilder(contention=cm.overlap_contention)
     doomed = list(doomed_world_sizes or [])
     if kind is ShrinkKind.TS:
         dur = cm.ts_terminate(doomed or [1]) + cm.t_token
@@ -477,6 +582,10 @@ def shrink_timeline(
                 cm.ss_respawn(nt, max(1, -(-nt // width)), ns),
                 label="SS respawn",
             )
+    if bytes_total > 0:
+        tb.add(Stage.REDISTRIBUTION, cm.redistribution(bytes_total),
+               label=f"redistribute {bytes_total} B",
+               overlap_fraction=cm.redist_overlap, bytes_moved=bytes_total)
     return tb.build()
 
 
@@ -497,6 +606,12 @@ class ReconfigEngine:
     asynchronous: bool = False
     bytes_per_rank: int = 0
     cost_model: Optional["CostModel"] = None
+    # Stage-3 bytes model: ``f(ns_ranks, nt_ranks) -> bytes_moved``.
+    # Analytic device-free models live in repro.malleability.cost_model
+    # (replicated_bytes_model / fsdp_bytes_model); the exact sharded-pytree
+    # model is repro.elastic.reshard.PytreeBytesModel.  When None the
+    # scalar ``bytes_per_rank`` fallback is charged instead.
+    bytes_model: Optional[Callable[[int, int], int]] = None
 
     def __post_init__(self) -> None:
         if self.cost_model is None:
@@ -507,6 +622,17 @@ class ReconfigEngine:
             self.cost_model = MN5
 
     # ------------------------------------------------------------- planning --
+    def redistribution_bytes(self, ns: int, nt: int) -> int:
+        """Stage-3 bytes for an ``ns -> nt`` resize.
+
+        Consults ``bytes_model`` when set, otherwise falls back to the
+        scalar ``bytes_per_rank * |nt - ns|`` (the ranks that change hold
+        the data in flight).  Returns 0 when neither is configured.
+        """
+        if self.bytes_model is not None:
+            return max(0, int(self.bytes_model(ns, nt)))
+        return max(0, self.bytes_per_rank * abs(nt - ns))
+
     def plan_expand(
         self,
         ns: int,
@@ -518,8 +644,16 @@ class ReconfigEngine:
     ) -> ReconfigPlan:
         """Plan an NS -> NT expansion onto the given allocation.
 
-        ``cores`` is either C (homogeneous) or the per-node A vector
-        (heterogeneous, requires a vector-capable strategy).
+        Args:
+            ns: current rank count (sources).
+            nt: target rank count.
+            cores: C (homogeneous cores/node) or the per-node A vector
+                (heterogeneous, requires a vector-capable strategy).
+            strategy: override this engine's strategy for one plan.
+            method: override this engine's method for one plan.
+        Returns:
+            A self-contained :class:`ReconfigPlan` (spawn plan, sync
+            graph, connect rounds, resolved redistribution bytes).
         """
         spec = get_strategy(strategy if strategy is not None else self.strategy)
         m = method if method is not None else self.method
@@ -535,6 +669,7 @@ class ReconfigEngine:
             ns=ns,
             nt=nt,
             bytes_per_rank=self.bytes_per_rank,
+            bytes_total=self.redistribution_bytes(ns, nt),
         )
         return ReconfigPlan(
             kind="expand",
@@ -557,8 +692,15 @@ class ReconfigEngine:
     ) -> ReconfigPlan:
         """Plan a shrink against live cluster bookkeeping.
 
-        The doomed world sizes are captured into the plan so the timeline
-        can be charged later without re-reading (possibly mutated) state.
+        Args:
+            state: the job's :class:`ClusterState`.
+            release_nodes: node ids to release (TS path), or None.
+            release_cores: core counts to release instead, or None.
+        Returns:
+            A :class:`ReconfigPlan` with the shrink actions, doomed
+            world sizes (captured so the timeline can be charged later
+            without re-reading possibly-mutated state), and resolved
+            redistribution bytes.
         """
         shrink = _plan_shrink_actions(state, release_nodes, release_cores)
         doomed_sizes = tuple(
@@ -570,23 +712,41 @@ class ReconfigEngine:
             len(a.ranks) for a in shrink.actions if a.kind.value == "zombify_ranks"
         )
         ns = sum(w.size for w in state.worlds.values())
+        nt = max(0, ns - sum(doomed_sizes) - zombified)
         return ReconfigPlan(
             kind="shrink",
             method=self.method,
             strategy=self.strategy,
             asynchronous=self.asynchronous,
             ns=ns,
-            nt=max(0, ns - sum(doomed_sizes) - zombified),
+            nt=nt,
             shrink=shrink,
             shrink_world_sizes=doomed_sizes,
+            redistribution=RedistributionSpec(
+                layout=(),
+                ns=ns,
+                nt=nt,
+                bytes_per_rank=self.bytes_per_rank,
+                bytes_total=self.redistribution_bytes(ns, nt),
+            ),
         )
 
     # ------------------------------------------------------------- timeline --
     def timeline(self, plan: ReconfigPlan) -> Timeline:
-        """Charge a plan as an event timeline with this engine's CostModel."""
+        """Charge a plan as an event timeline with this engine's CostModel.
+
+        The plan's resolved ``redistribution.bytes_total`` is charged as
+        a REDISTRIBUTION event, so ``est_wall`` prices data movement for
+        every consumer reading this timeline.
+        """
+        bytes_total = (
+            plan.redistribution.bytes_total if plan.redistribution else 0
+        )
         if plan.kind == "expand":
             assert plan.spawn is not None
-            return expansion_timeline(plan.spawn, self.cost_model)
+            return expansion_timeline(
+                plan.spawn, self.cost_model, bytes_total=bytes_total
+            )
         if plan.kind == "shrink":
             assert plan.shrink is not None
             return shrink_timeline(
@@ -595,6 +755,7 @@ class ReconfigEngine:
                 ns=plan.ns,
                 nt=plan.nt,
                 doomed_world_sizes=list(plan.shrink_world_sizes) or [1],
+                bytes_total=bytes_total,
             )
         return Timeline()
 
@@ -602,7 +763,15 @@ class ReconfigEngine:
     def execute(
         self, plan: ReconfigPlan, backend: Optional[ExecutionBackend] = None
     ) -> ReconfigOutcome:
-        """Charge the timeline, then let the backend apply the plan."""
+        """Charge the timeline, then let the backend apply the plan.
+
+        Args:
+            plan: a plan from :meth:`plan_expand` / :meth:`plan_shrink`.
+            backend: optional substrate (live runtime, bookkeeping twin)
+                that receives ``apply_expand`` / ``apply_shrink``.
+        Returns:
+            The :class:`ReconfigOutcome` (plan + charged timeline).
+        """
         tl = self.timeline(plan)
         if backend is not None:
             if plan.kind == "expand":

@@ -7,7 +7,12 @@ redistribution stage is a live resharding of params/optimizer state onto
 the rebuilt mesh.
 """
 from .node_group import DevicePool, NodeGroup
-from .reshard import reshard_tree, transfer_stats
+from .reshard import (
+    PytreeBytesModel,
+    predicted_transfer_stats,
+    reshard_tree,
+    transfer_stats,
+)
 from .rms import Event, EventKind, SimulatedRMS
 from .runtime import ElasticRuntime, ReconfigRecord
 from .trainer import ElasticTrainer, StepRecord
@@ -19,9 +24,11 @@ __all__ = [
     "Event",
     "EventKind",
     "NodeGroup",
+    "PytreeBytesModel",
     "ReconfigRecord",
     "SimulatedRMS",
     "StepRecord",
+    "predicted_transfer_stats",
     "reshard_tree",
     "transfer_stats",
 ]

@@ -9,10 +9,16 @@ so shards that already sit on a surviving device do not move.
 
 ``transfer_stats`` quantifies the win: bytes that stay local vs bytes
 that cross devices, for any (old sharding -> new sharding) pair.
+``predicted_transfer_stats`` computes the same accounting *without*
+materializing any array (from ``Sharding.devices_indices_map``), so the
+cost simulator can charge the exact bytes the live reshard will move;
+:class:`PytreeBytesModel` packages that as a
+``ReconfigEngine.bytes_model``.
 """
 from __future__ import annotations
 
-from typing import Any
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
@@ -35,39 +41,172 @@ def reshard_tree(tree: Any, mesh: Mesh, spec_tree: Any) -> Any:
     )
 
 
+def _index_key(index: tuple, shape: tuple[int, ...]) -> tuple:
+    """Normalize a shard's index slices to ((start, stop), ...) bounds."""
+    return tuple(
+        (s.start or 0, s.stop if s.stop is not None else dim)
+        for s, dim in zip(index, shape)
+    )
+
+
+def _key_nbytes(key: tuple, itemsize: int) -> int:
+    return int(np.prod([hi - lo for lo, hi in key]) * itemsize) if key else itemsize
+
+
 def _shard_index_map(arr: Any) -> dict[tuple, set[int]]:
     """Map shard index-bounds -> device ids currently holding that shard."""
     out: dict[tuple, set[int]] = {}
     for shard in arr.addressable_shards:
-        key = tuple(
-            (s.start or 0, s.stop if s.stop is not None else dim)
-            for s, dim in zip(shard.index, arr.shape)
-        )
-        out.setdefault(key, set()).add(shard.device.id)
+        out.setdefault(_index_key(shard.index, arr.shape), set()).add(shard.device.id)
     return out
 
 
+def _count_transfers(
+    old_map: dict[tuple, set[int]],
+    new_placements: list[tuple[tuple, int]],
+    itemsize: int,
+) -> tuple[int, int, int]:
+    """(total, stayed, moved) bytes over new (index-key, device-id) pairs."""
+    stayed = moved = total = 0
+    for key, device_id in new_placements:
+        nbytes = _key_nbytes(key, itemsize)
+        total += nbytes
+        if device_id in old_map.get(key, set()):
+            stayed += nbytes
+        else:
+            moved += nbytes
+    return total, stayed, moved
+
+
 def transfer_stats(old_tree: Any, new_tree: Any) -> dict[str, int]:
-    """Bytes that moved vs stayed local across a resharding.
+    """Measure bytes that moved vs stayed local across a resharding.
 
     A shard "stays" when the new placement includes a device that already
     held identical index bounds before the reshard.
+
+    Args:
+        old_tree: pytree of live arrays before the reshard.
+        new_tree: the same pytree after the reshard (matching structure).
+    Returns:
+        ``{"bytes_total", "bytes_stayed", "bytes_moved"}`` summed over
+        all leaves (zeros for an empty tree).
     """
     stayed = moved = total = 0
     old_leaves = jax.tree.leaves(old_tree)
     new_leaves = jax.tree.leaves(new_tree)
     for old, new in zip(old_leaves, new_leaves):
         itemsize = np.dtype(old.dtype).itemsize
-        old_map = _shard_index_map(old)
-        for shard in new.addressable_shards:
-            key = tuple(
-                (s.start or 0, s.stop if s.stop is not None else dim)
-                for s, dim in zip(shard.index, new.shape)
-            )
-            nbytes = int(np.prod([hi - lo for lo, hi in key]) * itemsize) if key else itemsize
-            total += nbytes
-            if shard.device.id in old_map.get(key, set()):
-                stayed += nbytes
-            else:
-                moved += nbytes
+        placements = [
+            (_index_key(shard.index, new.shape), shard.device.id)
+            for shard in new.addressable_shards
+        ]
+        t, s, m = _count_transfers(_shard_index_map(old), placements, itemsize)
+        total += t
+        stayed += s
+        moved += m
     return {"bytes_total": total, "bytes_stayed": stayed, "bytes_moved": moved}
+
+
+def predicted_transfer_stats(
+    tree: Any, old_shardings: Any, new_shardings: Any
+) -> dict[str, int]:
+    """Predict :func:`transfer_stats` without materializing any array.
+
+    Uses ``Sharding.devices_indices_map`` on both sides, which is exactly
+    the placement ``jax.device_put`` realizes — so for arrays actually
+    placed with ``old_shardings``, the prediction equals the measured
+    stats of a reshard onto ``new_shardings``, byte for byte.
+
+    Args:
+        tree: pytree of shape/dtype carriers (``jax.ShapeDtypeStruct`` or
+            arrays; no data is read).
+        old_shardings: pytree of ``Sharding`` matching ``tree`` (or a
+            single sharding applied to all leaves).
+        new_shardings: same, for the target placement.
+    Returns:
+        ``{"bytes_total", "bytes_stayed", "bytes_moved"}``.
+    """
+    leaves = jax.tree.leaves(tree)
+
+    def _as_list(shardings, which):
+        flat = jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "devices_indices_map")
+        )
+        if len(flat) == 1 and len(leaves) > 1:
+            return flat * len(leaves)
+        if len(flat) != len(leaves):
+            raise ValueError(
+                f"{which} shardings have {len(flat)} leaves for a tree of "
+                f"{len(leaves)} — bytes would be silently undercounted"
+            )
+        return flat
+
+    stayed = moved = total = 0
+    for leaf, old_s, new_s in zip(leaves, _as_list(old_shardings, "old"),
+                                  _as_list(new_shardings, "new")):
+        shape = tuple(leaf.shape)
+        itemsize = np.dtype(leaf.dtype).itemsize
+        old_map: dict[tuple, set[int]] = {}
+        for dev, idx in old_s.devices_indices_map(shape).items():
+            old_map.setdefault(_index_key(idx, shape), set()).add(dev.id)
+        placements = [
+            (_index_key(idx, shape), dev.id)
+            for dev, idx in new_s.devices_indices_map(shape).items()
+        ]
+        t, s, m = _count_transfers(old_map, placements, itemsize)
+        total += t
+        stayed += s
+        moved += m
+    return {"bytes_total": total, "bytes_stayed": stayed, "bytes_moved": moved}
+
+
+@dataclass
+class PytreeBytesModel:
+    """Exact stage-3 bytes model for a live model's parameter pytree.
+
+    Callable as ``(ns_ranks, nt_ranks) -> bytes_moved``, the
+    ``ReconfigEngine.bytes_model`` protocol: it resolves the model's
+    parameter shardings on 1-D ``("data",)`` meshes of both rank counts
+    (devices in pool order, matching
+    :meth:`~repro.elastic.runtime.ElasticRuntime.mesh`) and predicts the
+    reshard's measured bytes via :func:`predicted_transfer_stats`.
+
+    Requires the host to expose at least ``max(ns, nt)`` devices; rank
+    counts are device counts here (one rank per device).
+    """
+
+    model: Any                       # repro.models.Model
+    devices: Optional[Sequence[Any]] = None   # defaults to jax.devices()
+    mode: str = "train"
+    _cache: dict = field(default_factory=dict, repr=False)
+
+    def _shardings(self, k: int) -> dict:
+        if k not in self._cache:
+            from repro.parallel.sharding import (
+                ShardingContext,
+                param_sharding_abstract,
+            )
+
+            devs = list(self.devices if self.devices is not None else jax.devices())
+            if k > len(devs):
+                raise ValueError(
+                    f"PytreeBytesModel needs {k} devices, host has {len(devs)}"
+                )
+            mesh = Mesh(np.asarray(devs[:k], dtype=object).reshape((k,)), ("data",))
+            ctx = ShardingContext(mesh=mesh, mode=self.mode)
+            shapes, specs = self._abstract()
+            self._cache[k] = param_sharding_abstract(shapes, specs, ctx)
+        return self._cache[k]
+
+    def _abstract(self):
+        if "abstract" not in self._cache:
+            self._cache["abstract"] = self.model.abstract_params()
+        return self._cache["abstract"]
+
+    def __call__(self, ns: int, nt: int) -> int:
+        if ns == nt or ns <= 0 or nt <= 0:
+            return 0
+        shapes, _ = self._abstract()
+        return predicted_transfer_stats(
+            shapes, self._shardings(ns), self._shardings(nt)
+        )["bytes_moved"]

@@ -40,20 +40,38 @@ from .node_group import DevicePool, NodeGroup
 
 @dataclass(frozen=True)
 class ReconfigRecord:
+    """One reconfiguration as observed by the live runtime.
+
+    Every cost field is a read of the engine's charged timeline — the
+    same timeline the simulator reports — so the two layers agree by
+    construction.
+    """
+
     kind: str                  # expand | shrink | fail | straggler
     mechanism: str             # strategy or TS/ZS/SS
     nodes_before: int
     nodes_after: int
     est_wall_s: float          # timeline total (simulated reconfiguration cost)
-    downtime_s: float          # timeline downtime (Async overlaps spawn)
+    downtime_s: float          # timeline downtime (partial ASYNC overlap)
     steps: int = 0             # spawn rounds (expansions)
     groups: int = 0
     nodes_returned: tuple[int, ...] = ()
     nodes_pinned: tuple[int, ...] = ()
+    bytes_moved: int = 0       # stage-3 bytes charged on the timeline
 
 
 class ElasticRuntime:
-    """Owns the NodeGroup registry and rebuilds meshes across resizes."""
+    """Owns the NodeGroup registry and rebuilds meshes across resizes.
+
+    Args:
+        pool: device pool partitioned into nodes (defaults to all host
+            devices, one per node).
+        method / strategy / cost_model / asynchronous: engine knobs —
+            only valid when no explicit ``engine`` is passed.
+        initial_nodes: nodes acquired for the initial world.
+        engine: a configured :class:`ReconfigEngine` (e.g. carrying a
+            bytes model); mutually exclusive with the engine knobs.
+    """
 
     def __init__(
         self,
@@ -107,6 +125,7 @@ class ElasticRuntime:
     # ------------------------------------------------------------------ mesh --
     @property
     def n_nodes(self) -> int:
+        """Nodes currently in use by live worlds."""
         return len(self.state.nodes_in_use())
 
     @property
@@ -117,6 +136,15 @@ class ElasticRuntime:
         return [d for g in ordered for d in g.devices]
 
     def mesh(self, axes: tuple[str, ...] = ("data",), shape: Optional[tuple[int, ...]] = None) -> Mesh:
+        """Build a Mesh over the live devices (Eq. 9 order).
+
+        Args:
+            axes: mesh axis names (default the 1-D ``("data",)`` mesh).
+            shape: optional device-grid shape; defaults to 1-D over all
+                live devices.
+        Returns:
+            A ``jax.sharding.Mesh`` suitable for resharding state onto.
+        """
         devs = self.devices
         if shape is None:
             shape = (len(devs),)
@@ -152,7 +180,19 @@ class ElasticRuntime:
 
     # ---------------------------------------------------------------- expand --
     def expand(self, target_nodes: int) -> ReconfigRecord:
-        """Grow the job to ``target_nodes`` NodeGroup-confined nodes."""
+        """Grow the job to ``target_nodes`` NodeGroup-confined nodes.
+
+        Plans through the engine's strategy registry, applies the plan to
+        the device pool, and charges the event timeline (including the
+        stage-3 bytes from the engine's bytes model, if configured).
+
+        Args:
+            target_nodes: new total node count (must exceed the current).
+        Returns:
+            The appended :class:`ReconfigRecord`.
+        Raises:
+            ValueError: if ``target_nodes`` does not grow the job.
+        """
         before = self.n_nodes
         if target_nodes <= before:
             raise ValueError("expand() requires target_nodes > current nodes")
@@ -172,6 +212,7 @@ class ElasticRuntime:
             downtime_s=outcome.downtime_s,
             steps=spawn.steps,
             groups=len(spawn.groups),
+            bytes_moved=outcome.bytes_moved,
         )
         self.history.append(rec)
         return rec
@@ -186,11 +227,19 @@ class ElasticRuntime:
 
     # ---------------------------------------------------------------- shrink --
     def shrink(self, n_nodes_to_release: int, kind: str = "shrink") -> ReconfigRecord:
-        """TS-shrink: terminate the highest-node groups, return their devices."""
+        """TS-shrink the ``n_nodes_to_release`` highest-id nodes.
+
+        Args:
+            n_nodes_to_release: how many nodes to return to the pool.
+            kind: record label (``shrink`` / ``fail`` / ``straggler``).
+        Returns:
+            The appended :class:`ReconfigRecord`.
+        """
         victims = sorted(self.state.nodes_in_use())[-n_nodes_to_release:]
         return self.shrink_nodes(victims, kind=kind)
 
     def shrink_nodes(self, victims: list[int], kind: str = "shrink") -> ReconfigRecord:
+        """TS-shrink specific node ids out of the job (see :meth:`shrink`)."""
         before = self.n_nodes
         plan = self.engine.plan_shrink(self.state, release_nodes=victims)
         outcome = self.engine.execute(plan, backend=self)
@@ -204,6 +253,7 @@ class ElasticRuntime:
             downtime_s=outcome.downtime_s,
             nodes_returned=plan.shrink.nodes_returned,
             nodes_pinned=plan.shrink.nodes_pinned,
+            bytes_moved=outcome.bytes_moved,
         )
         self.history.append(rec)
         return rec

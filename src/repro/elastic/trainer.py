@@ -62,10 +62,14 @@ class ElasticTrainer:
         )
 
     @classmethod
-    def from_scenario(cls, model: Model, scenario, pool=None, **kwargs) -> "ElasticTrainer":
+    def from_scenario(cls, model: Model, scenario, pool=None, engine=None,
+                      **kwargs) -> "ElasticTrainer":
         """Build the full loop from a declarative scenario: the runtime
         executes the trace through the same ReconfigEngine the simulator
-        charges, so per-event downtimes agree across both paths."""
+        charges, so per-event downtimes (and charged bytes) agree across
+        both paths.  Pass ``engine`` to override the scenario's default —
+        e.g. one carrying a :class:`~repro.elastic.reshard.PytreeBytesModel`
+        so charged bytes exactly equal the measured reshard."""
         from repro.elastic.node_group import DevicePool
 
         if scenario.sim_only:
@@ -87,7 +91,7 @@ class ElasticTrainer:
         runtime = ElasticRuntime(
             pool=pool,
             initial_nodes=scenario.initial_nodes,
-            engine=scenario.default_engine(),
+            engine=engine or scenario.default_engine(),
         )
         rms = SimulatedRMS.from_scenario(scenario)
         return cls(model=model, runtime=runtime, rms=rms, **kwargs)
@@ -112,14 +116,25 @@ class ElasticTrainer:
         self._rejit()
 
     # --------------------------------------------------------------- resharding --
-    def _reshard_state(self):
-        """Stage 3: move the live TrainState onto the rebuilt mesh."""
+    def _reshard_state(self, step: int = -1, charged_bytes: int = 0):
+        """Stage 3: move the live TrainState onto the rebuilt mesh.
+
+        Logs the *measured* transfer stats of the parameter pytree next
+        to the engine-*charged* bytes for the drained events, so the two
+        accountings can be compared (they are equal when the engine uses
+        a :class:`~repro.elastic.reshard.PytreeBytesModel` and one event
+        was drained; multi-event drains reshard once over the net mesh
+        change while the engine charges each hop).
+        """
         _, shardings = train_state_shardings(self.model, self._ctx)
         old_params = self._state.params
         self._state = jax.tree.map(
             lambda x, s: jax.device_put(x, s), self._state, shardings,
         )
-        self.transfer_log.append(transfer_stats(old_params, self._state.params))
+        stats = dict(transfer_stats(old_params, self._state.params))
+        stats["step"] = step
+        stats["charged_bytes_moved"] = charged_bytes
+        self.transfer_log.append(stats)
         self._rejit()
 
     # -------------------------------------------------------------------- events --
@@ -141,11 +156,16 @@ class ElasticTrainer:
         for i in range(steps):
             step_no = len(self.history)
             reconfigured = False
+            records_before = len(self.runtime.history)
             for ev in self.rms.events_until(step_no):
                 reconfigured |= self._handle(ev)
             if reconfigured:
                 self._ctx = self._make_ctx()
-                self._reshard_state()
+                charged = sum(
+                    r.bytes_moved
+                    for r in self.runtime.history[records_before:]
+                )
+                self._reshard_state(step=step_no, charged_bytes=charged)
             batch = make_batch_on_mesh(
                 self._data.sample(step_no), self.model.cfg, self._ctx
             )

@@ -1,10 +1,31 @@
-"""Malleability runtime: event-driven reconfiguration simulator.
+"""Malleability runtime: event-driven reconfiguration simulation.
 
 Executes :class:`repro.core.SpawnPlan` / :class:`repro.core.ShrinkPlan`
 objects against a calibrated MPI cost model to estimate reconfiguration
 wall time, reproducing the paper's §5 experiments on this CPU-only host.
+
+Three submodules:
+
+* :mod:`.cost_model` — :class:`CostModel` latency/bandwidth constants
+  (profiles :data:`MN5` / :data:`NASP`), the partial-overlap knobs
+  (per-stage overlap fractions + contention factor), and the analytic
+  stage-3 bytes models (:func:`replicated_bytes_model` /
+  :func:`fsdp_bytes_model`);
+* :mod:`.simulator` — report-shaped views (:class:`ExpansionReport` /
+  :class:`ShrinkReport`) over the engine's charged timelines;
+* :mod:`.scenarios` — declarative workload traces (:class:`Scenario`),
+  their registry, and the sim/live executors that agree exactly on
+  every timeline-derived number, bytes included.
+
+See ``docs/cost-model.md`` and ``docs/scenarios.md`` for guides.
 """
-from .cost_model import MN5, NASP, CostModel
+from .cost_model import (
+    MN5,
+    NASP,
+    CostModel,
+    fsdp_bytes_model,
+    replicated_bytes_model,
+)
 from .scenarios import (
     RuntimeAdapter,
     Scenario,
@@ -15,6 +36,7 @@ from .scenarios import (
     get_scenario,
     heterogeneous_pool,
     node_failures,
+    param_bytes_for_arch,
     register_scenario,
     registered_scenarios,
     run_scenario_live,
@@ -42,11 +64,14 @@ __all__ = [
     "ShrinkReport",
     "burst_arrival",
     "dispatch_event",
+    "fsdp_bytes_model",
     "get_scenario",
     "heterogeneous_pool",
     "node_failures",
+    "param_bytes_for_arch",
     "register_scenario",
     "registered_scenarios",
+    "replicated_bytes_model",
     "run_scenario_live",
     "run_scenario_sim",
     "simulate_expansion",

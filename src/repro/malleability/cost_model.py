@@ -50,6 +50,22 @@ class CostModel:
 
     # -- data redistribution --------------------------------------------------------
     redist_bw: float = 10.0e9       # aggregate bytes/s between old and new ranks
+    redist_alpha: float = 5.0e-3    # per-event setup (plan exchange, buffer pin)
+
+    # -- partial overlap (stage x compute) -------------------------------------------
+    # Fraction of each stage that can proceed under application compute when
+    # the job runs ASYNC.  The defaults reproduce MaM's binary model (the
+    # whole spawn phase hides, nothing else does); DMR-style partial overlap
+    # is expressed by lowering spawn_overlap / raising the others.
+    spawn_overlap: float = 1.0
+    sync_overlap: float = 0.0
+    connect_overlap: float = 0.0
+    redist_overlap: float = 0.0
+    # Contention factor for overlapped work: the hidden portion shares the
+    # network/daemons with compute, so hiding a fraction f of an event still
+    # costs f*(overlap_contention - 1) of its duration in lost app progress.
+    # 1.0 = perfect hiding (the binary model); 2.0 = overlap buys nothing.
+    overlap_contention: float = 1.0
 
     # ---------------------------------------------------------------- primitives --
     def spawn_call(self, procs: int, nodes: int) -> float:
@@ -105,7 +121,36 @@ class CostModel:
         )
 
     def redistribution(self, total_bytes: int) -> float:
-        return total_bytes / self.redist_bw
+        """Stage-3 wall time for moving ``total_bytes`` across the job.
+
+        Zero bytes means no redistribution event at all (no setup charge).
+        """
+        if total_bytes <= 0:
+            return 0.0
+        return self.redist_alpha + total_bytes / self.redist_bw
+
+    def with_overlap(
+        self,
+        *,
+        spawn: float | None = None,
+        sync: float | None = None,
+        connect: float | None = None,
+        redistribution: float | None = None,
+        contention: float | None = None,
+    ) -> "CostModel":
+        """Copy of this model with different partial-overlap parameters."""
+        return replace(
+            self,
+            spawn_overlap=self.spawn_overlap if spawn is None else spawn,
+            sync_overlap=self.sync_overlap if sync is None else sync,
+            connect_overlap=self.connect_overlap if connect is None else connect,
+            redist_overlap=(
+                self.redist_overlap if redistribution is None else redistribution
+            ),
+            overlap_contention=(
+                self.overlap_contention if contention is None else contention
+            ),
+        )
 
     def scaled(self, factor: float) -> "CostModel":
         """Uniformly slower interconnect/daemons (used for NASP)."""
@@ -123,7 +168,60 @@ class CostModel:
             t_barrier_hop=self.t_barrier_hop * factor,
             t_term_base=self.t_term_base * factor,
             redist_bw=self.redist_bw / factor,
+            redist_alpha=self.redist_alpha * factor,
         )
+
+
+# ---------------------------------------------------------------------------
+# Analytic stage-3 bytes models (device-free).
+#
+# A *bytes model* maps one reconfiguration (ns source ranks -> nt target
+# ranks) to the bytes that cross rank boundaries during stage 3.  The
+# :class:`~repro.core.engine.ReconfigEngine` charges the result as a
+# REDISTRIBUTION timeline event.  These two closed forms bracket the real
+# placements; :class:`repro.elastic.reshard.PytreeBytesModel` computes the
+# exact value for a live model's sharded pytree.
+# ---------------------------------------------------------------------------
+def replicated_bytes_model(param_bytes: int):
+    """Bytes model for fully replicated state (pure data parallelism).
+
+    Every target rank holds the full ``param_bytes`` replica, so a grow
+    ships one copy to each new rank and a shrink moves nothing (survivor
+    replicas already suffice).
+
+    Args:
+        param_bytes: total size of the replicated pytree in bytes.
+    Returns:
+        ``f(ns, nt) -> int`` usable as ``ReconfigEngine.bytes_model``.
+    """
+
+    def bytes_moved(ns: int, nt: int) -> int:
+        if ns <= 0 or nt <= ns:
+            return 0
+        return param_bytes * (nt - ns)
+
+    return bytes_moved
+
+
+def fsdp_bytes_model(param_bytes: int):
+    """Bytes model for fully sharded state (ZeRO-3/FSDP over all ranks).
+
+    Every rank holds 1/ranks of the state; any resize redraws every shard
+    boundary, so (conservatively) the whole pytree is in flight for both
+    grows and shrinks.
+
+    Args:
+        param_bytes: total size of the sharded pytree in bytes.
+    Returns:
+        ``f(ns, nt) -> int`` usable as ``ReconfigEngine.bytes_model``.
+    """
+
+    def bytes_moved(ns: int, nt: int) -> int:
+        if ns <= 0 or nt <= 0 or nt == ns:
+            return 0
+        return param_bytes
+
+    return bytes_moved
 
 
 # MareNostrum 5: 112-core nodes, MPICH 4.2 over InfiniBand (CH4:OFI).

@@ -25,12 +25,13 @@ heterogeneous-core pools (NASP-style alternating node widths, §5.3).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field, replace
 from typing import Iterable, Optional, Union
 
 from repro.core import ClusterState, Method, ReconfigEngine, Strategy, apply_shrink
 
-from .cost_model import MN5, NASP, CostModel
+from .cost_model import MN5, NASP, CostModel, replicated_bytes_model
 
 # Event kinds (string-typed so scenarios stay pure data; they map 1:1 to
 # repro.elastic.rms.EventKind values).
@@ -50,9 +51,35 @@ class ScenarioEvent:
     nodes: tuple[int, ...] = ()     # SHRINK/FAIL/STRAGGLER: victim node ids
 
 
+@functools.lru_cache(maxsize=None)
+def param_bytes_for_arch(arch: str) -> int:
+    """Total parameter-pytree bytes for a registered architecture config.
+
+    Resolved from the model's abstract (shape-only) params — no weights
+    are allocated.  Used by scenarios to size stage-3 redistribution.
+    """
+    import numpy as np  # local: keep the scenarios module jax-free to import
+
+    from repro.configs import arch_config
+    from repro.models import Model
+
+    shapes, _ = Model(arch_config(arch)).abstract_params()
+    import jax
+
+    return int(sum(
+        int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(shapes)
+    ))
+
+
 @dataclass(frozen=True)
 class Scenario:
-    """A declarative workload trace over a node pool."""
+    """A declarative workload trace over a node pool.
+
+    ``arch`` / ``param_bytes`` size the pytree the trace reshards: the
+    default engine charges stage-3 data movement from them, so the same
+    trace sweeps redistribution pressure as the model config changes.
+    """
 
     name: str
     description: str
@@ -65,6 +92,8 @@ class Scenario:
     #                                  DevicePool partitions uniformly)
     steps: int = 20                  # application steps the trace spans
     profile: str = "mn5"             # default cost-model profile
+    arch: str = ""                   # model config whose pytree the trace moves
+    param_bytes: int = 0             # explicit pytree size (overrides arch)
 
     @property
     def sim_only(self) -> bool:
@@ -103,18 +132,40 @@ class Scenario:
     def cost_model(self) -> CostModel:
         return NASP if self.profile == "nasp" else MN5
 
+    def resolved_param_bytes(self) -> int:
+        """Pytree bytes the trace reshards: explicit ``param_bytes``, or
+        the ``arch`` config's parameter bytes, or 0 (no data movement)."""
+        if self.param_bytes:
+            return self.param_bytes
+        if self.arch:
+            return param_bytes_for_arch(self.arch)
+        return 0
+
     def default_engine(self) -> ReconfigEngine:
-        """Heterogeneous pools require the diffusive strategy (§4.2)."""
+        """Engine every executor uses for this trace (the dedup point).
+
+        Heterogeneous pools require the diffusive strategy (§4.2); a
+        sized pytree wires the replicated analytic bytes model so each
+        reconfiguration charges stage-3 data movement.
+        """
         strategy = (
             Strategy.PARALLEL_DIFFUSIVE if self.heterogeneous
             else Strategy.PARALLEL_HYPERCUBE
         )
+        pb = self.resolved_param_bytes()
         return ReconfigEngine(
-            method=Method.MERGE, strategy=strategy, cost_model=self.cost_model()
+            method=Method.MERGE,
+            strategy=strategy,
+            cost_model=self.cost_model(),
+            bytes_model=replicated_bytes_model(pb) if pb else None,
         )
 
     def with_cores_per_node(self, cpn: int) -> "Scenario":
         return replace(self, cores_per_node=cpn, core_pool=())
+
+    def with_model(self, arch: str = "", param_bytes: int = 0) -> "Scenario":
+        """Same trace, different pytree size (sweeps redistribution)."""
+        return replace(self, arch=arch, param_bytes=param_bytes)
 
 
 # ================================================================ registry ==
@@ -149,11 +200,14 @@ def steady_cycle(
     cycles: int = 2,
     period: int = 5,
     cores_per_node: int = 1,
+    arch: str = "",
+    param_bytes: int = 0,
 ) -> Scenario:
     """Steady expand/shrink cycles: low -> high -> low, repeated.
 
     The malleable-batch workload of §5: the job breathes with cluster
     load, exercising both the parallel expansion and the TS shrink path.
+    ``arch`` / ``param_bytes`` size the pytree each cycle reshards.
     """
     events: list[ScenarioEvent] = []
     step = period
@@ -171,6 +225,8 @@ def steady_cycle(
         cores_per_node=cores_per_node,
         events=tuple(events),
         steps=step + period,
+        arch=arch,
+        param_bytes=param_bytes,
     )
 
 
@@ -298,6 +354,10 @@ for _sc in (
     node_failures(),
     straggler_churn(),
     heterogeneous_pool(),
+    # The same steady cycle under redistribution pressure: stage-3 moves
+    # a real model config's parameter pytree, so est_wall is dominated by
+    # data movement rather than spawning — swap `arch` to sweep it.
+    steady_cycle(name="redist-cycle", arch="stablelm_3b"),
 ):
     register_scenario(_sc)
 
@@ -314,6 +374,7 @@ class ScenarioRecord:
     nodes_after: int
     est_wall_s: float          # timeline total
     downtime_s: float          # timeline downtime
+    bytes_moved: int = 0       # stage-3 bytes charged on the timeline
 
 
 @dataclass
@@ -365,6 +426,7 @@ class _SimCluster:
             step=-1, kind="expand", mechanism=plan.spawn.strategy.value,
             nodes_before=before, nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
+            bytes_moved=outcome.bytes_moved,
         )
 
     def shrink_nodes(self, victims: list[int], kind: str) -> ScenarioRecord:
@@ -378,6 +440,7 @@ class _SimCluster:
             step=-1, kind=kind, mechanism=plan.shrink.kind.value,
             nodes_before=before, nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
+            bytes_moved=outcome.bytes_moved,
         )
 
 
@@ -431,6 +494,7 @@ class RuntimeAdapter:
             step=-1, kind=rec.kind, mechanism=rec.mechanism,
             nodes_before=rec.nodes_before, nodes_after=rec.nodes_after,
             est_wall_s=rec.est_wall_s, downtime_s=rec.downtime_s,
+            bytes_moved=rec.bytes_moved,
         )
 
     def expand(self, target_nodes: int) -> ScenarioRecord:

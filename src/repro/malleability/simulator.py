@@ -33,6 +33,8 @@ from .cost_model import CostModel
 
 @dataclass(frozen=True)
 class ExpansionReport:
+    """Per-phase breakdown of one charged expansion timeline."""
+
     strategy: Strategy
     method: Method
     ns: int
@@ -47,8 +49,11 @@ class ExpansionReport:
     steps: int
     groups: int
     timeline: Timeline = field(default_factory=Timeline, repr=False, compare=False)
+    t_redist: float = 0.0
+    bytes_moved: int = 0
 
     def as_row(self) -> dict:
+        """Report as a flat dict row (benchmark CSV shape)."""
         return {
             "strategy": self.strategy.value,
             "method": self.method.value,
@@ -59,8 +64,10 @@ class ExpansionReport:
             "connect_s": round(self.t_connect, 6),
             "reorder_s": round(self.t_reorder, 6),
             "final_s": round(self.t_final, 6),
+            "redist_s": round(self.t_redist, 6),
             "total_s": round(self.total, 6),
             "downtime_s": round(self.downtime, 6),
+            "bytes_moved": self.bytes_moved,
             "steps": self.steps,
             "groups": self.groups,
         }
@@ -68,19 +75,35 @@ class ExpansionReport:
 
 @dataclass(frozen=True)
 class ShrinkReport:
+    """Total + mechanism detail of one charged shrink timeline."""
+
     kind: ShrinkKind
     total: float
     nodes_returned: int
     nodes_pinned: int
     detail: dict = field(default_factory=dict)
     timeline: Timeline = field(default_factory=Timeline, repr=False, compare=False)
+    bytes_moved: int = 0
 
 
 def simulate_expansion(
-    plan: SpawnPlan, cm: CostModel, asynchronous: bool = False
+    plan: SpawnPlan, cm: CostModel, asynchronous: bool = False,
+    bytes_total: int = 0,
 ) -> ExpansionReport:
-    """Charge one expansion plan and report its per-phase breakdown."""
-    tl = expansion_timeline(plan, cm)
+    """Charge one expansion plan and report its per-phase breakdown.
+
+    Args:
+        plan: the spawn plan to charge.
+        cm: cost model (latencies, bandwidth, overlap fractions).
+        asynchronous: report ASYNC downtime (partial overlap) instead of
+            the full wall time.
+        bytes_total: stage-3 data volume to charge as a REDISTRIBUTION
+            event (0 skips the event).
+    Returns:
+        An :class:`ExpansionReport` whose every field is a read of the
+        charged :class:`~repro.core.Timeline`.
+    """
+    tl = expansion_timeline(plan, cm, bytes_total=bytes_total)
     return ExpansionReport(
         strategy=plan.strategy,
         method=plan.method,
@@ -96,6 +119,8 @@ def simulate_expansion(
         steps=plan.steps,
         groups=len(plan.groups),
         timeline=tl,
+        t_redist=tl.span(Stage.REDISTRIBUTION),
+        bytes_moved=tl.bytes_moved,
     )
 
 
@@ -108,8 +133,13 @@ def simulate_shrink(
     respawn_plan: SpawnPlan | None = None,
     nodes_returned: int = 0,
     nodes_pinned: int = 0,
+    bytes_total: int = 0,
 ) -> ShrinkReport:
-    """Charge one shrink by mechanism (TS / ZS / SS) off its timeline."""
+    """Charge one shrink by mechanism (TS / ZS / SS) off its timeline.
+
+    ``bytes_total`` > 0 additionally charges the survivors' absorption
+    of the doomed ranks' shards as a REDISTRIBUTION event.
+    """
     tl = shrink_timeline(
         kind,
         cm,
@@ -117,6 +147,7 @@ def simulate_shrink(
         nt=nt,
         doomed_world_sizes=doomed_world_sizes,
         respawn_plan=respawn_plan,
+        bytes_total=bytes_total,
     )
     if kind is ShrinkKind.TS:
         detail = {"worlds_terminated": len(doomed_world_sizes or [])}
@@ -133,9 +164,10 @@ def simulate_shrink(
         nodes_pinned=nodes_pinned,
         detail=detail,
         timeline=tl,
+        bytes_moved=tl.bytes_moved,
     )
 
 
 def simulate_redistribution(cm: CostModel, total_bytes: int) -> float:
-    """Stage-3 data redistribution (sources -> targets)."""
+    """Stage-3 wall time for moving ``total_bytes`` (setup + bandwidth)."""
     return cm.redistribution(total_bytes)

@@ -220,6 +220,119 @@ class TestDowntimeDedup:
         assert rep.total == tl.total
 
 
+class TestPartialOverlap:
+    """The binary ASYNC flag is now the special case of the partial-
+    overlap model: spawn_overlap=1, everything else 0, contention=1."""
+
+    def test_defaults_reproduce_binary_async(self):
+        plan = plan_hypercube(C, 16 * C, C, Method.MERGE)
+        tl = expansion_timeline(plan, MN5)
+        assert tl.downtime(asynchronous=True) == pytest.approx(
+            tl.total - tl.span(Stage.SPAWN))
+
+    def test_partial_spawn_overlap_hides_partially(self):
+        plan = plan_hypercube(C, 16 * C, C, Method.MERGE)
+        cm = MN5.with_overlap(spawn=0.5)
+        tl = expansion_timeline(plan, cm)
+        assert tl.downtime(asynchronous=True) == pytest.approx(
+            tl.total - 0.5 * tl.span(Stage.SPAWN))
+
+    def test_contention_degrades_hiding(self):
+        plan = plan_hypercube(C, 16 * C, C, Method.MERGE)
+        spawn = expansion_timeline(plan, MN5).span(Stage.SPAWN)
+        for c, hidden_share in [(1.0, 1.0), (1.25, 0.75), (1.5, 0.5), (2.0, 0.0)]:
+            tl = expansion_timeline(plan, MN5.with_overlap(contention=c))
+            assert tl.downtime(asynchronous=True) == pytest.approx(
+                tl.total - hidden_share * spawn), c
+        # contention beyond 2 cannot make overlap WORSE than synchronous
+        tl = expansion_timeline(plan, MN5.with_overlap(contention=3.0))
+        assert tl.downtime(asynchronous=True) == pytest.approx(tl.total)
+
+    def test_sync_and_connect_can_overlap_too(self):
+        plan = plan_hypercube(C, 16 * C, C, Method.MERGE)
+        cm = MN5.with_overlap(sync=1.0, connect=1.0)
+        tl = expansion_timeline(plan, cm)
+        assert tl.downtime(asynchronous=True) == pytest.approx(
+            tl.total - tl.span(Stage.SPAWN) - tl.span(Stage.SYNC)
+            - tl.span(Stage.CONNECT))
+
+    def test_redistribution_overlap(self):
+        plan = plan_hypercube(C, 4 * C, C, Method.MERGE)
+        cm = MN5.with_overlap(redistribution=1.0)
+        tl = expansion_timeline(plan, cm, bytes_total=10 ** 9)
+        assert tl.span(Stage.REDISTRIBUTION) > 0
+        assert tl.downtime(asynchronous=True) == pytest.approx(
+            tl.total - tl.span(Stage.SPAWN) - tl.span(Stage.REDISTRIBUTION))
+
+    def test_synchronous_downtime_ignores_overlap(self):
+        plan = plan_hypercube(C, 8 * C, C, Method.MERGE)
+        tl = expansion_timeline(plan, MN5.with_overlap(sync=1.0, contention=1.3))
+        assert tl.downtime(asynchronous=False) == tl.total
+
+
+class TestBytesCharging:
+    """Stage-3 data movement is priced on the timeline end to end."""
+
+    def test_expansion_timeline_charges_bytes(self):
+        plan = plan_hypercube(C, 4 * C, C, Method.MERGE)
+        base = expansion_timeline(plan, MN5)
+        tl = expansion_timeline(plan, MN5, bytes_total=10 ** 10)
+        assert tl.bytes_moved == 10 ** 10
+        assert tl.total == pytest.approx(
+            base.total + MN5.redist_alpha + 10 ** 10 / MN5.redist_bw)
+        (ev,) = [e for e in tl.events if e.stage is Stage.REDISTRIBUTION]
+        assert ev.bytes_moved == 10 ** 10
+
+    def test_zero_bytes_adds_no_event(self):
+        plan = plan_hypercube(C, 4 * C, C, Method.MERGE)
+        tl = expansion_timeline(plan, MN5, bytes_total=0)
+        assert tl.span(Stage.REDISTRIBUTION) == 0.0
+        assert tl.bytes_moved == 0
+
+    def test_shrink_timeline_charges_bytes(self):
+        tl = shrink_timeline(ShrinkKind.TS, MN5, doomed_world_sizes=[C] * 4,
+                             bytes_total=10 ** 9)
+        assert tl.bytes_moved == 10 ** 9
+        assert tl.span(Stage.REDISTRIBUTION) == pytest.approx(
+            MN5.redist_alpha + 10 ** 9 / MN5.redist_bw)
+
+    def test_engine_bytes_model_feeds_est_wall(self):
+        calls = []
+
+        def bm(ns, nt):
+            calls.append((ns, nt))
+            return 512 * abs(nt - ns)
+
+        engine = ReconfigEngine(cost_model=MN5, bytes_model=bm)
+        plan = engine.plan_expand(4, 16, 4)
+        assert plan.redistribution.bytes_total == 512 * 12
+        assert (4, 16) in calls
+        out = engine.execute(plan)
+        assert out.bytes_moved == 512 * 12
+        base = ReconfigEngine(cost_model=MN5).execute(
+            ReconfigEngine(cost_model=MN5).plan_expand(4, 16, 4))
+        assert out.total_s > base.total_s
+
+    def test_bytes_per_rank_fallback_now_connected(self):
+        engine = ReconfigEngine(cost_model=MN5, bytes_per_rank=1024)
+        plan = engine.plan_expand(4, 16, 4)
+        assert plan.redistribution.bytes_total == 1024 * 12
+        assert engine.execute(plan).bytes_moved == 1024 * 12
+
+    def test_runtime_records_bytes_moved(self):
+        pool = DevicePool(devices=[object() for _ in range(8)], devices_per_node=1)
+        engine = ReconfigEngine(bytes_model=lambda ns, nt: 777 * abs(nt - ns))
+        rt = ElasticRuntime(pool=pool, initial_nodes=1, engine=engine)
+        rec = rt.expand(8)
+        assert rec.bytes_moved == 777 * 7
+        rep = simulate_expansion(plan_hypercube(1, 8, 1, Method.MERGE), MN5,
+                                 bytes_total=777 * 7)
+        assert rec.est_wall_s == rep.total
+        assert rep.bytes_moved == 777 * 7
+        shrink_rec = rt.shrink(4)
+        assert shrink_rec.bytes_moved == 777 * 4
+
+
 class TestEnginePlanning:
     def test_plan_shrink_captures_doomed_sizes(self):
         pool = DevicePool(devices=[object() for _ in range(6)], devices_per_node=1)

@@ -1,0 +1,115 @@
+"""Stage-3 resharding accounting: transfer_stats edge cases and the
+predicted (devices_indices_map) twin that the cost simulator charges.
+
+Multi-device cases run in a subprocess (the main test process must keep
+seeing 1 device); the empty-tree edge cases run in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.elastic import predicted_transfer_stats, transfer_stats
+
+ZEROS = {"bytes_total": 0, "bytes_stayed": 0, "bytes_moved": 0}
+
+
+class TestEmptyTree:
+    def test_transfer_stats_empty_tree(self):
+        assert transfer_stats({}, {}) == ZEROS
+        assert transfer_stats([], []) == ZEROS
+
+    def test_predicted_transfer_stats_empty_tree(self):
+        assert predicted_transfer_stats({}, {}, {}) == ZEROS
+
+
+RESHARD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.elastic import predicted_transfer_stats, transfer_stats
+
+    devs = jax.devices()
+
+    def mesh(k):
+        return Mesh(np.asarray(devs[:k], dtype=object).reshape((k,)), ("data",))
+
+    def place(tree, shardings):
+        return jax.device_put(tree, shardings)  # broadcasts a single sharding
+
+    def check(label, tree, old_sh, new_sh):
+        old = place(tree, old_sh)
+        new = place(old, new_sh)
+        measured = transfer_stats(old, new)
+        predicted = predicted_transfer_stats(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree),
+            old_sh, new_sh)
+        assert measured == predicted, (label, measured, predicted)
+        print("RESHARD_OK", label, measured["bytes_moved"], "moved")
+        return measured
+
+    tree = {
+        "replicated": jnp.ones((16, 16), jnp.float32),   # 1024 B
+        "sharded": jnp.ones((8, 4), jnp.float32),        # 128 B, split on dim 0
+    }
+    rep, shd = P(), P("data")
+
+    def sh(k):
+        m = mesh(k)
+        return {"replicated": NamedSharding(m, rep),
+                "sharded": NamedSharding(m, shd)}
+
+    # grow-only: 2 -> 4 devices
+    m = check("grow", tree, sh(2), sh(4))
+    # replicated leaf ships one copy to each NEW device; sharded leaf's
+    # bounds all change (8 rows: 4+4 -> 2+2+2+2), so it moves entirely.
+    assert m["bytes_moved"] == 2 * 1024 + 128, m
+    assert m["bytes_stayed"] == 2 * 1024, m
+
+    # shrink-only: 4 -> 2 devices
+    m = check("shrink", tree, sh(4), sh(2))
+    # survivor replicas suffice; the sharded leaf rebalances entirely.
+    assert m["bytes_moved"] == 128, m
+    assert m["bytes_stayed"] == 2 * 1024, m
+
+    # identity: nothing moves
+    m = check("identity", tree, sh(4), sh(4))
+    assert m["bytes_moved"] == 0, m
+
+    # uneven shard counts: 3-way -> 2-way split of dim 6 (neither count
+    # divides the other, so no shard bounds coincide and all bytes move).
+    uneven = {"u": jnp.ones((6,), jnp.float32)}
+    m3 = {"u": NamedSharding(mesh(3), P("data"))}
+    m2 = {"u": NamedSharding(mesh(2), P("data"))}
+    m = check("uneven", uneven, m3, m2)
+    assert m["bytes_moved"] == m["bytes_total"] == 24, m
+
+    # single-sharding broadcast form (one sharding for the whole tree)
+    one = {"a": jnp.ones((4, 4), jnp.float32), "b": jnp.ones((2,), jnp.float32)}
+    m = check("broadcast", one, NamedSharding(mesh(2), P()),
+              NamedSharding(mesh(4), P()))
+    assert m["bytes_moved"] == 2 * (64 + 8), m
+
+    print("ALL_RESHARD_CASES_OK")
+""")
+
+
+@pytest.mark.slow
+def test_predicted_equals_measured_across_reshards():
+    """predicted_transfer_stats must equal transfer_stats byte-for-byte
+    for grow-only, shrink-only, identity, uneven-shard, and broadcast
+    sharding transitions (8 forced host devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", RESHARD_SCRIPT], capture_output=True, text=True,
+        timeout=600, env=env,
+    )
+    assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
+    assert "ALL_RESHARD_CASES_OK" in proc.stdout

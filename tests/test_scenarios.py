@@ -26,7 +26,7 @@ DUAL_PATH = ["steady-cycle", "burst-arrival", "node-failures", "straggler-churn"
 
 def _key(rec):
     return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
-            rec.nodes_after, rec.est_wall_s, rec.downtime_s)
+            rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved)
 
 
 class TestSimLiveAgreement:
@@ -106,6 +106,45 @@ class TestScenarioStructure:
         assert min(expands) / max(shrinks) > 100
 
 
+class TestRedistributionAware:
+    """Stage-3 data movement flows from the model config into est_wall,
+    identically in both executors (the PR-2 acceptance criteria)."""
+
+    def test_registered_redist_scenario_charges_bytes(self):
+        sc = get_scenario("redist-cycle")
+        recs = run_scenario_sim(sc)
+        expands = [r for r in recs if r.kind == "expand"]
+        assert expands and all(r.bytes_moved > 0 for r in expands)
+        # redistribution dominates: the same trace without a pytree is
+        # several times cheaper (stage 3 is the bulk of est_wall)
+        plain = run_scenario_sim(get_scenario("steady-cycle"))
+        assert expands[0].est_wall_s > 5 * plain[0].est_wall_s
+
+    def test_est_wall_changes_with_model_config_only(self):
+        sc = get_scenario("redist-cycle")
+        small = run_scenario_sim(sc.with_model(arch="xlstm_125m"))
+        large = run_scenario_sim(sc.with_model(arch="stablelm_3b"))
+        assert [r.step for r in small] == [r.step for r in large]
+        for s, l in zip(small, large):
+            if s.kind == "expand":
+                assert s.bytes_moved < l.bytes_moved
+                assert s.est_wall_s < l.est_wall_s
+
+    def test_param_bytes_override_beats_arch(self):
+        sc = get_scenario("redist-cycle").with_model(param_bytes=10 ** 6)
+        recs = run_scenario_sim(sc)
+        grow = next(r for r in recs if r.kind == "expand")
+        # replicated model: one full copy per new rank (1 -> 4 nodes)
+        assert grow.bytes_moved == 3 * 10 ** 6
+
+    def test_bytes_agree_sim_vs_live(self):
+        sc = get_scenario("redist-cycle")
+        sim = run_scenario_sim(sc)
+        live = run_scenario_live(sc)
+        assert [_key(r) for r in sim] == [_key(r) for r in live]
+        assert any(r.bytes_moved > 0 for r in sim)
+
+
 class TestRMSBridge:
     def test_from_scenario_preserves_trace(self):
         sc = get_scenario("node-failures")
@@ -159,3 +198,58 @@ def test_trainer_loop_matches_simulator_downtime():
     assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
     for name in DUAL_PATH:
         assert f"SCENARIO_TRAINER_OK {name}" in proc.stdout
+
+
+BYTES_AGREEMENT_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.configs import smoke_config
+    from repro.elastic import ElasticTrainer, PytreeBytesModel
+    from repro.malleability import get_scenario, run_scenario_sim
+    from repro.models import Model
+
+    model = Model(smoke_config("stablelm_3b"))
+
+    # One-event-per-step scenarios: the trainer's single reshard per
+    # drained step covers exactly one engine-charged event, so the
+    # measured bytes must equal the charged/simulated bytes EXACTLY.
+    for name in ("steady-cycle", "burst-arrival"):
+        sc = get_scenario(name)
+        engine = sc.default_engine()
+        engine.bytes_model = PytreeBytesModel(model)
+        sim = run_scenario_sim(sc, engine=engine)
+
+        engine_live = sc.default_engine()
+        engine_live.bytes_model = PytreeBytesModel(model)
+        tr = ElasticTrainer.from_scenario(model, sc, engine=engine_live,
+                                          batch=8, seq=32)
+        tr.run(sc.steps)
+        live = tr.runtime.history
+        assert len(live) == len(sim) == len(tr.transfer_log), name
+        moved_any = False
+        for s, l, t in zip(sim, live, tr.transfer_log):
+            # simulator == live-charged == live-MEASURED, byte for byte
+            assert s.bytes_moved == l.bytes_moved, (name, s, l)
+            assert t["charged_bytes_moved"] == s.bytes_moved, (name, s, t)
+            assert t["bytes_moved"] == s.bytes_moved, (name, s, t)
+            assert s.est_wall_s == l.est_wall_s, (name, s, l)
+            moved_any |= s.bytes_moved > 0
+        assert moved_any, name
+        print("BYTES_AGREEMENT_OK", name, len(live), "events")
+""")
+
+
+@pytest.mark.slow
+def test_simulated_bytes_equal_measured_bytes_exactly():
+    """Acceptance: the simulator's per-event bytes_moved equals the live
+    runtime's *measured* transfer_stats value exactly, per scenario, when
+    both charge through PytreeBytesModel."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", BYTES_AGREEMENT_SCRIPT], capture_output=True,
+        text=True, timeout=1200, env=env,
+    )
+    assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
+    for name in ("steady-cycle", "burst-arrival"):
+        assert f"BYTES_AGREEMENT_OK {name}" in proc.stdout
