@@ -12,6 +12,11 @@ Figure 1 / Eq. 3 — hypercube round counts
 Scenarios  — the declarative workload traces, timeline-charged
 Redistribution — stage-3 bytes-moved sweep over model configs
 Overlap    — partial-overlap (fraction x contention) downtime sweep
+Policy sweep — strategy x RMS-policy trace makespan/downtime envelopes
+
+The expensive table functions take their grids as parameters so the
+``--smoke`` mode of ``run.py`` can shrink them without touching the
+table logic (the cheap scenario/policy tables always run in full).
 """
 from __future__ import annotations
 
@@ -34,6 +39,7 @@ from repro.malleability import (
     MN5,
     NASP,
     fsdp_bytes_model,
+    get_scenario,
     param_bytes_for_arch,
     registered_scenarios,
     replicated_bytes_model,
@@ -41,6 +47,7 @@ from repro.malleability import (
     simulate_expansion,
     simulate_shrink,
 )
+from repro.malleability.policies import POLICY_SCENARIO_NAMES
 
 MN5_CORES = 112
 MN5_NODES = [1, 2, 4, 8, 16, 24, 32]
@@ -91,9 +98,9 @@ def expansion_variants(ns, nt, cores, cm, *, parallel_only=False,
 
 
 # ------------------------------------------------------ Fig 4a: expansion --
-def fig4a_homogeneous_expansion() -> list[dict]:
+def fig4a_homogeneous_expansion(nodes: list[int] = MN5_NODES) -> list[dict]:
     rows = []
-    for i, n in itertools.combinations(MN5_NODES, 2):
+    for i, n in itertools.combinations(nodes, 2):
         ns, nt = i * MN5_CORES, n * MN5_CORES
         variants = dict(expansion_variants(
             ns, nt, MN5_CORES, MN5, parallel_only=True, include_baseline=True))
@@ -108,9 +115,9 @@ def fig4a_homogeneous_expansion() -> list[dict]:
 
 
 # -------------------------------------------------------- Fig 4b: shrink --
-def fig4b_homogeneous_shrink() -> list[dict]:
+def fig4b_homogeneous_shrink(nodes: list[int] = MN5_NODES) -> list[dict]:
     rows = []
-    for n, i in itertools.combinations(MN5_NODES, 2):  # i -> n, i > n
+    for n, i in itertools.combinations(nodes, 2):  # i -> n, i > n
         ns, nt = i * MN5_CORES, n * MN5_CORES
         ts = simulate_shrink(
             ShrinkKind.TS, MN5, ns=ns, nt=nt,
@@ -131,14 +138,14 @@ def fig4b_homogeneous_shrink() -> list[dict]:
 
 
 # ------------------------------------------------ Fig 5: preferred method --
-def fig5_preferred_grid() -> list[dict]:
+def fig5_preferred_grid(nodes: list[int] = MN5_NODES) -> list[dict]:
     """Best method per (I, N) cell: expansion upper triangle, shrink lower.
 
     Expansion candidates come from the full strategy registry (classic
     strategies included: they never win, which is the paper's point)."""
     rows = []
-    for i in MN5_NODES:
-        for n in MN5_NODES:
+    for i in nodes:
+        for n in nodes:
             if i == n:
                 continue
             ns, nt = i * MN5_CORES, n * MN5_CORES
@@ -164,9 +171,9 @@ def fig5_preferred_grid() -> list[dict]:
 
 
 # --------------------------------------- Fig 6: heterogeneous (diffusive) --
-def fig6_heterogeneous() -> list[dict]:
+def fig6_heterogeneous(nodes: list[int] = NASP_NODES) -> list[dict]:
     rows = []
-    for i, n in itertools.combinations(NASP_NODES, 2):
+    for i, n in itertools.combinations(nodes, 2):
         alloc = nasp_alloc(n)
         ns, nt = sum(nasp_alloc(i)), sum(alloc)
         variants = dict(expansion_variants(
@@ -176,7 +183,7 @@ def fig6_heterogeneous() -> list[dict]:
             rows.append({"figure": "6a", "I": i, "N": n, "method": name,
                          "time_s": round(rep.total, 4),
                          "vs_merge": round(rep.total / base, 3)})
-    for n, i in itertools.combinations(NASP_NODES, 2):
+    for n, i in itertools.combinations(nodes, 2):
         alloc_t = nasp_alloc(n)
         ns, nt = sum(nasp_alloc(i)), sum(alloc_t)
         doomed = nasp_alloc(i)[n:]
@@ -215,10 +222,10 @@ def fig1_hypercube_rounds() -> list[dict]:
 
 
 # --------------------------------------------------- declarative scenarios --
-def scenario_traces() -> list[dict]:
+def scenario_traces(scenarios=None) -> list[dict]:
     """Every registered scenario, timeline-charged by the engine."""
     rows = []
-    for sc in registered_scenarios():
+    for sc in scenarios if scenarios is not None else registered_scenarios():
         for rec in run_scenario_sim(sc):
             rows.append({
                 "scenario": sc.name, "step": rec.step, "kind": rec.kind,
@@ -227,6 +234,41 @@ def scenario_traces() -> list[dict]:
                 "time_s": round(rec.est_wall_s, 6),
                 "downtime_s": round(rec.downtime_s, 6),
                 "bytes_moved": rec.bytes_moved,
+            })
+    return rows
+
+
+# ------------------------------------------------ RMS policy x strategy --
+def policy_sweep(traces: tuple[str, ...] = POLICY_SCENARIO_NAMES) -> list[dict]:
+    """Makespan/downtime/bytes envelopes: strategy x RMS-policy trace.
+
+    Each policy-generated trace (backfill pressure, priority preemption,
+    seeded churn, two-job interference) replayed under EVERY registered
+    spawning strategy: the cumulative reconfiguration makespan is where
+    the policy layer's grow/shrink pattern meets the mechanism's cost.
+    QUEUE spans (arbitration waits) count toward makespan, never
+    downtime, so the queued column separates scheduling delay from
+    mechanism stall.  Those spans are part of the declarative trace —
+    priced once, by the policy's default (hypercube/MERGE) engine, when
+    the trace was generated — so the queued column is constant across
+    strategy rows by design: the sweep varies the mechanism under an
+    identical schedule, it does not re-run the policy.
+    """
+    rows = []
+    for trace in traces:
+        sc = get_scenario(trace)
+        for spec in registered_strategies():
+            if spec.homogeneous_only and sc.heterogeneous:
+                continue
+            recs = run_scenario_sim(sc, engine=sc.default_engine(strategy=spec.key))
+            rows.append({
+                "policy": trace,
+                "strategy": spec.key,
+                "events": len(recs),
+                "makespan_s": round(sum(r.est_wall_s for r in recs), 6),
+                "downtime_s": round(sum(r.downtime_s for r in recs), 6),
+                "queued_s": round(sum(r.queued_s for r in recs), 6),
+                "bytes_moved": sum(r.bytes_moved for r in recs),
             })
     return rows
 
@@ -311,17 +353,20 @@ def overlap_sweep(arch: str = "stablelm_3b") -> list[dict]:
 
 
 # ------------------------------------------------------- envelope summary --
-def paper_envelopes() -> list[dict]:
+def paper_envelopes(mn5_nodes: list[int] = MN5_NODES,
+                    nasp_nodes: list[int] = NASP_NODES) -> list[dict]:
     """The four headline numbers the paper reports, from our simulator."""
-    worst_m = max(r["vs_merge"] for r in fig4a_homogeneous_expansion()
+    fig4a = fig4a_homogeneous_expansion(mn5_nodes)
+    fig6 = fig6_heterogeneous(nasp_nodes)
+    worst_m = max(r["vs_merge"] for r in fig4a
                   if r["method"] in ("M+hypercube", "M+diffusive"))
-    worst_b = max(r["vs_merge"] for r in fig4a_homogeneous_expansion()
+    worst_b = max(r["vs_merge"] for r in fig4a
                   if r["method"].startswith("B+"))
-    min_ts_mn5 = min(r["speedup_ts"] for r in fig4b_homogeneous_shrink()
+    min_ts_mn5 = min(r["speedup_ts"] for r in fig4b_homogeneous_shrink(mn5_nodes)
                      if r["method"] != "M+TS")
-    worst_m_nasp = max(r["vs_merge"] for r in fig6_heterogeneous()
+    worst_m_nasp = max(r["vs_merge"] for r in fig6
                        if r.get("method") == "M+diffusive")
-    min_ts_nasp = min(r["speedup_ts"] for r in fig6_heterogeneous()
+    min_ts_nasp = min(r["speedup_ts"] for r in fig6
                       if r.get("figure") == "6b" and r["method"] != "M+TS")
     return [
         {"metric": "parallel Merge expansion overhead (MN5)",

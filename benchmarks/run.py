@@ -4,9 +4,16 @@ Prints ``name,us_per_call,derived`` CSV rows (us_per_call = simulated
 reconfiguration wall time in microseconds; derived = the paper-facing
 ratio for that row), followed by the envelope summary versus the paper's
 reported numbers and, when dry-run artifacts exist, the roofline table.
+
+``--smoke`` shrinks the expensive grids to a CI-sized subset (tiny node
+lists, one model config) so the whole run finishes in seconds; the
+scenario and policy tables always run in full (they are cheap, and the
+policy coverage is the point of the uploaded artifact).  The CI
+benchmark job uploads stdout as a workflow artifact.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -14,6 +21,9 @@ sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 
 from paper_tables import (  # noqa: E402
+    MN5_NODES,
+    NASP_NODES,
+    REDIST_ARCHS,
     fig1_hypercube_rounds,
     fig4a_homogeneous_expansion,
     fig4b_homogeneous_shrink,
@@ -21,28 +31,43 @@ from paper_tables import (  # noqa: E402
     fig6_heterogeneous,
     overlap_sweep,
     paper_envelopes,
+    policy_sweep,
     scenario_traces,
     table2_trace,
     table_redistribution,
 )
 
+SMOKE_MN5_NODES = [1, 2, 4]
+SMOKE_NASP_NODES = [1, 2, 4]
+SMOKE_REDIST_ARCHS = ("xlstm_125m",)
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny grids for CI: same tables, seconds instead of minutes",
+    )
+    args = ap.parse_args(argv)
+    mn5 = SMOKE_MN5_NODES if args.smoke else MN5_NODES
+    nasp = SMOKE_NASP_NODES if args.smoke else NASP_NODES
+    archs = SMOKE_REDIST_ARCHS if args.smoke else REDIST_ARCHS
+
     print("name,us_per_call,derived")
 
-    for r in fig4a_homogeneous_expansion():
+    for r in fig4a_homogeneous_expansion(mn5):
         name = f"fig4a/{r['method']}/I{r['I']}-N{r['N']}"
         print(f"{name},{r['time_s']*1e6:.0f},{r['vs_merge']}")
 
-    for r in fig4b_homogeneous_shrink():
+    for r in fig4b_homogeneous_shrink(mn5):
         name = f"fig4b/{r['method']}/I{r['I']}-N{r['N']}"
         print(f"{name},{r['time_s']*1e6:.0f},{r['speedup_ts']}")
 
-    for r in fig5_preferred_grid():
+    for r in fig5_preferred_grid(mn5):
         name = f"fig5/I{r['I']}-N{r['N']}"
         print(f"{name},{r['time_s']*1e6:.0f},{r['best']}")
 
-    for r in fig6_heterogeneous():
+    for r in fig6_heterogeneous(nasp):
         name = f"fig{r['figure']}/{r['method']}/I{r['I']}-N{r['N']}"
         derived = r.get("vs_merge", r.get("speedup_ts", ""))
         print(f"{name},{r['time_s']*1e6:.0f},{derived}")
@@ -61,25 +86,32 @@ def main() -> None:
               f"downtime_us={r['downtime_s']*1e6:.0f};{r['mechanism']};{r['nodes']};"
               f"bytes={r['bytes_moved']}")
 
-    for r in table_redistribution():
+    for r in table_redistribution(archs):
         name = f"redist/{r['arch']}/{r['bytes_model']}/I{r['I']}-N{r['N']}"
         print(f"{name},{r['time_s']*1e6:.0f},"
               f"bytes={r['bytes_moved']};redist_share={r['redist_share']}")
 
-    for r in overlap_sweep():
+    for r in overlap_sweep(archs[0] if args.smoke else "stablelm_3b"):
         name = f"overlap/{r['arch']}/f{r['overlap_fraction']}-c{r['contention']}"
         print(f"{name},{r['downtime_s']*1e6:.0f},"
               f"wall_us={r['est_wall_s']*1e6:.0f};hidden={r['hidden_share']}")
 
+    for r in policy_sweep():
+        name = f"policy/{r['policy']}/{r['strategy']}"
+        print(f"{name},{r['makespan_s']*1e6:.0f},"
+              f"downtime_us={r['downtime_s']*1e6:.0f};"
+              f"queued_us={r['queued_s']*1e6:.0f};events={r['events']};"
+              f"bytes={r['bytes_moved']}")
+
     print()
     print("=== paper envelope check (simulator vs paper §5) ===")
-    for r in paper_envelopes():
+    for r in paper_envelopes(mn5, nasp):
         print(f"{r['metric']}: ours={r['ours']} paper={r['paper']}")
 
     # roofline table if the dry-run has produced artifacts
     dd = os.path.join(os.path.dirname(__file__), os.pardir, "results", "dryrun")
     if os.path.isdir(dd) and os.listdir(dd):
-        from roofline import table, what_would_help  # noqa: E402
+        from roofline import table, what_would_help  # noqa: E402,F401
 
         rows = table(dd, mesh="single")
         if rows:

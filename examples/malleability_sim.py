@@ -90,7 +90,8 @@ def show_timeline(cm, C):
 
 def _record_key(r):
     return (r.step, r.kind, r.mechanism, r.nodes_before,
-            r.nodes_after, r.est_wall_s, r.downtime_s, r.bytes_moved)
+            r.nodes_after, r.est_wall_s, r.downtime_s, r.bytes_moved,
+            r.queued_s)
 
 
 def check_sim_live_agreement(scenarios, sim_records=None) -> int:

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import enum
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import TYPE_CHECKING, Callable, Optional, Protocol, Sequence, Union
 
 from .connect import binary_connection_schedule, extend_graph_with_connection
@@ -52,6 +52,9 @@ if TYPE_CHECKING:  # runtime import would be circular (malleability → core)
 class Stage(enum.Enum):
     """Typed reconfiguration stages (paper §4 + §4.6-4.7 shrinks)."""
 
+    QUEUE = "queue"              # RMS arbitration: waiting behind an
+    #                              in-flight reconfiguration (ours or a
+    #                              co-scheduled job's) before stage 2 starts
     SPAWN = "spawn"
     SYNC = "sync"
     CONNECT = "connect"
@@ -130,6 +133,11 @@ class Timeline:
         """Total stage-3 bytes charged across all events."""
         return sum(e.bytes_moved for e in self.events)
 
+    @property
+    def queued_s(self) -> float:
+        """Seconds spent queued behind in-flight reconfigurations."""
+        return self.span(Stage.QUEUE)
+
     def span(self, stage: Stage) -> float:
         """Summed duration of every event of ``stage``."""
         return sum(e.duration for e in self.events if e.stage is stage)
@@ -140,12 +148,17 @@ class Timeline:
         Synchronous jobs stall for the whole timeline.  ASYNC jobs hide
         each event's ``overlap_fraction`` under compute, degraded by the
         timeline's contention factor (see
-        :meth:`TimelineEvent.hidden_under_compute`).
+        :meth:`TimelineEvent.hidden_under_compute`).  QUEUE spans are
+        never downtime: while a reconfiguration waits its turn the job
+        keeps stepping at its current size (they do count toward
+        ``total``, the makespan view).
         """
         if not asynchronous:
-            return self.total
-        return self.total - sum(
-            e.hidden_under_compute(self.contention) for e in self.events
+            return self.total - self.queued_s
+        return self.total - self.queued_s - sum(
+            e.hidden_under_compute(self.contention)
+            for e in self.events
+            if e.stage is not Stage.QUEUE
         )
 
     def as_rows(self) -> list[dict]:
@@ -390,6 +403,7 @@ class ReconfigPlan:
     connect_rounds: int = 0
     redistribution: Optional[RedistributionSpec] = None
     shrink_world_sizes: tuple[int, ...] = ()   # sizes of TS-doomed worlds
+    queue_delay_s: float = 0.0     # RMS arbitration wait before stage 2
 
 
 @dataclass(frozen=True)
@@ -413,6 +427,11 @@ class ReconfigOutcome:
     def bytes_moved(self) -> int:
         """Stage-3 bytes charged on the timeline."""
         return self.timeline.bytes_moved
+
+    @property
+    def queued_s(self) -> float:
+        """RMS arbitration wait charged on the timeline (QUEUE spans)."""
+        return self.timeline.queued_s
 
 
 class ExecutionBackend(Protocol):
@@ -504,7 +523,8 @@ def _connect_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> N
 
 
 def expansion_timeline(
-    plan: SpawnPlan, cm: "CostModel", bytes_total: int = 0
+    plan: SpawnPlan, cm: "CostModel", bytes_total: int = 0,
+    queue_delay_s: float = 0.0,
 ) -> Timeline:
     """Charge one expansion as the paper's serial stage pipeline.
 
@@ -514,10 +534,16 @@ def expansion_timeline(
             fractions and the contention factor).
         bytes_total: stage-3 data volume; when positive a REDISTRIBUTION
             event carrying ``bytes_moved`` is appended.
+        queue_delay_s: RMS arbitration wait before stage 2 starts (an
+            in-flight reconfiguration must drain first); charged as a
+            leading QUEUE event that counts toward ``total`` but never
+            toward downtime.
     Returns:
         The charged :class:`Timeline`.
     """
     tb = _TimelineBuilder(contention=cm.overlap_contention)
+    if queue_delay_s > 0.0:
+        tb.add(Stage.QUEUE, queue_delay_s, label="queued behind in-flight reconfig")
     _spawn_events(tb, plan, cm)
     _sync_event(tb, plan, cm)
     _connect_events(tb, plan, cm)
@@ -546,6 +572,7 @@ def shrink_timeline(
     doomed_world_sizes: Optional[Sequence[int]] = None,
     respawn_plan: Optional[SpawnPlan] = None,
     bytes_total: int = 0,
+    queue_delay_s: float = 0.0,
 ) -> Timeline:
     """Charge one shrink by mechanism (§4.6-4.7).
 
@@ -557,8 +584,13 @@ def shrink_timeline(
 
     ``bytes_total`` > 0 appends a REDISTRIBUTION event (survivors absorb
     the doomed ranks' shards) after the mechanism's own events.
+    ``queue_delay_s`` > 0 prepends a QUEUE event (RMS arbitration wait,
+    e.g. a preemption arriving while another reconfiguration is in
+    flight) that counts toward ``total`` but never toward downtime.
     """
     tb = _TimelineBuilder(contention=cm.overlap_contention)
+    if queue_delay_s > 0.0:
+        tb.add(Stage.QUEUE, queue_delay_s, label="queued behind in-flight reconfig")
     doomed = list(doomed_world_sizes or [])
     if kind is ShrinkKind.TS:
         dur = cm.ts_terminate(doomed or [1]) + cm.t_token
@@ -641,6 +673,7 @@ class ReconfigEngine:
         *,
         strategy: Optional[StrategyLike] = None,
         method: Optional[Method] = None,
+        queue_delay_s: float = 0.0,
     ) -> ReconfigPlan:
         """Plan an NS -> NT expansion onto the given allocation.
 
@@ -651,6 +684,8 @@ class ReconfigEngine:
                 (heterogeneous, requires a vector-capable strategy).
             strategy: override this engine's strategy for one plan.
             method: override this engine's method for one plan.
+            queue_delay_s: RMS arbitration wait charged as a leading
+                QUEUE timeline event (see :func:`expansion_timeline`).
         Returns:
             A self-contained :class:`ReconfigPlan` (spawn plan, sync
             graph, connect rounds, resolved redistribution bytes).
@@ -682,6 +717,7 @@ class ReconfigEngine:
             sync_graph=graph,
             connect_rounds=rounds,
             redistribution=redistribution,
+            queue_delay_s=max(0.0, queue_delay_s),
         )
 
     def plan_shrink(
@@ -689,6 +725,8 @@ class ReconfigEngine:
         state: ClusterState,
         release_nodes=None,
         release_cores=None,
+        *,
+        queue_delay_s: float = 0.0,
     ) -> ReconfigPlan:
         """Plan a shrink against live cluster bookkeeping.
 
@@ -696,6 +734,8 @@ class ReconfigEngine:
             state: the job's :class:`ClusterState`.
             release_nodes: node ids to release (TS path), or None.
             release_cores: core counts to release instead, or None.
+            queue_delay_s: RMS arbitration wait charged as a leading
+                QUEUE timeline event (see :func:`shrink_timeline`).
         Returns:
             A :class:`ReconfigPlan` with the shrink actions, doomed
             world sizes (captured so the timeline can be charged later
@@ -729,6 +769,7 @@ class ReconfigEngine:
                 bytes_per_rank=self.bytes_per_rank,
                 bytes_total=self.redistribution_bytes(ns, nt),
             ),
+            queue_delay_s=max(0.0, queue_delay_s),
         )
 
     # ------------------------------------------------------------- timeline --
@@ -745,7 +786,8 @@ class ReconfigEngine:
         if plan.kind == "expand":
             assert plan.spawn is not None
             return expansion_timeline(
-                plan.spawn, self.cost_model, bytes_total=bytes_total
+                plan.spawn, self.cost_model, bytes_total=bytes_total,
+                queue_delay_s=plan.queue_delay_s,
             )
         if plan.kind == "shrink":
             assert plan.shrink is not None
@@ -756,6 +798,7 @@ class ReconfigEngine:
                 nt=plan.nt,
                 doomed_world_sizes=list(plan.shrink_world_sizes) or [1],
                 bytes_total=bytes_total,
+                queue_delay_s=plan.queue_delay_s,
             )
         return Timeline()
 

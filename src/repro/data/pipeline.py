@@ -9,13 +9,11 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.models.common import ModelConfig
 from repro.parallel.sharding import ShardingContext, resolve_spec

@@ -6,7 +6,7 @@ exactly the property TS shrinkage needs.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Sequence
 
 import jax

@@ -1,14 +1,75 @@
 """Simulated Resource Management System (DRM side of the paper).
 
-Emits grow/shrink/failure/straggler events against which the elastic
-runtime reconfigures.  Policies are deliberately simple — the paper's
-scope is the *mechanism* (how to resize cheaply), not the policy (when).
+Two halves:
+
+* the **event source** (this module): :class:`SimulatedRMS` emits
+  grow/shrink/failure/straggler events against which the elastic runtime
+  reconfigures — scripted, scenario-fed, or *policy*-generated;
+* the **policy engine** (:mod:`repro.malleability.policies`, re-exported
+  here): an RMS-side :class:`~repro.malleability.policies.ClusterState`
+  (one shared node pool + per-job allocations) with pluggable
+  :class:`~repro.malleability.policies.RmsPolicy` implementations —
+  :class:`~repro.malleability.policies.BackfillPolicy` (idle nodes flow
+  to malleable jobs, reclaimed under queue pressure),
+  :class:`~repro.malleability.policies.PreemptionPolicy` (priority jobs
+  force-shrink lower-priority ones, composing with in-flight
+  reconfigurations), and
+  :class:`~repro.malleability.policies.ChurnPolicy` (seeded long-horizon
+  grow/shrink cycling) — plus a multi-job arbiter
+  (:func:`~repro.malleability.policies.arbitrate_jobs`) that charges
+  several jobs' timelines against one pool.
+
+Policies *generate* declarative
+:class:`~repro.malleability.scenarios.Scenario` traces, so the existing
+sim/live machinery consumes policy output unchanged:
+``SimulatedRMS.from_policy(policy, cluster)`` is exactly
+``from_scenario(policy.generate(cluster).scenario(job))``.
 """
 from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
 from typing import Iterator
+
+# Re-exported policy subsystem (the RMS grew from a scripted event source
+# into a policy engine; the implementation lives with the other
+# device-free malleability code so benchmarks can import it jax-free).
+from repro.malleability.policies import (
+    ArbitratedJob,
+    BackfillPolicy,
+    ChurnPolicy,
+    ClusterState,
+    JobSpec,
+    MultiJobOutcome,
+    PolicyTrace,
+    PreemptionPolicy,
+    PriorityArrival,
+    RigidArrival,
+    RmsPolicy,
+    arbitrate_jobs,
+    registered_policy_scenarios,
+    run_multijob_sim,
+)
+
+__all__ = [
+    "ArbitratedJob",
+    "BackfillPolicy",
+    "ChurnPolicy",
+    "ClusterState",
+    "Event",
+    "EventKind",
+    "JobSpec",
+    "MultiJobOutcome",
+    "PolicyTrace",
+    "PreemptionPolicy",
+    "PriorityArrival",
+    "RigidArrival",
+    "RmsPolicy",
+    "SimulatedRMS",
+    "arbitrate_jobs",
+    "registered_policy_scenarios",
+    "run_multijob_sim",
+]
 
 
 class EventKind(enum.Enum):
@@ -25,11 +86,12 @@ class Event:
     kind: EventKind
     nodes: tuple[int, ...] = ()     # affected node ids (SHRINK/FAIL/STRAGGLER)
     target_nodes: int = 0           # new total node count (GROW)
+    queue_delay_s: float = 0.0      # RMS arbitration wait (QUEUE stage)
 
 
 @dataclass
 class SimulatedRMS:
-    """Scripted or random event source."""
+    """Scripted, scenario-fed, or policy-generated event source."""
 
     script: list[Event] = field(default_factory=list)
 
@@ -60,7 +122,27 @@ class SimulatedRMS:
                 kind=EventKind(e.kind),
                 nodes=tuple(e.nodes),
                 target_nodes=e.target_nodes,
+                queue_delay_s=e.queue_delay_s,
             )
             for e in sorted(scenario.events, key=lambda e: e.step)
         ]
         return SimulatedRMS(script=out)
+
+    @staticmethod
+    def from_policy(policy: RmsPolicy, cluster: ClusterState,
+                    job: str | None = None) -> "SimulatedRMS":
+        """Run an RMS policy and feed its generated trace to the runtime.
+
+        Args:
+            policy: any :class:`RmsPolicy` (backfill / preemption /
+                churn / third-party).
+            cluster: the RMS-side cluster view the policy schedules on.
+            job: which job's trace to follow (defaults to the policy
+                trace's primary — its first — job).
+        Returns:
+            A :class:`SimulatedRMS` scripted with the policy's decisions
+            for that job.
+        """
+        trace = policy.generate(cluster)
+        name = job if job is not None else trace.primary_job
+        return SimulatedRMS.from_scenario(trace.scenario(name))

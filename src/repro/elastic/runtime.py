@@ -58,6 +58,7 @@ class ReconfigRecord:
     nodes_returned: tuple[int, ...] = ()
     nodes_pinned: tuple[int, ...] = ()
     bytes_moved: int = 0       # stage-3 bytes charged on the timeline
+    queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
 
 
 class ElasticRuntime:
@@ -154,12 +155,23 @@ class ElasticRuntime:
 
     # -------------------------------------------------- backend protocol --
     def apply_expand(self, plan: ReconfigPlan) -> None:
-        """Bring up one NodeGroup per spawned group (each node-confined)."""
+        """Bring up NodeGroups for the spawned groups (node-confined).
+
+        Parallel strategies spawn node-confined groups 1:1; a classic
+        strategy's single multi-node group is split one NodeGroup per
+        node (the substrate's releasable unit), mirroring the simulator
+        backend — the charged timeline still prices the plan's own spawn
+        structure.
+        """
         assert plan.spawn is not None
-        for _g in plan.spawn.groups:
-            node, devs = self.pool.acquire_any()
-            w = self.state.add_world([node], [len(devs)])
-            self.groups[w.wid] = NodeGroup(gid=w.wid, node=node, devices=devs)
+        for g in plan.spawn.groups:
+            remaining = g.size
+            while remaining > 0:
+                node, devs = self.pool.acquire_any()
+                take = min(len(devs), remaining)
+                w = self.state.add_world([node], [take])
+                self.groups[w.wid] = NodeGroup(gid=w.wid, node=node, devices=devs)
+                remaining -= take
         self.state.expansions_done += 1
 
     def apply_shrink(self, plan: ReconfigPlan) -> None:
@@ -179,7 +191,8 @@ class ElasticRuntime:
                     self.pool.release(node)
 
     # ---------------------------------------------------------------- expand --
-    def expand(self, target_nodes: int) -> ReconfigRecord:
+    def expand(self, target_nodes: int, *,
+               queue_delay_s: float = 0.0) -> ReconfigRecord:
         """Grow the job to ``target_nodes`` NodeGroup-confined nodes.
 
         Plans through the engine's strategy registry, applies the plan to
@@ -188,6 +201,9 @@ class ElasticRuntime:
 
         Args:
             target_nodes: new total node count (must exceed the current).
+            queue_delay_s: RMS arbitration wait (the grant was queued
+                behind an in-flight reconfiguration); charged as a
+                leading QUEUE timeline event.
         Returns:
             The appended :class:`ReconfigRecord`.
         Raises:
@@ -198,7 +214,8 @@ class ElasticRuntime:
             raise ValueError("expand() requires target_nodes > current nodes")
         cpn = self.pool.devices_per_node
         ns, nt = before * cpn, target_nodes * cpn
-        plan = self.engine.plan_expand(ns, nt, self._cores_arg(cpn, target_nodes))
+        plan = self.engine.plan_expand(ns, nt, self._cores_arg(cpn, target_nodes),
+                                       queue_delay_s=queue_delay_s)
         outcome = self.engine.execute(plan, backend=self)
 
         spawn = plan.spawn
@@ -213,6 +230,7 @@ class ElasticRuntime:
             steps=spawn.steps,
             groups=len(spawn.groups),
             bytes_moved=outcome.bytes_moved,
+            queued_s=outcome.queued_s,
         )
         self.history.append(rec)
         return rec
@@ -238,10 +256,12 @@ class ElasticRuntime:
         victims = sorted(self.state.nodes_in_use())[-n_nodes_to_release:]
         return self.shrink_nodes(victims, kind=kind)
 
-    def shrink_nodes(self, victims: list[int], kind: str = "shrink") -> ReconfigRecord:
+    def shrink_nodes(self, victims: list[int], kind: str = "shrink", *,
+                     queue_delay_s: float = 0.0) -> ReconfigRecord:
         """TS-shrink specific node ids out of the job (see :meth:`shrink`)."""
         before = self.n_nodes
-        plan = self.engine.plan_shrink(self.state, release_nodes=victims)
+        plan = self.engine.plan_shrink(self.state, release_nodes=victims,
+                                       queue_delay_s=queue_delay_s)
         outcome = self.engine.execute(plan, backend=self)
         assert plan.shrink is not None
         rec = ReconfigRecord(
@@ -254,12 +274,13 @@ class ElasticRuntime:
             nodes_returned=plan.shrink.nodes_returned,
             nodes_pinned=plan.shrink.nodes_pinned,
             bytes_moved=outcome.bytes_moved,
+            queued_s=outcome.queued_s,
         )
         self.history.append(rec)
         return rec
 
     # ------------------------------------------------------------------ fault --
-    def fail_node(self, node: int) -> ReconfigRecord:
+    def fail_node(self, node: int, *, queue_delay_s: float = 0.0) -> ReconfigRecord:
         """Node failure == an RMS-forced TS shrink of that node's group.
 
         The paper's mechanism doubles as the recovery path: because every
@@ -267,8 +288,10 @@ class ElasticRuntime:
         surviving groups keep a consistent state and the runtime simply
         reconfigures without it.
         """
-        return self.shrink_nodes([node], kind="fail")
+        return self.shrink_nodes([node], kind="fail", queue_delay_s=queue_delay_s)
 
-    def drop_straggler(self, node: int) -> ReconfigRecord:
+    def drop_straggler(self, node: int, *,
+                       queue_delay_s: float = 0.0) -> ReconfigRecord:
         """Straggler mitigation: TS-shrink the slow group out of the job."""
-        return self.shrink_nodes([node], kind="straggler")
+        return self.shrink_nodes([node], kind="straggler",
+                                 queue_delay_s=queue_delay_s)

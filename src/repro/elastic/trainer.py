@@ -8,9 +8,8 @@ Periodic mesh-independent checkpoints cover the SS-restart path.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 
@@ -146,6 +145,7 @@ class ElasticTrainer:
         applied = list(dispatch_event(
             RuntimeAdapter(self.runtime), ev.kind.value,
             nodes=ev.nodes, target_nodes=ev.target_nodes,
+            queue_delay_s=ev.queue_delay_s,
         ))
         return bool(applied)
 

@@ -96,7 +96,6 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import arch_config, SHAPES, shape_skip_reason
     from repro.launch.mesh import make_production_mesh
@@ -110,7 +109,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
         build_train_step,
         cache_shardings,
         serving_param_shapes,
-        train_state_shardings,
     )
     from repro.parallel.sharding import param_sharding_abstract
     from jax.sharding import NamedSharding, PartitionSpec as P

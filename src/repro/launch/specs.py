@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import ShapeCell
-from repro.models import Model
 from repro.models.common import ModelConfig
 
 

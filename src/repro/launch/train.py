@@ -12,13 +12,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import arch_config, smoke_config
 from repro.data import SyntheticTokens, make_batch_on_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.models import Model
-from repro.parallel.sharding import ShardingContext, param_sharding
+from repro.parallel.sharding import ShardingContext
 from repro.train.steps import build_train_step
 from repro.checkpoint import CheckpointManager
 

@@ -15,7 +15,10 @@ Three submodules:
   :class:`ShrinkReport`) over the engine's charged timelines;
 * :mod:`.scenarios` — declarative workload traces (:class:`Scenario`),
   their registry, and the sim/live executors that agree exactly on
-  every timeline-derived number, bytes included.
+  every timeline-derived number, bytes included;
+* :mod:`.policies` — the RMS policy engine (backfill / preemption /
+  churn + the multi-job arbiter) whose generated traces land in the
+  same registry (re-exported by :mod:`repro.elastic.rms`).
 
 See ``docs/cost-model.md`` and ``docs/scenarios.md`` for guides.
 """
@@ -25,6 +28,26 @@ from .cost_model import (
     CostModel,
     fsdp_bytes_model,
     replicated_bytes_model,
+)
+from .policies import (
+    ArbitratedJob,
+    BackfillPolicy,
+    ChurnPolicy,
+    JobSpec,
+    MultiJobOutcome,
+    PolicyTrace,
+    PreemptionPolicy,
+    PriorityArrival,
+    RigidArrival,
+    RmsPolicy,
+    arbitrate_jobs,
+    backfill_pressure,
+    charge_in_flight_queueing,
+    churn_trace,
+    priority_preempt,
+    registered_policy_scenarios,
+    run_multijob_sim,
+    two_job_interference,
 )
 from .scenarios import (
     RuntimeAdapter,
@@ -55,23 +78,40 @@ from .simulator import (
 __all__ = [
     "MN5",
     "NASP",
+    "ArbitratedJob",
+    "BackfillPolicy",
+    "ChurnPolicy",
     "CostModel",
     "ExpansionReport",
+    "JobSpec",
+    "MultiJobOutcome",
+    "PolicyTrace",
+    "PreemptionPolicy",
+    "PriorityArrival",
+    "RigidArrival",
+    "RmsPolicy",
     "RuntimeAdapter",
     "Scenario",
     "ScenarioEvent",
     "ScenarioRecord",
     "ShrinkReport",
+    "arbitrate_jobs",
+    "backfill_pressure",
     "burst_arrival",
+    "charge_in_flight_queueing",
+    "churn_trace",
     "dispatch_event",
     "fsdp_bytes_model",
     "get_scenario",
     "heterogeneous_pool",
     "node_failures",
     "param_bytes_for_arch",
+    "priority_preempt",
     "register_scenario",
+    "registered_policy_scenarios",
     "registered_scenarios",
     "replicated_bytes_model",
+    "run_multijob_sim",
     "run_scenario_live",
     "run_scenario_sim",
     "simulate_expansion",
@@ -79,4 +119,5 @@ __all__ = [
     "simulate_shrink",
     "steady_cycle",
     "straggler_churn",
+    "two_job_interference",
 ]

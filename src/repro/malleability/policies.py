@@ -1,0 +1,742 @@
+"""RMS policy engine: WHO grows, WHO shrinks, and WHEN.
+
+The paper's contribution is the *mechanism* — parallel spawning makes a
+resize cheap.  The policy literature (Iserte et al., "Resource
+Optimization with MPI Process Malleability"; Chadha et al., "Extending
+SLURM for Dynamic Resource-Aware Adaptive Batch Scheduling") shows the
+makespan wins come from the scheduler exploiting that cheapness.  This
+module is the policy side of the reproduction:
+
+* :class:`ClusterState` — the RMS's ledger: one shared node pool plus
+  per-job allocations (distinct from :class:`repro.core.ClusterState`,
+  which is a single job's *world* bookkeeping).  Build it from a live
+  :class:`~repro.elastic.node_group.DevicePool` via :meth:`from_pool` to
+  schedule over the same pool the runtime partitions.
+* :class:`RmsPolicy` implementations — :class:`BackfillPolicy` (idle
+  nodes flow to malleable jobs and are reclaimed under queue pressure),
+  :class:`PreemptionPolicy` (priority arrivals force-shrink
+  lower-priority jobs, composing with in-flight reconfigurations), and
+  :class:`ChurnPolicy` (seeded long-horizon grow/shrink cycling).
+* :func:`arbitrate_jobs` — the multi-job path: several jobs' traces are
+  charged against ONE pool; conflicts surface as queued RESIZE events
+  (deferred steps + ``queue_delay_s`` QUEUE spans) and degraded overlap
+  (the scenario's ``contention`` override).
+
+Every policy *generates* a declarative
+:class:`~repro.malleability.scenarios.Scenario`, so the existing
+sim/live machinery consumes policy output unchanged — the parity the
+rest of the repo pins (sim == live per event) holds for policy traces
+for free.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+from .scenarios import (
+    GROW,
+    SHRINK,
+    Scenario,
+    ScenarioEvent,
+    register_scenario,
+    run_scenario_sim,
+    steady_cycle,
+)
+
+
+# ============================================================= cluster view ==
+@dataclass(frozen=True)
+class JobSpec:
+    """One job as the RMS sees it (limits + scheduling class)."""
+
+    name: str
+    min_nodes: int = 1               # guaranteed floor (never reclaimed below)
+    max_nodes: int = 8               # grant ceiling
+    priority: int = 0                # higher preempts lower
+    malleable: bool = True           # rigid jobs neither grow nor shrink
+    initial_nodes: int = 0           # 0 -> min_nodes
+    arch: str = ""                   # pytree the job reshards on resize
+    param_bytes: int = 0             # explicit pytree size (overrides arch)
+
+    def __post_init__(self) -> None:
+        if self.min_nodes < 1 or self.max_nodes < self.min_nodes:
+            raise ValueError(
+                f"job {self.name!r}: need 1 <= min_nodes <= max_nodes, "
+                f"got [{self.min_nodes}, {self.max_nodes}]"
+            )
+
+    def start_nodes(self) -> int:
+        return self.initial_nodes or self.min_nodes
+
+
+@dataclass
+class ClusterState:
+    """RMS-side cluster ledger: a shared node pool + per-job allocations.
+
+    NOT :class:`repro.core.ClusterState` (one job's world/rank
+    bookkeeping): this is the scheduler's view ACROSS jobs.  Policies
+    read it to decide who grows/shrinks; they never mutate it — a policy
+    run is a pure function from this view to a trace.
+    """
+
+    total_nodes: int
+    jobs: tuple[JobSpec, ...] = ()
+    allocations: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.total_nodes <= 0:
+            raise ValueError("total_nodes must be positive")
+        names = [j.name for j in self.jobs]
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate job names: {names}")
+        for j in self.jobs:
+            self.allocations.setdefault(j.name, j.start_nodes())
+        if self.allocated() > self.total_nodes:
+            raise ValueError(
+                f"over-committed: {self.allocated()} nodes allocated on a "
+                f"{self.total_nodes}-node pool"
+            )
+
+    @classmethod
+    def from_pool(cls, pool, jobs: Sequence[JobSpec] = ()) -> "ClusterState":
+        """Schedule over a live :class:`~repro.elastic.node_group.DevicePool`
+        (or anything with ``n_nodes``): the policy layer then sees exactly
+        the pool the elastic runtime partitions."""
+        return cls(total_nodes=pool.n_nodes, jobs=tuple(jobs))
+
+    # ---- queries -----------------------------------------------------------
+    def spec(self, name: str) -> JobSpec:
+        for j in self.jobs:
+            if j.name == name:
+                return j
+        raise KeyError(f"unknown job {name!r}")
+
+    def allocated(self) -> int:
+        return sum(self.allocations.values())
+
+    def idle_nodes(self) -> int:
+        return self.total_nodes - self.allocated()
+
+    def malleable_jobs(self) -> tuple[JobSpec, ...]:
+        return tuple(j for j in self.jobs if j.malleable)
+
+    def primary_malleable(self) -> JobSpec:
+        mall = self.malleable_jobs()
+        if not mall:
+            raise ValueError("cluster has no malleable job to schedule")
+        return mall[0]
+
+    def clamp_grant(self, job: JobSpec, requested: int) -> int:
+        """Clamp a grant to the job's limits AND the pool's capacity.
+
+        A policy may *request* anything (e.g. backfill offering a job
+        more nodes than the pool holds); the grant is what fits:
+        ``[min_nodes, min(max_nodes, pool minus other jobs)]``.  Never
+        raises — an oversized request clamps, it does not crash.
+        """
+        others = self.allocated() - self.allocations.get(job.name, 0)
+        cap = min(job.max_nodes, self.total_nodes - others)
+        return max(job.min_nodes, min(requested, cap))
+
+
+# ============================================================ policy output ==
+@dataclass
+class PolicyTrace:
+    """A policy run's output: per-job declarative event traces.
+
+    ``scenario(job)`` materializes one job's trace as a plain
+    :class:`Scenario` — the same object the simulator, the live runtime,
+    the trainer, and the benchmarks already consume.
+    """
+
+    policy: str
+    cluster_nodes: int
+    initial: Dict[str, int]                       # job -> starting nodes
+    events: Dict[str, Tuple[ScenarioEvent, ...]]  # job -> trace
+    steps: int
+    specs: Dict[str, JobSpec] = field(default_factory=dict)
+
+    @property
+    def primary_job(self) -> str:
+        return next(iter(self.initial))
+
+    def scenario(self, job: Optional[str] = None, *, name: str = "",
+                 description: str = "", **overrides) -> Scenario:
+        job = job if job is not None else self.primary_job
+        if job not in self.events:
+            raise KeyError(
+                f"no trace for job {job!r}; traced: {sorted(self.events)}")
+        spec = self.specs.get(job)
+        kwargs = dict(
+            arch=spec.arch if spec else "",
+            param_bytes=spec.param_bytes if spec else 0,
+        )
+        kwargs.update(overrides)
+        return Scenario(
+            name=name or f"{self.policy}:{job}",
+            description=description or (
+                f"{self.policy} policy trace for job {job!r} on a "
+                f"{self.cluster_nodes}-node pool"),
+            initial_nodes=self.initial[job],
+            events=self.events[job],
+            steps=self.steps,
+            **kwargs,
+        )
+
+    def scenarios(self) -> Dict[str, Scenario]:
+        return {job: self.scenario(job) for job in self.events}
+
+
+@runtime_checkable
+class RmsPolicy(Protocol):
+    """A scheduling policy: cluster view in, declarative traces out."""
+
+    name: str
+
+    def generate(self, cluster: ClusterState) -> PolicyTrace: ...
+
+
+# ---- shared helpers ---------------------------------------------------------
+def _resize(step: int, current: int, target: int) -> ScenarioEvent:
+    """One RMS resize decision as a scenario event.
+
+    Grows name the new total; shrinks name the victim node ids — always
+    the TOP ids, which keeps sim and live node trajectories identical
+    (both acquire lowest-free first) and live device order a prefix of
+    ``jax.devices()``.
+    """
+    if target > current:
+        return ScenarioEvent(step=step, kind=GROW, target_nodes=target)
+    if target < current:
+        return ScenarioEvent(step=step, kind=SHRINK,
+                             nodes=tuple(range(target, current)))
+    raise ValueError("resize to the current size is a no-op")
+
+
+def _check_arrival_window(arrivals, start_step: int, horizon: int,
+                          policy: str) -> None:
+    """Reject arrivals the stepped walk would silently never see."""
+    for a in arrivals:
+        if not start_step <= a.step < horizon:
+            raise ValueError(
+                f"{policy}: arrival at step {a.step} is outside the "
+                f"scheduled window [start_step={start_step}, "
+                f"horizon={horizon}) and would be silently ignored")
+
+
+def _trial_walls(events: Sequence[ScenarioEvent], template: Scenario) -> List[float]:
+    """Per-event charged wall times (queue-free), via a throwaway sim run."""
+    stripped = tuple(replace(e, queue_delay_s=0.0)
+                     for e in sorted(events, key=lambda e: e.step))
+    trial = replace(
+        template,
+        name=template.name + "__trial",
+        events=stripped,
+        steps=max((e.step for e in stripped), default=0) + 2,
+    )
+    recs = run_scenario_sim(trial)
+    if len(recs) != len(stripped):
+        raise ValueError(
+            f"trace for {template.name!r} has ineffective events "
+            f"({len(stripped)} events, {len(recs)} records); per-event "
+            "walls are ambiguous")
+    return [r.est_wall_s for r in recs]
+
+
+def charge_in_flight_queueing(scenario: Scenario) -> Scenario:
+    """Charge same-step successors as queued behind the in-flight event.
+
+    When two events land on one application step (a preemption arriving
+    mid-grow, a composed drop+regrow), the second cannot start until the
+    first's reconfiguration drains: its ``queue_delay_s`` becomes the
+    sum of the earlier same-step events' charged walls.  Single-event
+    steps are untouched; a scenario without step collisions is returned
+    unchanged.
+    """
+    events = tuple(sorted(scenario.events, key=lambda e: e.step))
+    if len({e.step for e in events}) == len(events):
+        return scenario
+    walls = _trial_walls(events, scenario)
+    out = []
+    for i, ev in enumerate(events):
+        acc = sum(walls[j] for j in range(i) if events[j].step == ev.step)
+        out.append(replace(ev, queue_delay_s=acc) if acc > 0 else ev)
+    return replace(scenario, events=tuple(out))
+
+
+# ================================================================= policies ==
+@dataclass(frozen=True)
+class RigidArrival:
+    """A rigid (non-malleable) batch job entering the queue."""
+
+    step: int
+    nodes: int
+    duration: int
+    priority: int = 0
+
+
+@dataclass(frozen=True)
+class BackfillPolicy:
+    """Idle nodes flow to malleable jobs; queue pressure reclaims them.
+
+    The EASY-backfill intuition under malleability (Iserte et al.): a
+    malleable job soaks up whatever the rigid queue is not using, down
+    to its guaranteed ``min_nodes`` floor when rigid jobs need the
+    space.  A rigid arrival starts as soon as the pool minus that floor
+    fits it (the malleable job is force-shrunk to make room); otherwise
+    it waits in FIFO order.  Grants are clamped by
+    :meth:`ClusterState.clamp_grant` — a job whose ``max_nodes`` exceeds
+    the pool simply receives the pool, never an error.
+    """
+
+    arrivals: Tuple[RigidArrival, ...] = ()
+    horizon: int = 40
+    start_step: int = 2
+    name: str = "backfill"
+
+    def generate(self, cluster: ClusterState) -> PolicyTrace:
+        job = cluster.primary_malleable()
+        _check_arrival_window(self.arrivals, self.start_step, self.horizon,
+                              self.name)
+        alloc = cluster.allocations[job.name]
+        events: List[ScenarioEvent] = []
+        queue: List[RigidArrival] = []
+        running: List[List[int]] = []          # [end_step, nodes]
+        arrivals = sorted(self.arrivals, key=lambda a: a.step)
+        for step in range(self.start_step, self.horizon):
+            running = [r for r in running if r[0] > step]
+            queue.extend(a for a in arrivals if a.step == step)
+            rigid_used = sum(r[1] for r in running)
+            waiting: List[RigidArrival] = []
+            for a in queue:     # FIFO: start whatever fits above the floor
+                if a.nodes <= cluster.total_nodes - rigid_used - job.min_nodes:
+                    running.append([step + a.duration, a.nodes])
+                    rigid_used += a.nodes
+                else:
+                    waiting.append(a)
+            queue = waiting
+            target = cluster.clamp_grant(job, cluster.total_nodes - rigid_used)
+            if target != alloc:
+                events.append(_resize(step, alloc, target))
+                alloc = target
+        return PolicyTrace(
+            policy=self.name,
+            cluster_nodes=cluster.total_nodes,
+            initial={job.name: cluster.allocations[job.name]},
+            events={job.name: tuple(events)},
+            steps=self.horizon + 2,
+            specs={job.name: job},
+        )
+
+
+@dataclass(frozen=True)
+class PriorityArrival:
+    """A high-priority job demanding nodes NOW (preemption source)."""
+
+    step: int
+    nodes: int
+    duration: int
+    priority: int = 100
+
+
+@dataclass(frozen=True)
+class PreemptionPolicy:
+    """Priority arrivals force-shrink lower-priority malleable jobs.
+
+    The malleable job grows opportunistically into idle nodes; when a
+    higher-priority job arrives, the policy immediately reclaims down to
+    whatever still fits beside the preemptor.  A preemption landing on a
+    step where the victim already has a reconfiguration in flight (the
+    opportunistic grow at the same step) COMPOSES with it instead of
+    cancelling: the forced shrink is emitted at the same step, queued
+    behind the in-flight event's charged wall
+    (:func:`charge_in_flight_queueing`), so both executors see the grow
+    drain first and the preemption pay its QUEUE span.
+    """
+
+    arrivals: Tuple[PriorityArrival, ...] = ()
+    horizon: int = 24
+    start_step: int = 2
+    name: str = "preemption"
+
+    def generate(self, cluster: ClusterState) -> PolicyTrace:
+        job = cluster.primary_malleable()
+        _check_arrival_window(self.arrivals, self.start_step, self.horizon,
+                              self.name)
+        alloc = cluster.allocations[job.name]
+        events: List[ScenarioEvent] = []
+        running: List[List[int]] = []          # [end_step, nodes]
+        arrivals = sorted(self.arrivals, key=lambda a: a.step)
+        for step in range(self.start_step, self.horizon):
+            running = [r for r in running if r[0] > step]
+            used = sum(r[1] for r in running)
+            # Opportunistic growth first: the job is mid-cycle when a
+            # same-step preemptor lands.
+            target = cluster.clamp_grant(job, cluster.total_nodes - used)
+            if target != alloc:
+                events.append(_resize(step, alloc, target))
+                alloc = target
+            for a in (a for a in arrivals if a.step == step):
+                if a.priority <= job.priority:
+                    continue                   # not allowed to preempt us
+                # Even a preemptor cannot take the victim's guaranteed
+                # floor or more than the pool still holds: the grant is
+                # trimmed so the ledger never over-commits.
+                grant = min(a.nodes,
+                            cluster.total_nodes - used - job.min_nodes)
+                if grant <= 0:
+                    continue                   # nothing reclaimable
+                running.append([step + a.duration, grant])
+                used += grant
+                target = cluster.clamp_grant(job, cluster.total_nodes - used)
+                if target < alloc:
+                    events.append(_resize(step, alloc, target))
+                    alloc = target
+        trace = PolicyTrace(
+            policy=self.name,
+            cluster_nodes=cluster.total_nodes,
+            initial={job.name: cluster.allocations[job.name]},
+            events={job.name: tuple(events)},
+            steps=self.horizon + 2,
+            specs={job.name: job},
+        )
+        # Resolve mid-cycle compositions into QUEUE charges.
+        queued = charge_in_flight_queueing(trace.scenario(job.name))
+        trace.events[job.name] = queued.events
+        return trace
+
+
+@dataclass(frozen=True)
+class ChurnPolicy:
+    """Seeded long-horizon grow/shrink cycling (RMS allocation churn).
+
+    Every ``period`` steps the RMS moves the malleable job to a fresh
+    uniformly-drawn target in ``[min_nodes, min(max_nodes, pool)]``
+    (never the current size, so every decision is a real RESIZE).  The
+    trace is a pure function of ``seed`` — identical seeds yield
+    identical traces, which is what lets a 200-event churn run be pinned
+    by tests and replayed bit-for-bit in CI.
+    """
+
+    decisions: int = 200
+    period: int = 1
+    seed: int = 0
+    start_step: int = 2
+    name: str = "churn"
+
+    def generate(self, cluster: ClusterState) -> PolicyTrace:
+        job = cluster.primary_malleable()
+        lo = job.min_nodes
+        hi = min(job.max_nodes, cluster.total_nodes)
+        if hi <= lo:
+            raise ValueError(
+                f"churn needs headroom: job {job.name!r} is pinned at "
+                f"{lo} nodes on this pool")
+        rng = random.Random(self.seed)
+        alloc = cluster.allocations[job.name]
+        events: List[ScenarioEvent] = []
+        step = self.start_step
+        for _ in range(self.decisions):
+            target = rng.choice([n for n in range(lo, hi + 1) if n != alloc])
+            events.append(_resize(step, alloc, target))
+            alloc = target
+            step += self.period
+        return PolicyTrace(
+            policy=self.name,
+            cluster_nodes=cluster.total_nodes,
+            initial={job.name: cluster.allocations[job.name]},
+            events={job.name: tuple(events)},
+            steps=step + 2,
+            specs={job.name: job},
+        )
+
+
+# ======================================================= multi-job arbiter ==
+@dataclass(frozen=True)
+class ArbitratedJob:
+    """One job's share of an arbitrated multi-job workload."""
+
+    name: str
+    scenario: Scenario
+    queued_events: int      # emitted with queue_delay_s > 0
+    deferred_events: int    # pushed to a later step by capacity
+    clamped_events: int     # grow target cut down to fit the pool
+    dropped_events: int     # arbitration made them no-ops
+
+
+@dataclass(frozen=True)
+class MultiJobOutcome:
+    """Arbitration result: per-job scenarios + interference accounting."""
+
+    pool_nodes: int
+    jobs: Tuple[ArbitratedJob, ...]
+    interfered: Tuple[str, ...]
+
+    @property
+    def scenarios(self) -> Dict[str, Scenario]:
+        return {j.name: j.scenario for j in self.jobs}
+
+    def job(self, name: str) -> ArbitratedJob:
+        for j in self.jobs:
+            if j.name == name:
+                return j
+        raise KeyError(name)
+
+
+def arbitrate_jobs(
+    jobs: Sequence[Tuple[str, Scenario]],
+    pool_nodes: int,
+    *,
+    contention: float = 1.25,
+    defer_slack: int = 16,
+) -> MultiJobOutcome:
+    """Charge several jobs' timelines against ONE shared node pool.
+
+    Walks the merged trace step by step, tracking every job's
+    allocation.  Interference surfaces exactly the two ways a real RMS
+    shows it:
+
+    * **queued RESIZE events** — a grow that does not fit is deferred to
+      the first step with capacity; an event landing on a step where
+      another reconfiguration is already in flight is emitted with
+      ``queue_delay_s`` equal to the in-flight events' charged wall
+      (a QUEUE span on its timeline, raising makespan but not downtime);
+    * **degraded overlap** — jobs that interfered get the ``contention``
+      override on their scenario, so ASYNC hiding buys them less
+      (the existing contention factor, per PR 2).
+
+    Grow targets are clamped to the capacity the other jobs leave;
+    within a step, scheduled events run in job order and deferred events
+    retry after them.  Deferred grows still starved ``defer_slack``
+    steps past the last scheduled event are dropped.  Queue delays the
+    input traces already carry (e.g. a preemption composed by
+    :func:`charge_in_flight_queueing`) are preserved; cross-job waits
+    are added on top.
+
+    Args:
+        jobs: ``(name, scenario)`` pairs in arrival (priority) order.
+        pool_nodes: the shared pool's node count.
+        contention: overlap-contention assigned to interfered jobs.
+        defer_slack: extra steps a starved grow may wait before dropping.
+    Returns:
+        A :class:`MultiJobOutcome`; each per-job scenario is standalone
+        (private node numbering) and runs through the existing sim/live
+        machinery unchanged.
+    """
+    names = [name for name, _ in jobs]
+    if len(names) != len(set(names)):
+        raise ValueError(f"duplicate job names: {names}")
+    by_name = dict(jobs)
+    allocs = {name: sc.initial_nodes for name, sc in jobs}
+    if sum(allocs.values()) > pool_nodes:
+        raise ValueError(
+            f"over-committed: jobs start with {sum(allocs.values())} nodes "
+            f"on a {pool_nodes}-node pool")
+
+    sched: Dict[int, List[Tuple[str, ScenarioEvent]]] = {}
+    for name, sc in jobs:
+        for ev in sorted(sc.events, key=lambda e: e.step):
+            sched.setdefault(ev.step, []).append((name, ev))
+    last_step = (max(sched) if sched else 0) + defer_slack
+
+    emitted: Dict[str, List[ScenarioEvent]] = {name: [] for name in names}
+    emission_order: Dict[int, List[Tuple[str, int]]] = {}
+    deferred: List[Tuple[str, ScenarioEvent, bool]] = []  # (job, ev, counted)
+    stats = {name: {"queued": 0, "deferred": 0, "clamped": 0, "dropped": 0}
+             for name in names}
+    interfered: set[str] = set()
+
+    def emit(step: int, name: str, ev: ScenarioEvent) -> None:
+        emitted[name].append(ev)
+        emission_order.setdefault(step, []).append((name, len(emitted[name]) - 1))
+
+    step = 0
+    while step <= last_step and (sched or deferred):
+        retries, deferred = deferred, []
+        todo = [(n, ev, False) for n, ev in sched.pop(step, [])] + retries
+        for name, ev, counted in todo:
+            alloc = allocs[name]
+            if ev.kind == GROW:
+                capacity = pool_nodes - (sum(allocs.values()) - alloc)
+                target = min(ev.target_nodes, capacity)
+                if ev.target_nodes <= alloc:
+                    stats[name]["dropped"] += 1      # already satisfied
+                    continue
+                if target <= alloc:
+                    # capacity-starved: the RESIZE queues for a later step
+                    if not counted:
+                        stats[name]["deferred"] += 1
+                        interfered.add(name)
+                    if step < last_step:
+                        deferred.append((name, ev, True))
+                    else:
+                        stats[name]["dropped"] += 1
+                    continue
+                if target < ev.target_nodes:
+                    stats[name]["clamped"] += 1
+                    interfered.add(name)
+                emit(step, name, ScenarioEvent(
+                    step=step, kind=GROW, target_nodes=target,
+                    queue_delay_s=ev.queue_delay_s))
+                allocs[name] = target
+            else:   # shrink / fail / straggler: victims are top private ids
+                victims = tuple(n for n in ev.nodes if n < alloc)
+                if not victims:
+                    stats[name]["dropped"] += 1
+                    continue
+                emit(step, name, ScenarioEvent(
+                    step=step, kind=ev.kind, nodes=victims,
+                    queue_delay_s=ev.queue_delay_s))
+                allocs[name] = alloc - len(victims)
+        step += 1
+    assert not deferred     # the step == last_step iteration drops inline
+
+    # Charged walls per emitted event (queue-free), for QUEUE spans.
+    walls = {
+        name: (_trial_walls(emitted[name], by_name[name]) if emitted[name] else [])
+        for name in names
+    }
+    for step, ems in emission_order.items():
+        if len({name for name, _ in ems}) > 1:
+            interfered.update(name for name, _ in ems)
+        acc = 0.0
+        for name, idx in ems:
+            if acc > 0.0:
+                # Added on top of any wait the input trace already carried
+                # (e.g. a preemption composed by charge_in_flight_queueing).
+                emitted[name][idx] = replace(
+                    emitted[name][idx],
+                    queue_delay_s=emitted[name][idx].queue_delay_s + acc)
+                stats[name]["queued"] += 1
+                interfered.add(name)
+            acc += walls[name][idx]
+
+    out = []
+    for name, sc in jobs:
+        evs = tuple(emitted[name])
+        steps = max(sc.steps, max((e.step for e in evs), default=0) + 2)
+        arb = replace(
+            sc, events=evs, steps=steps,
+            contention=(contention if name in interfered else sc.contention),
+        )
+        s = stats[name]
+        out.append(ArbitratedJob(
+            name=name, scenario=arb, queued_events=s["queued"],
+            deferred_events=s["deferred"], clamped_events=s["clamped"],
+            dropped_events=s["dropped"],
+        ))
+    return MultiJobOutcome(pool_nodes=pool_nodes, jobs=tuple(out),
+                           interfered=tuple(sorted(interfered)))
+
+
+def run_multijob_sim(
+    jobs: Sequence[Tuple[str, Scenario]],
+    pool_nodes: int,
+    *,
+    contention: float = 1.25,
+):
+    """Arbitrate and simulate a multi-job workload on one pool.
+
+    Returns ``(records, outcome)``: per-job
+    :class:`~repro.malleability.scenarios.ScenarioRecord` lists from the
+    timeline-charging simulator, plus the :class:`MultiJobOutcome` whose
+    scenarios produced them.
+    """
+    outcome = arbitrate_jobs(jobs, pool_nodes, contention=contention)
+    records = {name: run_scenario_sim(sc)
+               for name, sc in outcome.scenarios.items()}
+    return records, outcome
+
+
+# ================================================= registered policy traces ==
+def backfill_pressure(name: str = "backfill-pressure") -> Scenario:
+    """8-node pool: the malleable job soaks up idle nodes, two rigid
+    arrivals reclaim them in waves, and the grant returns as they drain
+    (2 -> 8 -> 4 -> 2 -> 6 -> 8)."""
+    cluster = ClusterState(
+        total_nodes=8,
+        jobs=(JobSpec("train", min_nodes=2, max_nodes=8),),
+    )
+    policy = BackfillPolicy(
+        arrivals=(RigidArrival(step=8, nodes=4, duration=8),
+                  RigidArrival(step=12, nodes=2, duration=8)),
+        horizon=26,
+    )
+    return policy.generate(cluster).scenario(
+        "train", name=name,
+        description="backfill grants + reclamation under rigid queue pressure",
+    )
+
+
+def priority_preempt(name: str = "priority-preempt") -> Scenario:
+    """Two priority arrivals preempt the malleable job; the second lands
+    on the same step as its regrow, so the forced shrink queues behind
+    the in-flight reconfiguration (a QUEUE span on its timeline)."""
+    cluster = ClusterState(
+        total_nodes=8,
+        jobs=(JobSpec("train", min_nodes=1, max_nodes=6, priority=0,
+                      initial_nodes=2),),
+    )
+    policy = PreemptionPolicy(
+        arrivals=(PriorityArrival(step=6, nodes=4, duration=6),
+                  PriorityArrival(step=12, nodes=6, duration=6)),
+        horizon=22,
+    )
+    return policy.generate(cluster).scenario(
+        "train", name=name,
+        description="priority preemption, incl. one mid-reconfiguration",
+    )
+
+
+def churn_trace(name: str = "churn-200", decisions: int = 200,
+                seed: int = 7) -> Scenario:
+    """Long-horizon seeded churn: 200 RESIZE decisions on an 8-node pool."""
+    cluster = ClusterState(
+        total_nodes=8,
+        jobs=(JobSpec("train", min_nodes=1, max_nodes=8),),
+    )
+    policy = ChurnPolicy(decisions=decisions, seed=seed)
+    return policy.generate(cluster).scenario(
+        "train", name=name,
+        description=f"{decisions} seeded grow/shrink churn decisions "
+                    f"(seed={seed})",
+    )
+
+
+def two_job_interference(name: str = "two-job-interference") -> Scenario:
+    """Two identical breathing jobs arbitrated on one 8-node pool.
+
+    Job B's grows collide with job A's peak: they defer until A shrinks,
+    then emit queued behind A's same-step reconfiguration — the
+    registered scenario is B's arbitrated trace, carrying both a QUEUE
+    span and the degraded-overlap contention override.
+    """
+    a = steady_cycle(name="ij-a", low=2, high=6, cycles=2, period=4)
+    b = steady_cycle(name="ij-b", low=2, high=6, cycles=2, period=4)
+    outcome = arbitrate_jobs([("a", a), ("b", b)], pool_nodes=8)
+    sc = outcome.job("b").scenario
+    return replace(
+        sc, name=name,
+        description="job B of a two-job pool: grows deferred + queued "
+                    "behind job A, overlap degraded by contention",
+    )
+
+
+POLICY_SCENARIO_NAMES = (
+    "backfill-pressure",
+    "priority-preempt",
+    "churn-200",
+    "two-job-interference",
+)
+
+for _sc in (backfill_pressure(), priority_preempt(), churn_trace(),
+            two_job_interference()):
+    register_scenario(_sc)
+
+
+def registered_policy_scenarios() -> tuple[Scenario, ...]:
+    """The policy-generated traces in the scenario registry."""
+    from .scenarios import get_scenario
+
+    return tuple(get_scenario(n) for n in POLICY_SCENARIO_NAMES)

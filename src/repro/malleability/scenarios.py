@@ -43,12 +43,21 @@ STRAGGLER = "straggler"
 
 @dataclass(frozen=True)
 class ScenarioEvent:
-    """One RMS decision at a given application step."""
+    """One RMS decision at a given application step.
+
+    ``queue_delay_s`` is RMS arbitration wait: seconds this resize sat
+    queued behind an in-flight reconfiguration (its own job's previous
+    event in the same drain, or a co-scheduled job's — see
+    :mod:`repro.malleability.policies`).  Both executors charge it as a
+    leading QUEUE timeline event, so it raises ``est_wall`` (makespan)
+    but never downtime.
+    """
 
     step: int
     kind: str                       # grow | shrink | fail | straggler
     target_nodes: int = 0           # GROW: new total node count
     nodes: tuple[int, ...] = ()     # SHRINK/FAIL/STRAGGLER: victim node ids
+    queue_delay_s: float = 0.0      # RMS arbitration wait before stage 2
 
 
 @functools.lru_cache(maxsize=None)
@@ -94,6 +103,9 @@ class Scenario:
     profile: str = "mn5"             # default cost-model profile
     arch: str = ""                   # model config whose pytree the trace moves
     param_bytes: int = 0             # explicit pytree size (overrides arch)
+    contention: float = 0.0          # >0 overrides the cost model's overlap
+    #                                  contention (multi-job interference
+    #                                  degrades how well ASYNC hides work)
 
     @property
     def sim_only(self) -> bool:
@@ -130,7 +142,10 @@ class Scenario:
         return peak
 
     def cost_model(self) -> CostModel:
-        return NASP if self.profile == "nasp" else MN5
+        cm = NASP if self.profile == "nasp" else MN5
+        if self.contention > 0.0:
+            cm = cm.with_overlap(contention=self.contention)
+        return cm
 
     def resolved_param_bytes(self) -> int:
         """Pytree bytes the trace reshards: explicit ``param_bytes``, or
@@ -141,20 +156,24 @@ class Scenario:
             return param_bytes_for_arch(self.arch)
         return 0
 
-    def default_engine(self) -> ReconfigEngine:
+    def default_engine(self, strategy=None, method=None) -> ReconfigEngine:
         """Engine every executor uses for this trace (the dedup point).
 
         Heterogeneous pools require the diffusive strategy (§4.2); a
         sized pytree wires the replicated analytic bytes model so each
-        reconfiguration charges stage-3 data movement.
+        reconfiguration charges stage-3 data movement.  ``strategy`` /
+        ``method`` override the defaults for sweeps (e.g. the benchmark
+        ``policy_sweep`` running each policy trace under every
+        registered strategy).
         """
-        strategy = (
-            Strategy.PARALLEL_DIFFUSIVE if self.heterogeneous
-            else Strategy.PARALLEL_HYPERCUBE
-        )
+        if strategy is None:
+            strategy = (
+                Strategy.PARALLEL_DIFFUSIVE if self.heterogeneous
+                else Strategy.PARALLEL_HYPERCUBE
+            )
         pb = self.resolved_param_bytes()
         return ReconfigEngine(
-            method=Method.MERGE,
+            method=Method.MERGE if method is None else method,
             strategy=strategy,
             cost_model=self.cost_model(),
             bytes_model=replicated_bytes_model(pb) if pb else None,
@@ -375,6 +394,7 @@ class ScenarioRecord:
     est_wall_s: float          # timeline total
     downtime_s: float          # timeline downtime
     bytes_moved: int = 0       # stage-3 bytes charged on the timeline
+    queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
 
 
 @dataclass
@@ -410,28 +430,42 @@ class _SimCluster:
     def ranks_in_use(self) -> int:
         return sum(w.size for w in self.state.worlds.values())
 
-    def expand(self, target_nodes: int) -> ScenarioRecord:
+    def expand(self, target_nodes: int,
+               queue_delay_s: float = 0.0) -> ScenarioRecord:
         before = self.n_nodes
         ns = self.ranks_in_use()
         nt = self.scenario.ranks_for(target_nodes)
-        plan = self.engine.plan_expand(ns, nt, self.scenario.cores_for(target_nodes))
+        plan = self.engine.plan_expand(
+            ns, nt, self.scenario.cores_for(target_nodes),
+            queue_delay_s=queue_delay_s)
         outcome = self.engine.execute(plan)
         assert plan.spawn is not None
         for g in plan.spawn.groups:
-            node = min(self._free)
-            self._free.discard(node)
-            self.state.add_world([node], [g.size])
+            # The NodeGroup substrate keeps worlds node-confined even for
+            # classic strategies whose plan spawns one multi-node group
+            # (their cost timeline is unchanged — one big spawn call);
+            # the group is split one world per node, exactly as the live
+            # runtime's apply_expand does.
+            remaining = g.size
+            while remaining > 0:
+                node = min(self._free)
+                self._free.discard(node)
+                take = min(self._width(node), remaining)
+                self.state.add_world([node], [take])
+                remaining -= take
         self.state.expansions_done += 1
         return ScenarioRecord(
             step=-1, kind="expand", mechanism=plan.spawn.strategy.value,
             nodes_before=before, nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
-            bytes_moved=outcome.bytes_moved,
+            bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
         )
 
-    def shrink_nodes(self, victims: list[int], kind: str) -> ScenarioRecord:
+    def shrink_nodes(self, victims: list[int], kind: str,
+                     queue_delay_s: float = 0.0) -> ScenarioRecord:
         before = self.n_nodes
-        plan = self.engine.plan_shrink(self.state, release_nodes=victims)
+        plan = self.engine.plan_shrink(self.state, release_nodes=victims,
+                                       queue_delay_s=queue_delay_s)
         outcome = self.engine.execute(plan)
         assert plan.shrink is not None
         apply_shrink(self.state, plan.shrink)
@@ -440,12 +474,13 @@ class _SimCluster:
             step=-1, kind=kind, mechanism=plan.shrink.kind.value,
             nodes_before=before, nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
-            bytes_moved=outcome.bytes_moved,
+            bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
         )
 
 
 def dispatch_event(
-    cluster, kind: str, *, nodes: tuple[int, ...] = (), target_nodes: int = 0
+    cluster, kind: str, *, nodes: tuple[int, ...] = (), target_nodes: int = 0,
+    queue_delay_s: float = 0.0,
 ) -> Iterable[ScenarioRecord]:
     """THE event-to-action mapping, shared by every executor.
 
@@ -455,22 +490,25 @@ def dispatch_event(
     and :class:`repro.elastic.ElasticTrainer`)."""
     if kind == GROW:
         if target_nodes > cluster.n_nodes:
-            yield cluster.expand(target_nodes)
+            yield cluster.expand(target_nodes, queue_delay_s=queue_delay_s)
     elif kind == SHRINK:
         victims = [n for n in nodes if n in cluster.state.nodes_in_use()]
         if victims:
-            yield cluster.shrink_nodes(victims, kind="shrink")
+            yield cluster.shrink_nodes(victims, kind="shrink",
+                                       queue_delay_s=queue_delay_s)
     elif kind in (FAIL, STRAGGLER):
         for n in nodes:
             if n in cluster.state.nodes_in_use():
-                yield cluster.shrink_nodes([n], kind=kind)
+                yield cluster.shrink_nodes([n], kind=kind,
+                                           queue_delay_s=queue_delay_s)
     else:
         raise ValueError(f"unknown scenario event kind {kind!r}")
 
 
 def _dispatch(cluster, ev: ScenarioEvent) -> Iterable[ScenarioRecord]:
     return dispatch_event(cluster, ev.kind, nodes=ev.nodes,
-                          target_nodes=ev.target_nodes)
+                          target_nodes=ev.target_nodes,
+                          queue_delay_s=ev.queue_delay_s)
 
 
 class RuntimeAdapter:
@@ -494,19 +532,23 @@ class RuntimeAdapter:
             step=-1, kind=rec.kind, mechanism=rec.mechanism,
             nodes_before=rec.nodes_before, nodes_after=rec.nodes_after,
             est_wall_s=rec.est_wall_s, downtime_s=rec.downtime_s,
-            bytes_moved=rec.bytes_moved,
+            bytes_moved=rec.bytes_moved, queued_s=rec.queued_s,
         )
 
-    def expand(self, target_nodes: int) -> ScenarioRecord:
-        return self._convert(self._rt.expand(target_nodes))
+    def expand(self, target_nodes: int,
+               queue_delay_s: float = 0.0) -> ScenarioRecord:
+        return self._convert(
+            self._rt.expand(target_nodes, queue_delay_s=queue_delay_s))
 
-    def shrink_nodes(self, victims: list[int], kind: str) -> ScenarioRecord:
+    def shrink_nodes(self, victims: list[int], kind: str,
+                     queue_delay_s: float = 0.0) -> ScenarioRecord:
         if kind == FAIL and len(victims) == 1:
-            rec = self._rt.fail_node(victims[0])
+            rec = self._rt.fail_node(victims[0], queue_delay_s=queue_delay_s)
         elif kind == STRAGGLER and len(victims) == 1:
-            rec = self._rt.drop_straggler(victims[0])
+            rec = self._rt.drop_straggler(victims[0],
+                                          queue_delay_s=queue_delay_s)
         else:
-            rec = self._rt.shrink_nodes(victims)
+            rec = self._rt.shrink_nodes(victims, queue_delay_s=queue_delay_s)
         return self._convert(rec)
 
 

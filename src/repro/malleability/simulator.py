@@ -51,6 +51,7 @@ class ExpansionReport:
     timeline: Timeline = field(default_factory=Timeline, repr=False, compare=False)
     t_redist: float = 0.0
     bytes_moved: int = 0
+    t_queue: float = 0.0
 
     def as_row(self) -> dict:
         """Report as a flat dict row (benchmark CSV shape)."""
@@ -59,6 +60,7 @@ class ExpansionReport:
             "method": self.method.value,
             "ns": self.ns,
             "nt": self.nt,
+            "queue_s": round(self.t_queue, 6),
             "spawn_s": round(self.t_spawn, 6),
             "sync_s": round(self.t_sync, 6),
             "connect_s": round(self.t_connect, 6),
@@ -88,7 +90,7 @@ class ShrinkReport:
 
 def simulate_expansion(
     plan: SpawnPlan, cm: CostModel, asynchronous: bool = False,
-    bytes_total: int = 0,
+    bytes_total: int = 0, queue_delay_s: float = 0.0,
 ) -> ExpansionReport:
     """Charge one expansion plan and report its per-phase breakdown.
 
@@ -99,11 +101,14 @@ def simulate_expansion(
             the full wall time.
         bytes_total: stage-3 data volume to charge as a REDISTRIBUTION
             event (0 skips the event).
+        queue_delay_s: RMS arbitration wait charged as a leading QUEUE
+            event (0 skips the event).
     Returns:
         An :class:`ExpansionReport` whose every field is a read of the
         charged :class:`~repro.core.Timeline`.
     """
-    tl = expansion_timeline(plan, cm, bytes_total=bytes_total)
+    tl = expansion_timeline(plan, cm, bytes_total=bytes_total,
+                            queue_delay_s=queue_delay_s)
     return ExpansionReport(
         strategy=plan.strategy,
         method=plan.method,
@@ -121,6 +126,7 @@ def simulate_expansion(
         timeline=tl,
         t_redist=tl.span(Stage.REDISTRIBUTION),
         bytes_moved=tl.bytes_moved,
+        t_queue=tl.queued_s,
     )
 
 

@@ -5,7 +5,7 @@ The facade is purely functional; the training and serving step builders
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 from repro.parallel.sharding import constrain
 
 from .common import ModelConfig, ParamBuilder
-from .layers import rmsnorm, init_rmsnorm
 
 
 # ---------------------------------------------------------------------------

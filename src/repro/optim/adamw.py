@@ -19,7 +19,9 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params: Any) -> AdamWState:
-    zeros = lambda p: jnp.zeros_like(p)
+    def zeros(p):
+        return jnp.zeros_like(p)
+
     return AdamWState(
         step=jnp.zeros((), jnp.int32),
         mu=jax.tree.map(zeros, params),

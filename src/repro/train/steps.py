@@ -7,7 +7,7 @@ both for live execution and for the ``.lower().compile()`` dry-run.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

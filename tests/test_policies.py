@@ -1,0 +1,410 @@
+"""RMS policy engine tests: policy-generated traces, multi-job
+arbitration, QUEUE-stage charging, and pinned sim == live parity for
+every registered policy scenario (per-event downtime, bytes, AND queued
+seconds through both executors)."""
+import os
+import subprocess
+import sys
+import textwrap
+from dataclasses import replace
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import ReconfigEngine, Stage
+from repro.malleability import (
+    BackfillPolicy,
+    ChurnPolicy,
+    JobSpec,
+    PreemptionPolicy,
+    PriorityArrival,
+    RigidArrival,
+    RmsPolicy,
+    arbitrate_jobs,
+    churn_trace,
+    get_scenario,
+    run_multijob_sim,
+    run_scenario_live,
+    run_scenario_sim,
+    steady_cycle,
+)
+from repro.malleability.policies import POLICY_SCENARIO_NAMES, ClusterState
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "benchmarks"))
+from paper_tables import policy_sweep  # noqa: E402
+
+
+def _key(rec):
+    return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
+            rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved,
+            rec.queued_s)
+
+
+def _one_job_cluster(min_nodes=1, max_nodes=8, total=8, **kw):
+    return ClusterState(
+        total_nodes=total,
+        jobs=(JobSpec("train", min_nodes=min_nodes, max_nodes=max_nodes, **kw),),
+    )
+
+
+class TestPolicyScenarioParity:
+    """Acceptance: every policy-generated scenario runs through BOTH
+    executors with identical per-event numbers — downtime, bytes, and
+    queued seconds included (exact float equality; one engine timeline)."""
+
+    @pytest.mark.parametrize("name", POLICY_SCENARIO_NAMES)
+    def test_sim_equals_live(self, name):
+        sc = get_scenario(name)
+        sim = run_scenario_sim(sc)
+        live = run_scenario_live(sc)
+        assert len(sim) >= 2, "policy trace must actually reconfigure"
+        assert [_key(r) for r in sim] == [_key(r) for r in live]
+
+    @pytest.mark.parametrize("name", POLICY_SCENARIO_NAMES)
+    def test_async_parity_too(self, name):
+        sc = get_scenario(name)
+        engine = sc.default_engine()
+        engine.asynchronous = True
+        sim = run_scenario_sim(sc, engine=engine)
+        engine2 = sc.default_engine()
+        engine2.asynchronous = True
+        live = run_scenario_live(sc, engine=engine2)
+        assert [_key(r) for r in sim] == [_key(r) for r in live]
+
+
+class TestClusterState:
+    def test_overcommit_raises(self):
+        with pytest.raises(ValueError):
+            ClusterState(total_nodes=4, jobs=(
+                JobSpec("a", min_nodes=3, max_nodes=4),
+                JobSpec("b", min_nodes=3, max_nodes=4),
+            ))
+
+    def test_duplicate_job_names_raise(self):
+        with pytest.raises(ValueError):
+            ClusterState(total_nodes=8, jobs=(JobSpec("a"), JobSpec("a")))
+
+    def test_from_pool_duck_types(self):
+        cluster = ClusterState.from_pool(SimpleNamespace(n_nodes=5),
+                                         jobs=(JobSpec("t"),))
+        assert cluster.total_nodes == 5
+        assert cluster.idle_nodes() == 4
+
+    def test_clamp_grant_bounds(self):
+        cluster = _one_job_cluster(min_nodes=2, max_nodes=32)
+        spec = cluster.spec("train")
+        assert cluster.clamp_grant(spec, 10 ** 9) == 8   # pool-capped
+        assert cluster.clamp_grant(spec, 0) == 2         # floor
+        assert cluster.clamp_grant(spec, 5) == 5
+
+    def test_policies_satisfy_the_protocol(self):
+        for policy in (BackfillPolicy(), PreemptionPolicy(), ChurnPolicy()):
+            assert isinstance(policy, RmsPolicy)
+
+
+class TestBackfillPolicy:
+    def test_grant_exceeding_pool_clamps_not_crashes(self):
+        """A job whose max_nodes dwarfs the pool receives the pool."""
+        cluster = _one_job_cluster(min_nodes=2, max_nodes=32)
+        sc = BackfillPolicy(horizon=10).generate(cluster).scenario()
+        assert sc.max_nodes() == 8          # never 32
+        recs = run_scenario_sim(sc)         # and the trace executes
+        assert recs[0].nodes_after == 8
+
+    def test_queue_pressure_reclaims_and_grant_returns(self):
+        cluster = _one_job_cluster(min_nodes=2, max_nodes=8)
+        policy = BackfillPolicy(
+            arrivals=(RigidArrival(step=6, nodes=4, duration=6),), horizon=18)
+        recs = run_scenario_sim(policy.generate(cluster).scenario())
+        kinds = [(r.step, r.kind, r.nodes_after) for r in recs]
+        assert kinds == [
+            (2, "expand", 8),     # backfill grant: idle pool -> the job
+            (6, "shrink", 4),     # rigid arrival reclaims down
+            (12, "expand", 8),    # rigid job drains, grant returns
+        ]
+
+    def test_rigid_job_too_big_waits_forever(self):
+        """An arrival that can never fit above the floor never starts —
+        the malleable job keeps the whole pool."""
+        cluster = _one_job_cluster(min_nodes=4, max_nodes=8)
+        policy = BackfillPolicy(
+            arrivals=(RigidArrival(step=4, nodes=6, duration=2),), horizon=12)
+        recs = run_scenario_sim(policy.generate(cluster).scenario())
+        assert [r.kind for r in recs] == ["expand"]
+        assert recs[0].nodes_after == 8
+
+
+class TestPreemptionPolicy:
+    def test_mid_reconfiguration_preemption_composes(self):
+        """The registered trace's second preemption lands on the regrow
+        step: the forced shrink queues behind the in-flight grow's exact
+        charged wall instead of cancelling it."""
+        recs = run_scenario_sim(get_scenario("priority-preempt"))
+        colliding = [r for r in recs if r.step == 12]
+        assert [r.kind for r in colliding] == ["expand", "shrink"]
+        grow, shrink = colliding
+        assert grow.queued_s == 0.0
+        assert shrink.queued_s == grow.est_wall_s          # exact, same engine
+        # QUEUE raises makespan, never downtime
+        assert shrink.est_wall_s == shrink.downtime_s + shrink.queued_s
+
+    def test_preemptor_cannot_overcommit_the_pool(self):
+        """A preemptor demanding the whole pool is trimmed to what the
+        victim's guaranteed floor leaves — the ledger never models more
+        nodes in use than the pool holds."""
+        cluster = _one_job_cluster(min_nodes=2, max_nodes=8)
+        policy = PreemptionPolicy(
+            arrivals=(PriorityArrival(step=4, nodes=8, duration=4),),
+            horizon=12)
+        recs = run_scenario_sim(policy.generate(cluster).scenario())
+        # victim shrinks exactly to its floor (preemptor got 8 - 2 = 6)
+        floor = [r for r in recs if r.step == 4 and r.kind == "shrink"]
+        assert floor and floor[0].nodes_after == 2
+        # and regrows to the full pool when the preemptor leaves
+        assert recs[-1].nodes_after == 8
+
+    def test_arrival_outside_window_raises(self):
+        cluster = _one_job_cluster()
+        with pytest.raises(ValueError, match="outside the scheduled window"):
+            PreemptionPolicy(
+                arrivals=(PriorityArrival(step=1, nodes=2, duration=2),),
+                horizon=10).generate(cluster)
+        with pytest.raises(ValueError, match="outside the scheduled window"):
+            BackfillPolicy(
+                arrivals=(RigidArrival(step=40, nodes=2, duration=2),),
+                horizon=10).generate(cluster)
+
+    def test_low_priority_arrival_cannot_preempt(self):
+        cluster = ClusterState(
+            total_nodes=8,
+            jobs=(JobSpec("train", min_nodes=1, max_nodes=8, priority=50),),
+        )
+        policy = PreemptionPolicy(
+            arrivals=(PriorityArrival(step=4, nodes=6, duration=4, priority=10),),
+            horizon=10)
+        recs = run_scenario_sim(policy.generate(cluster).scenario())
+        assert all(r.kind == "expand" for r in recs)       # never shrunk
+
+
+class TestChurnPolicy:
+    def test_deterministic_under_fixed_seed(self):
+        t1 = ChurnPolicy(decisions=50, seed=3).generate(_one_job_cluster())
+        t2 = ChurnPolicy(decisions=50, seed=3).generate(_one_job_cluster())
+        assert t1.events == t2.events
+        t3 = ChurnPolicy(decisions=50, seed=4).generate(_one_job_cluster())
+        assert t1.events != t3.events
+
+    def test_registered_trace_is_reproducible(self):
+        rebuilt = churn_trace(name="churn-rebuild")
+        assert rebuilt.events == get_scenario("churn-200").events
+
+    def test_every_decision_resizes_within_bounds(self):
+        sc = get_scenario("churn-200")
+        assert len(sc.events) == 200
+        recs = run_scenario_sim(sc)
+        assert len(recs) == 200                  # no dropped no-ops
+        for r in recs:
+            assert r.nodes_before != r.nodes_after
+            assert 1 <= r.nodes_after <= 8
+
+    def test_pinned_job_has_no_churn_headroom(self):
+        cluster = ClusterState(total_nodes=1, jobs=(JobSpec("t", 1, 1),))
+        with pytest.raises(ValueError):
+            ChurnPolicy(decisions=3).generate(cluster)
+
+
+class TestMultiJobArbitration:
+    def _jobs(self):
+        return [
+            ("a", steady_cycle(name="arb-a", low=2, high=6, cycles=2, period=4)),
+            ("b", steady_cycle(name="arb-b", low=2, high=6, cycles=2, period=4)),
+        ]
+
+    def test_pool_capacity_never_exceeded(self):
+        outcome = arbitrate_jobs(self._jobs(), pool_nodes=8)
+        # replay per-step settled allocations across jobs
+        allocs = {n: sc.initial_nodes for n, sc in outcome.scenarios.items()}
+        steps = sorted({e.step for sc in outcome.scenarios.values()
+                        for e in sc.events})
+        for step in steps:
+            for name, sc in outcome.scenarios.items():
+                for ev in (e for e in sc.events if e.step == step):
+                    if ev.kind == "grow":
+                        allocs[name] = ev.target_nodes
+                    else:
+                        allocs[name] -= len(ev.nodes)
+            assert sum(allocs.values()) <= 8, (step, allocs)
+
+    def test_interference_queues_and_degrades_overlap(self):
+        outcome = arbitrate_jobs(self._jobs(), pool_nodes=8)
+        assert set(outcome.interfered) == {"a", "b"}
+        b = outcome.job("b")
+        assert b.deferred_events >= 1            # grow waited for capacity
+        assert b.queued_events >= 1              # and queued behind A's resize
+        assert all(j.scenario.contention == 1.25 for j in outcome.jobs)
+        queued = [e for e in b.scenario.events if e.queue_delay_s > 0]
+        assert queued, "interference must surface as queued RESIZE events"
+
+    def test_degraded_overlap_raises_async_downtime(self):
+        sc = get_scenario("two-job-interference")
+        assert sc.contention == 1.25
+        undegraded = replace(sc, name=sc.name + "-nc", contention=0.0)
+        e1 = sc.default_engine()
+        e1.asynchronous = True
+        e2 = undegraded.default_engine()
+        e2.asynchronous = True
+        d_deg = sum(r.downtime_s for r in run_scenario_sim(sc, engine=e1))
+        d_base = sum(r.downtime_s for r in run_scenario_sim(undegraded, engine=e2))
+        assert d_deg > d_base
+
+    def test_preexisting_queue_delays_survive_arbitration(self):
+        """A trace that already carries a QUEUE charge (e.g. a composed
+        preemption) keeps it; arbitration adds cross-job waits on top."""
+        cluster = ClusterState(
+            total_nodes=8,
+            jobs=(JobSpec("train", min_nodes=1, max_nodes=6, priority=0,
+                          initial_nodes=2),),
+        )
+        preempt = PreemptionPolicy(
+            arrivals=(PriorityArrival(step=6, nodes=4, duration=6),
+                      PriorityArrival(step=12, nodes=6, duration=6)),
+            horizon=22,
+        ).generate(cluster).scenario("train", name="arb-preempt")
+        baked = {(e.step, e.kind): e.queue_delay_s for e in preempt.events
+                 if e.queue_delay_s > 0}
+        assert baked, "precondition: the input trace carries a QUEUE charge"
+        outcome = arbitrate_jobs([("p", preempt)], pool_nodes=8)
+        out = {(e.step, e.kind): e.queue_delay_s
+               for e in outcome.job("p").scenario.events}
+        for key, delay in baked.items():
+            assert out[key] >= delay
+
+    def test_overcommitted_start_raises(self):
+        jobs = [("a", steady_cycle(name="oc-a", low=5, high=6)),
+                ("b", steady_cycle(name="oc-b", low=5, high=6))]
+        with pytest.raises(ValueError):
+            arbitrate_jobs(jobs, pool_nodes=8)
+
+    def test_run_multijob_sim_returns_both_jobs(self):
+        records, outcome = run_multijob_sim(self._jobs(), pool_nodes=8)
+        assert set(records) == {"a", "b"}
+        assert all(recs for recs in records.values())
+        assert outcome.pool_nodes == 8
+
+
+class TestQueueStage:
+    """Engine-level semantics of the QUEUE timeline event."""
+
+    def test_queue_event_leads_the_timeline(self):
+        engine = ReconfigEngine()
+        plan = engine.plan_expand(1, 8, 1, queue_delay_s=0.5)
+        tl = engine.timeline(plan)
+        assert tl.events[0].stage is Stage.QUEUE
+        assert tl.queued_s == 0.5
+
+    def test_queue_counts_toward_makespan_never_downtime(self):
+        engine = ReconfigEngine()
+        base = engine.timeline(engine.plan_expand(1, 8, 1))
+        queued = engine.timeline(engine.plan_expand(1, 8, 1, queue_delay_s=0.5))
+        assert queued.total == base.total + 0.5
+        assert queued.downtime() == base.downtime()
+        assert queued.downtime(asynchronous=True) == base.downtime(asynchronous=True)
+
+    def test_shrink_queue_charged_too(self):
+        from repro.core import ClusterState as CoreClusterState
+
+        engine = ReconfigEngine()
+        state = CoreClusterState()
+        state.add_world([0], [1], is_initial=True)
+        state.add_world([1], [1])
+        plan = engine.plan_shrink(state, release_nodes=[1], queue_delay_s=0.25)
+        tl = engine.timeline(plan)
+        assert tl.events[0].stage is Stage.QUEUE
+        assert tl.downtime() == tl.total - 0.25
+
+
+class TestPolicySweep:
+    """Acceptance: the benchmark policy_sweep table covers every
+    registered strategy x every registered policy trace."""
+
+    def test_full_strategy_by_policy_coverage(self):
+        from repro.core import registered_strategies
+
+        rows = policy_sweep()
+        got = {(r["policy"], r["strategy"]) for r in rows}
+        want = {(trace, spec.key)
+                for trace in POLICY_SCENARIO_NAMES
+                for spec in registered_strategies()}
+        assert want <= got
+
+    def test_makespan_decomposes_into_downtime_plus_queue(self):
+        for r in policy_sweep():
+            assert r["makespan_s"] == pytest.approx(
+                r["downtime_s"] + r["queued_s"])
+            assert r["events"] >= 2
+
+
+class TestFromPolicy:
+    def test_rms_script_matches_generated_scenario(self):
+        from repro.elastic.rms import SimulatedRMS
+
+        cluster = _one_job_cluster()
+        policy = ChurnPolicy(decisions=5, seed=1)
+        rms = SimulatedRMS.from_policy(policy, cluster)
+        sc = policy.generate(_one_job_cluster()).scenario()
+        got = [(e.step, e.kind.value, e.nodes, e.target_nodes, e.queue_delay_s)
+               for e in rms.events_until(10 ** 9)]
+        want = [(e.step, e.kind, e.nodes, e.target_nodes, e.queue_delay_s)
+                for e in sc.events]
+        assert got == want
+
+
+TRAINER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.configs import smoke_config
+    from repro.elastic import ElasticTrainer
+    from repro.malleability import get_scenario, run_scenario_sim
+    from repro.models import Model
+
+    model = Model(smoke_config("stablelm_3b"))
+    # churn-200 settles on sizes that don't divide any small batch, so it
+    # stays bookkeeping-verified (run_scenario_live); the other policy
+    # traces settle on {2, 4, 6, 8} and run the full training loop.
+    for name in ("backfill-pressure", "priority-preempt",
+                 "two-job-interference"):
+        sc = get_scenario(name)
+        sim = run_scenario_sim(sc)
+        tr = ElasticTrainer.from_scenario(model, sc, batch=24, seq=16)
+        tr.run(sc.steps)
+        live = tr.runtime.history
+        assert len(live) == len(sim), (name, len(live), len(sim))
+        for s, l in zip(sim, live):
+            assert l.downtime_s == s.downtime_s, (name, s, l)
+            assert l.est_wall_s == s.est_wall_s, (name, s, l)
+            assert l.queued_s == s.queued_s, (name, s, l)
+            assert l.bytes_moved == s.bytes_moved, (name, s, l)
+            assert (l.nodes_before, l.nodes_after) == (
+                s.nodes_before, s.nodes_after), (name, s, l)
+        losses = np.array(tr.losses())
+        assert np.isfinite(losses).all(), name
+        print("POLICY_TRAINER_OK", name, len(live), "reconfigs")
+""")
+
+
+@pytest.mark.slow
+def test_trainer_loop_matches_simulator_on_policy_traces():
+    """Full ElasticTrainer loop on the policy scenarios whose settled
+    sizes shard a real batch: live history must carry exactly the
+    simulator's timeline numbers, queued seconds included."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", TRAINER_SCRIPT], capture_output=True, text=True,
+        timeout=1200, env=env,
+    )
+    assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
+    for name in ("backfill-pressure", "priority-preempt",
+                 "two-job-interference"):
+        assert f"POLICY_TRAINER_OK {name}" in proc.stdout
