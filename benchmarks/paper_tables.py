@@ -234,6 +234,42 @@ def scenario_traces(scenarios=None) -> list[dict]:
                 "time_s": round(rec.est_wall_s, 6),
                 "downtime_s": round(rec.downtime_s, 6),
                 "bytes_moved": rec.bytes_moved,
+                "bytes_stayed": rec.bytes_stayed,
+            })
+    return rows
+
+
+# ---------------------------------------- heterogeneous strategy traces --
+HETERO_TRACES = ("hetero-nasp", "hetero-redist")
+
+
+def table_hetero_strategies(traces: tuple[str, ...] = HETERO_TRACES) -> list[dict]:
+    """Diffusive vs classic strategies on the uneven-width traces (§5.3).
+
+    Every vector-capable registered strategy replays each heterogeneous
+    trace through the simulator (hypercube is homogeneous-only and
+    skipped); the diffusive rows are the paper's point — log-depth
+    spawn rounds beat the serial classics as the uneven pool grows,
+    while TS shrinks stay free of spawning for every strategy.  The
+    ``hetero-redist`` rows additionally carry per-link stage-3 bytes
+    (stayed charged on the local link, moved on the cross link).
+    """
+    rows = []
+    for name in traces:
+        sc = get_scenario(name)
+        for spec in registered_strategies():
+            if spec.homogeneous_only and sc.heterogeneous:
+                continue
+            recs = run_scenario_sim(
+                sc, engine=sc.default_engine(strategy=spec.key))
+            rows.append({
+                "scenario": name,
+                "strategy": spec.key,
+                "events": len(recs),
+                "makespan_s": round(sum(r.est_wall_s for r in recs), 6),
+                "downtime_s": round(sum(r.downtime_s for r in recs), 6),
+                "bytes_moved": sum(r.bytes_moved for r in recs),
+                "bytes_stayed": sum(r.bytes_stayed for r in recs),
             })
     return rows
 

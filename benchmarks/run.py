@@ -7,13 +7,20 @@ reported numbers and, when dry-run artifacts exist, the roofline table.
 
 ``--smoke`` shrinks the expensive grids to a CI-sized subset (tiny node
 lists, one model config) so the whole run finishes in seconds; the
-scenario and policy tables always run in full (they are cheap, and the
-policy coverage is the point of the uploaded artifact).  The CI
+scenario, hetero, and policy tables always run in full (they are cheap,
+and their coverage is the point of the uploaded artifact).  The CI
 benchmark job uploads stdout as a workflow artifact.
+
+``--json`` emits the same rows as a machine-readable document — this is
+the bench-regression gate's interchange format: ``BENCH_baseline.json``
+at the repo root is a committed ``--smoke --json`` run, and
+``scripts/check_bench.py`` fails CI when any row's est_wall drifts more
+than 10% from it.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -34,6 +41,7 @@ from paper_tables import (  # noqa: E402
     policy_sweep,
     scenario_traces,
     table2_trace,
+    table_hetero_strategies,
     table_redistribution,
 )
 
@@ -42,70 +50,113 @@ SMOKE_NASP_NODES = [1, 2, 4]
 SMOKE_REDIST_ARCHS = ("xlstm_125m",)
 
 
+def collect_rows(smoke: bool = False) -> list[dict]:
+    """Every table as flat ``{"name", "us_per_call", "derived"}`` rows."""
+    mn5 = SMOKE_MN5_NODES if smoke else MN5_NODES
+    nasp = SMOKE_NASP_NODES if smoke else NASP_NODES
+    archs = SMOKE_REDIST_ARCHS if smoke else REDIST_ARCHS
+
+    rows: list[dict] = []
+
+    def add(name: str, us: float, derived: str) -> None:
+        rows.append({"name": name, "us_per_call": round(us), "derived": derived})
+
+    for r in fig4a_homogeneous_expansion(mn5):
+        add(f"fig4a/{r['method']}/I{r['I']}-N{r['N']}",
+            r["time_s"] * 1e6, f"{r['vs_merge']}")
+
+    for r in fig4b_homogeneous_shrink(mn5):
+        add(f"fig4b/{r['method']}/I{r['I']}-N{r['N']}",
+            r["time_s"] * 1e6, f"{r['speedup_ts']}")
+
+    for r in fig5_preferred_grid(mn5):
+        add(f"fig5/I{r['I']}-N{r['N']}", r["time_s"] * 1e6, f"{r['best']}")
+
+    for r in fig6_heterogeneous(nasp):
+        derived = r.get("vs_merge", r.get("speedup_ts", ""))
+        add(f"fig{r['figure']}/{r['method']}/I{r['I']}-N{r['N']}",
+            r["time_s"] * 1e6, f"{derived}")
+
+    for r in table2_trace():
+        add(f"table2/s{r['s']}", 0,
+            f"t={r['t']};g={r['g']};lam={r['lambda']};T={r['T']};G={r['G']}")
+
+    for r in fig1_hypercube_rounds():
+        add(f"fig1/C{r['C']}-I{r['I']}-N{r['N']}", 0,
+            f"rounds={r['rounds']};groups={r['groups']}")
+
+    for r in scenario_traces():
+        add(f"scenario/{r['scenario']}/s{r['step']}-{r['kind']}",
+            r["time_s"] * 1e6,
+            f"downtime_us={r['downtime_s']*1e6:.0f};{r['mechanism']};"
+            f"{r['nodes']};bytes={r['bytes_moved']};"
+            f"stayed={r['bytes_stayed']}")
+
+    for r in table_hetero_strategies():
+        add(f"hetero/{r['scenario']}/{r['strategy']}",
+            r["makespan_s"] * 1e6,
+            f"downtime_us={r['downtime_s']*1e6:.0f};events={r['events']};"
+            f"bytes={r['bytes_moved']};stayed={r['bytes_stayed']}")
+
+    for r in table_redistribution(archs):
+        add(f"redist/{r['arch']}/{r['bytes_model']}/I{r['I']}-N{r['N']}",
+            r["time_s"] * 1e6,
+            f"bytes={r['bytes_moved']};redist_share={r['redist_share']}")
+
+    for r in overlap_sweep(archs[0] if smoke else "stablelm_3b"):
+        add(f"overlap/{r['arch']}/f{r['overlap_fraction']}-c{r['contention']}",
+            r["downtime_s"] * 1e6,
+            f"wall_us={r['est_wall_s']*1e6:.0f};hidden={r['hidden_share']}")
+
+    for r in policy_sweep():
+        add(f"policy/{r['policy']}/{r['strategy']}",
+            r["makespan_s"] * 1e6,
+            f"downtime_us={r['downtime_s']*1e6:.0f};"
+            f"queued_us={r['queued_s']*1e6:.0f};events={r['events']};"
+            f"bytes={r['bytes_moved']}")
+
+    return rows
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--smoke", action="store_true",
         help="tiny grids for CI: same tables, seconds instead of minutes",
     )
+    ap.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="emit rows + envelopes as JSON (the bench-regression format)",
+    )
     args = ap.parse_args(argv)
     mn5 = SMOKE_MN5_NODES if args.smoke else MN5_NODES
     nasp = SMOKE_NASP_NODES if args.smoke else NASP_NODES
-    archs = SMOKE_REDIST_ARCHS if args.smoke else REDIST_ARCHS
+
+    rows = collect_rows(smoke=args.smoke)
+    envelopes = paper_envelopes(mn5, nasp)
+
+    if args.as_json:
+        print(json.dumps(
+            {
+                "smoke": args.smoke,
+                "rows": rows,
+                "envelopes": [
+                    {"metric": r["metric"], "ours": r["ours"],
+                     "paper": r["paper"]}
+                    for r in envelopes
+                ],
+            },
+            indent=1,
+        ))
+        return
 
     print("name,us_per_call,derived")
-
-    for r in fig4a_homogeneous_expansion(mn5):
-        name = f"fig4a/{r['method']}/I{r['I']}-N{r['N']}"
-        print(f"{name},{r['time_s']*1e6:.0f},{r['vs_merge']}")
-
-    for r in fig4b_homogeneous_shrink(mn5):
-        name = f"fig4b/{r['method']}/I{r['I']}-N{r['N']}"
-        print(f"{name},{r['time_s']*1e6:.0f},{r['speedup_ts']}")
-
-    for r in fig5_preferred_grid(mn5):
-        name = f"fig5/I{r['I']}-N{r['N']}"
-        print(f"{name},{r['time_s']*1e6:.0f},{r['best']}")
-
-    for r in fig6_heterogeneous(nasp):
-        name = f"fig{r['figure']}/{r['method']}/I{r['I']}-N{r['N']}"
-        derived = r.get("vs_merge", r.get("speedup_ts", ""))
-        print(f"{name},{r['time_s']*1e6:.0f},{derived}")
-
-    for r in table2_trace():
-        name = f"table2/s{r['s']}"
-        print(f"{name},0,t={r['t']};g={r['g']};lam={r['lambda']};T={r['T']};G={r['G']}")
-
-    for r in fig1_hypercube_rounds():
-        name = f"fig1/C{r['C']}-I{r['I']}-N{r['N']}"
-        print(f"{name},0,rounds={r['rounds']};groups={r['groups']}")
-
-    for r in scenario_traces():
-        name = f"scenario/{r['scenario']}/s{r['step']}-{r['kind']}"
-        print(f"{name},{r['time_s']*1e6:.0f},"
-              f"downtime_us={r['downtime_s']*1e6:.0f};{r['mechanism']};{r['nodes']};"
-              f"bytes={r['bytes_moved']}")
-
-    for r in table_redistribution(archs):
-        name = f"redist/{r['arch']}/{r['bytes_model']}/I{r['I']}-N{r['N']}"
-        print(f"{name},{r['time_s']*1e6:.0f},"
-              f"bytes={r['bytes_moved']};redist_share={r['redist_share']}")
-
-    for r in overlap_sweep(archs[0] if args.smoke else "stablelm_3b"):
-        name = f"overlap/{r['arch']}/f{r['overlap_fraction']}-c{r['contention']}"
-        print(f"{name},{r['downtime_s']*1e6:.0f},"
-              f"wall_us={r['est_wall_s']*1e6:.0f};hidden={r['hidden_share']}")
-
-    for r in policy_sweep():
-        name = f"policy/{r['policy']}/{r['strategy']}"
-        print(f"{name},{r['makespan_s']*1e6:.0f},"
-              f"downtime_us={r['downtime_s']*1e6:.0f};"
-              f"queued_us={r['queued_s']*1e6:.0f};events={r['events']};"
-              f"bytes={r['bytes_moved']}")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
 
     print()
     print("=== paper envelope check (simulator vs paper §5) ===")
-    for r in paper_envelopes(mn5, nasp):
+    for r in envelopes:
         print(f"{r['metric']}: ours={r['ours']} paper={r['paper']}")
 
     # roofline table if the dry-run has produced artifacts

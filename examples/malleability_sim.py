@@ -5,10 +5,11 @@ profile — candidates come from the engine's strategy registry — shows
 the event timeline for one expansion (bytes-moved included), and can
 replay any registered declarative scenario.
 
-Doubles as a smoke check: every replay of a homogeneous scenario (and
-the final sweep in the default mode) runs the trace through BOTH the
-simulator and the live bookkeeping runtime and exits non-zero if any
-per-event wall time, downtime, or bytes-moved number disagrees.
+Doubles as a smoke check: every replay (and the final sweep in the
+default mode) runs the trace through BOTH the simulator and the live
+bookkeeping runtime — heterogeneous uneven-width pools included — and
+exits non-zero if any per-event wall time, downtime, queue, or
+per-link bytes number disagrees.
 
     PYTHONPATH=src python examples/malleability_sim.py [--profile mn5|nasp]
     PYTHONPATH=src python examples/malleability_sim.py --scenario burst-arrival
@@ -91,22 +92,21 @@ def show_timeline(cm, C):
 def _record_key(r):
     return (r.step, r.kind, r.mechanism, r.nodes_before,
             r.nodes_after, r.est_wall_s, r.downtime_s, r.bytes_moved,
-            r.queued_s)
+            r.queued_s, r.bytes_stayed)
 
 
 def check_sim_live_agreement(scenarios, sim_records=None) -> int:
-    """Run each homogeneous scenario through both executors; report diffs.
+    """Run every scenario through both executors; report diffs.
 
-    ``sim_records`` optionally maps scenario name -> already-computed
-    simulator records, so callers that just simmed a trace don't pay for
-    a rerun.
+    Heterogeneous traces included: the live pool partitions with the
+    scenario's uneven width vector.  ``sim_records`` optionally maps
+    scenario name -> already-computed simulator records, so callers that
+    just simmed a trace don't pay for a rerun.
     """
     events = 0
     bad = 0
     checked = 0
     for sc in scenarios:
-        if sc.sim_only:
-            continue
         checked += 1
         sim = [_record_key(r) for r in
                (sim_records or {}).get(sc.name) or run_scenario_sim(sc)]
@@ -147,8 +147,7 @@ def replay_scenario(name):
         moved += rec.bytes_moved
     print(f"  cumulative reconfiguration {total*1e3:.2f} ms, "
           f"downtime {down*1e3:.2f} ms, {moved/1e9:.2f} GB moved")
-    if not sc.sim_only:
-        sys.exit(check_sim_live_agreement([sc], sim_records={sc.name: records}))
+    sys.exit(check_sim_live_agreement([sc], sim_records={sc.name: records}))
 
 
 def main():

@@ -1,0 +1,106 @@
+"""Bench-regression gate: compare a benchmark run against the baseline.
+
+Usage:
+    PYTHONPATH=src python benchmarks/run.py --smoke --json > current.json
+    python scripts/check_bench.py BENCH_baseline.json current.json
+
+Both files are ``benchmarks/run.py --json`` documents.  The gate fails
+(exit 1) when, for any table row present in the baseline:
+
+* the row is missing from the current run (a table silently shrank), or
+* its ``us_per_call`` (simulated est_wall in microseconds) drifts more
+  than ``--tolerance`` (default 10%) in either direction, or
+* a zero-cost baseline row (count-only tables like fig1/table2) became
+  non-zero.
+
+Rows only present in the current run are reported as informational —
+new tables are how the benchmark surface grows — and the gate prints
+every drifting row before failing, so the artifact shows the whole
+regression at once.  Refresh the baseline deliberately (rerun the two
+commands above and commit) whenever a PR *intends* to move est_wall.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def index_rows(doc: dict) -> Dict[str, float]:
+    """Map row name -> us_per_call; duplicate names get ``#k`` suffixes.
+
+    Some tables legitimately repeat a name (e.g. one ``fail`` row per
+    victim node in a failure wave), so occurrences are disambiguated in
+    order: ``name``, ``name#1``, ``name#2`` ...
+    """
+    out: Dict[str, float] = {}
+    seen: Dict[str, int] = {}
+    for row in doc.get("rows", []):
+        name = str(row["name"])
+        k = seen.get(name, 0)
+        seen[name] = k + 1
+        out[name if k == 0 else f"{name}#{k}"] = float(row["us_per_call"])
+    return out
+
+
+def compare(
+    baseline: dict, current: dict, tolerance: float = 0.10
+) -> Tuple[List[str], List[str]]:
+    """Return ``(failures, infos)`` comparing two ``--json`` documents."""
+    base = index_rows(baseline)
+    cur = index_rows(current)
+    failures: List[str] = []
+    infos: List[str] = []
+    for name, b in base.items():
+        if name not in cur:
+            failures.append(f"MISSING  {name}: baseline {b:.0f} us, no current row")
+            continue
+        c = cur[name]
+        if b == 0.0:
+            if c != 0.0:
+                failures.append(f"NONZERO  {name}: baseline 0 us -> {c:.0f} us")
+            continue
+        drift = (c - b) / b
+        if abs(drift) > tolerance:
+            failures.append(
+                f"DRIFT    {name}: {b:.0f} us -> {c:.0f} us ({drift:+.1%})"
+            )
+    for name in cur:
+        if name not in base:
+            infos.append(f"NEW      {name}: {cur[name]:.0f} us (not in baseline)")
+    return failures, infos
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("current", help="fresh benchmarks/run.py --smoke --json output")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative est_wall drift per row (default 0.10)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    if baseline.get("smoke") != current.get("smoke"):
+        print("check_bench: baseline and current were produced with "
+              "different --smoke settings; comparing anyway", file=sys.stderr)
+
+    failures, infos = compare(baseline, current, tolerance=args.tolerance)
+    for line in infos:
+        print(line)
+    for line in failures:
+        print(line, file=sys.stderr)
+    n = len(index_rows(baseline))
+    if failures:
+        print(f"check_bench: {len(failures)}/{n} baseline rows FAILED "
+              f"(tolerance {args.tolerance:.0%})", file=sys.stderr)
+        return 1
+    print(f"check_bench: {n} baseline rows within {args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

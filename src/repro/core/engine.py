@@ -74,7 +74,9 @@ class TimelineEvent:
     ``overlap_fraction`` is the share of this event's work that can
     proceed under application compute when the job runs ASYNC (MaM's
     binary model is the special case 1.0 for spawn, 0.0 elsewhere).
-    ``bytes_moved`` is the stage-3 data volume this event accounts for
+    ``bytes_moved`` / ``bytes_stayed`` are the stage-3 data volumes this
+    event accounts for per link class — moved bytes cross devices over
+    the cross-group link, stayed bytes are re-validated locally —
     (non-zero only on REDISTRIBUTION events today).
     """
 
@@ -84,6 +86,7 @@ class TimelineEvent:
     label: str = ""
     overlap_fraction: float = 0.0
     bytes_moved: int = 0
+    bytes_stayed: int = 0
 
     @property
     def duration(self) -> float:
@@ -130,8 +133,13 @@ class Timeline:
 
     @property
     def bytes_moved(self) -> int:
-        """Total stage-3 bytes charged across all events."""
+        """Total stage-3 cross-link bytes charged across all events."""
         return sum(e.bytes_moved for e in self.events)
+
+    @property
+    def bytes_stayed(self) -> int:
+        """Total stage-3 local-link bytes charged across all events."""
+        return sum(e.bytes_stayed for e in self.events)
 
     @property
     def queued_s(self) -> float:
@@ -173,6 +181,7 @@ class Timeline:
                 "overlap_fraction": e.overlap_fraction,
                 "overlappable": e.overlappable,
                 "bytes_moved": e.bytes_moved,
+                "bytes_stayed": e.bytes_stayed,
             }
             for e in self.events
         ]
@@ -187,19 +196,20 @@ class _TimelineBuilder:
         self._contention = contention
 
     def add(self, stage: Stage, duration: float, label: str = "",
-            overlap_fraction: float = 0.0, bytes_moved: int = 0) -> None:
+            overlap_fraction: float = 0.0, bytes_moved: int = 0,
+            bytes_stayed: int = 0) -> None:
         if duration <= 0.0:
             return
         self._events.append(
             TimelineEvent(stage, self._t, self._t + duration, label,
-                          overlap_fraction, bytes_moved)
+                          overlap_fraction, bytes_moved, bytes_stayed)
         )
         self._t += duration
 
     def extend(self, events: Sequence[TimelineEvent]) -> None:
         for e in events:
             self.add(e.stage, e.duration, e.label, e.overlap_fraction,
-                     e.bytes_moved)
+                     e.bytes_moved, e.bytes_stayed)
 
     def build(self) -> Timeline:
         return Timeline(events=tuple(self._events), contention=self._contention)
@@ -369,10 +379,14 @@ class RedistributionSpec:
     elastic runtime turns this into a device permutation + resharding
     plan; the simulator charges bytes/bandwidth for it.
 
-    ``bytes_total`` is the resolved data volume for THIS event (from the
-    engine's bytes model, or ``bytes_per_rank * |nt - ns|`` as the
-    scalar fallback); it is what the timeline charges as a
-    REDISTRIBUTION event and what ``bytes_moved`` reports read.
+    ``bytes_total`` is the resolved cross-link data volume for THIS
+    event (from the engine's bytes model, or ``bytes_per_rank *
+    |nt - ns|`` as the scalar fallback); it is what the timeline charges
+    as a REDISTRIBUTION event and what ``bytes_moved`` reports read.
+    ``bytes_stayed`` is the local-link volume (shards a surviving device
+    already holds) when the bytes model reports the per-link split —
+    moved-bytes-only models leave it 0 and reproduce the aggregate
+    single-bandwidth charge exactly.
     """
 
     layout: tuple[tuple[int, int], ...]
@@ -380,6 +394,7 @@ class RedistributionSpec:
     nt: int
     bytes_per_rank: int = 0
     bytes_total: int = 0
+    bytes_stayed: int = 0
 
 
 @dataclass(frozen=True)
@@ -425,8 +440,13 @@ class ReconfigOutcome:
 
     @property
     def bytes_moved(self) -> int:
-        """Stage-3 bytes charged on the timeline."""
+        """Stage-3 cross-link bytes charged on the timeline."""
         return self.timeline.bytes_moved
+
+    @property
+    def bytes_stayed(self) -> int:
+        """Stage-3 local-link bytes charged on the timeline."""
+        return self.timeline.bytes_stayed
 
     @property
     def queued_s(self) -> float:
@@ -524,7 +544,7 @@ def _connect_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> N
 
 def expansion_timeline(
     plan: SpawnPlan, cm: "CostModel", bytes_total: int = 0,
-    queue_delay_s: float = 0.0,
+    queue_delay_s: float = 0.0, bytes_stayed: int = 0,
 ) -> Timeline:
     """Charge one expansion as the paper's serial stage pipeline.
 
@@ -532,12 +552,14 @@ def expansion_timeline(
         plan: the spawn plan to execute.
         cm: latency/bandwidth model (also supplies per-stage overlap
             fractions and the contention factor).
-        bytes_total: stage-3 data volume; when positive a REDISTRIBUTION
-            event carrying ``bytes_moved`` is appended.
+        bytes_total: stage-3 cross-link data volume; when positive a
+            REDISTRIBUTION event carrying ``bytes_moved`` is appended.
         queue_delay_s: RMS arbitration wait before stage 2 starts (an
             in-flight reconfiguration must drain first); charged as a
             leading QUEUE event that counts toward ``total`` but never
             toward downtime.
+        bytes_stayed: stage-3 local-link volume (shards surviving
+            devices already hold), charged against ``cm.bw_local``.
     Returns:
         The charged :class:`Timeline`.
     """
@@ -556,11 +578,21 @@ def expansion_timeline(
     # via the intercommunicator MPI_Comm_spawn returns).
     final = cm.connect_merge(plan.nt) if parallel else cm.beta_connect * plan.nt
     tb.add(Stage.FINAL, final, label="final intercomm merge")
-    if bytes_total > 0:
-        tb.add(Stage.REDISTRIBUTION, cm.redistribution(bytes_total),
-               label=f"redistribute {bytes_total} B",
-               overlap_fraction=cm.redist_overlap, bytes_moved=bytes_total)
+    _redistribution_event(tb, cm, bytes_total, bytes_stayed)
     return tb.build()
+
+
+def _redistribution_event(tb: _TimelineBuilder, cm: "CostModel",
+                          bytes_total: int, bytes_stayed: int) -> None:
+    """Append the stage-3 event, priced per link (no bytes, no event)."""
+    if bytes_total <= 0 and bytes_stayed <= 0:
+        return
+    label = (f"redistribute {bytes_total} B" if bytes_stayed <= 0 else
+             f"redistribute {bytes_total} B cross + {bytes_stayed} B local")
+    tb.add(Stage.REDISTRIBUTION,
+           cm.redistribution(bytes_total, bytes_stayed),
+           label=label, overlap_fraction=cm.redist_overlap,
+           bytes_moved=bytes_total, bytes_stayed=max(0, bytes_stayed))
 
 
 def shrink_timeline(
@@ -573,6 +605,7 @@ def shrink_timeline(
     respawn_plan: Optional[SpawnPlan] = None,
     bytes_total: int = 0,
     queue_delay_s: float = 0.0,
+    bytes_stayed: int = 0,
 ) -> Timeline:
     """Charge one shrink by mechanism (§4.6-4.7).
 
@@ -582,8 +615,9 @@ def shrink_timeline(
     * SS — the Baseline path: spawn the NT-sized world (optionally with a
       parallel strategy: pass ``respawn_plan``), tear the old world down.
 
-    ``bytes_total`` > 0 appends a REDISTRIBUTION event (survivors absorb
-    the doomed ranks' shards) after the mechanism's own events.
+    ``bytes_total`` > 0 (cross link) or ``bytes_stayed`` > 0 (local
+    link) appends a REDISTRIBUTION event (survivors absorb the doomed
+    ranks' shards) after the mechanism's own events.
     ``queue_delay_s`` > 0 prepends a QUEUE event (RMS arbitration wait,
     e.g. a preemption arriving while another reconfiguration is in
     flight) that counts toward ``total`` but never toward downtime.
@@ -614,10 +648,7 @@ def shrink_timeline(
                 cm.ss_respawn(nt, max(1, -(-nt // width)), ns),
                 label="SS respawn",
             )
-    if bytes_total > 0:
-        tb.add(Stage.REDISTRIBUTION, cm.redistribution(bytes_total),
-               label=f"redistribute {bytes_total} B",
-               overlap_fraction=cm.redist_overlap, bytes_moved=bytes_total)
+    _redistribution_event(tb, cm, bytes_total, bytes_stayed)
     return tb.build()
 
 
@@ -638,12 +669,16 @@ class ReconfigEngine:
     asynchronous: bool = False
     bytes_per_rank: int = 0
     cost_model: Optional["CostModel"] = None
-    # Stage-3 bytes model: ``f(ns_ranks, nt_ranks) -> bytes_moved``.
-    # Analytic device-free models live in repro.malleability.cost_model
-    # (replicated_bytes_model / fsdp_bytes_model); the exact sharded-pytree
-    # model is repro.elastic.reshard.PytreeBytesModel.  When None the
-    # scalar ``bytes_per_rank`` fallback is charged instead.
-    bytes_model: Optional[Callable[[int, int], int]] = None
+    # Stage-3 bytes model: ``f(ns_ranks, nt_ranks) -> bytes_moved`` (an
+    # int charged on the cross link), or — for per-link pricing — a
+    # mapping with ``bytes_stayed`` / ``bytes_moved`` keys (the
+    # ``predicted_transfer_stats`` shape); a model exposing a ``stats``
+    # attribute (e.g. repro.elastic.reshard.PytreeBytesModel) is asked
+    # through it.  Analytic device-free models live in
+    # repro.malleability.cost_model (replicated_bytes_model /
+    # fsdp_bytes_model / replicated_link_model).  When None the scalar
+    # ``bytes_per_rank`` fallback is charged instead.
+    bytes_model: Optional[Callable[[int, int], Union[int, dict]]] = None
 
     def __post_init__(self) -> None:
         if self.cost_model is None:
@@ -654,16 +689,28 @@ class ReconfigEngine:
             self.cost_model = MN5
 
     # ------------------------------------------------------------- planning --
-    def redistribution_bytes(self, ns: int, nt: int) -> int:
-        """Stage-3 bytes for an ``ns -> nt`` resize.
+    def redistribution_stats(self, ns: int, nt: int) -> tuple[int, int]:
+        """Per-link stage-3 volumes ``(bytes_stayed, bytes_moved)``.
 
-        Consults ``bytes_model`` when set, otherwise falls back to the
-        scalar ``bytes_per_rank * |nt - ns|`` (the ranks that change hold
-        the data in flight).  Returns 0 when neither is configured.
+        Consults ``bytes_model`` when set — through its ``stats``
+        attribute if it has one, else by calling it and accepting either
+        a plain int (moved bytes; stayed unknown, charged 0 — the
+        pre-split aggregate behaviour) or a mapping carrying
+        ``bytes_stayed`` / ``bytes_moved``.  Without a model, falls back
+        to the scalar ``bytes_per_rank * |nt - ns|`` on the cross link.
         """
-        if self.bytes_model is not None:
-            return max(0, int(self.bytes_model(ns, nt)))
-        return max(0, self.bytes_per_rank * abs(nt - ns))
+        if self.bytes_model is None:
+            return 0, max(0, self.bytes_per_rank * abs(nt - ns))
+        stats_fn = getattr(self.bytes_model, "stats", None)
+        out = stats_fn(ns, nt) if callable(stats_fn) else self.bytes_model(ns, nt)
+        if isinstance(out, dict):
+            return (max(0, int(out.get("bytes_stayed", 0))),
+                    max(0, int(out.get("bytes_moved", 0))))
+        return 0, max(0, int(out))
+
+    def redistribution_bytes(self, ns: int, nt: int) -> int:
+        """Stage-3 cross-link (moved) bytes for an ``ns -> nt`` resize."""
+        return self.redistribution_stats(ns, nt)[1]
 
     def plan_expand(
         self,
@@ -699,12 +746,14 @@ class ReconfigEngine:
             graph = build_sync_graph(spawn)
             extend_graph_with_connection(graph, spawn)
             rounds = len(binary_connection_schedule(len(spawn.groups)))
+        stayed, moved = self.redistribution_stats(ns, nt)
         redistribution = RedistributionSpec(
             layout=tuple(global_order(spawn)) if spawn.groups else (),
             ns=ns,
             nt=nt,
             bytes_per_rank=self.bytes_per_rank,
-            bytes_total=self.redistribution_bytes(ns, nt),
+            bytes_total=moved,
+            bytes_stayed=stayed,
         )
         return ReconfigPlan(
             kind="expand",
@@ -753,6 +802,7 @@ class ReconfigEngine:
         )
         ns = sum(w.size for w in state.worlds.values())
         nt = max(0, ns - sum(doomed_sizes) - zombified)
+        stayed, moved = self.redistribution_stats(ns, nt)
         return ReconfigPlan(
             kind="shrink",
             method=self.method,
@@ -767,7 +817,8 @@ class ReconfigEngine:
                 ns=ns,
                 nt=nt,
                 bytes_per_rank=self.bytes_per_rank,
-                bytes_total=self.redistribution_bytes(ns, nt),
+                bytes_total=moved,
+                bytes_stayed=stayed,
             ),
             queue_delay_s=max(0.0, queue_delay_s),
         )
@@ -783,11 +834,14 @@ class ReconfigEngine:
         bytes_total = (
             plan.redistribution.bytes_total if plan.redistribution else 0
         )
+        bytes_stayed = (
+            plan.redistribution.bytes_stayed if plan.redistribution else 0
+        )
         if plan.kind == "expand":
             assert plan.spawn is not None
             return expansion_timeline(
                 plan.spawn, self.cost_model, bytes_total=bytes_total,
-                queue_delay_s=plan.queue_delay_s,
+                queue_delay_s=plan.queue_delay_s, bytes_stayed=bytes_stayed,
             )
         if plan.kind == "shrink":
             assert plan.shrink is not None
@@ -799,6 +853,7 @@ class ReconfigEngine:
                 doomed_world_sizes=list(plan.shrink_world_sizes) or [1],
                 bytes_total=bytes_total,
                 queue_delay_s=plan.queue_delay_s,
+                bytes_stayed=bytes_stayed,
             )
         return Timeline()
 

@@ -2,12 +2,16 @@
 
 A NodeGroup is the JAX-side analogue of the paper's node-confined MCW —
 a set of devices that is acquired and released *as a unit*, which is
-exactly the property TS shrinkage needs.
+exactly the property TS shrinkage needs.  Nodes need not be the same
+width: the pool accepts an explicit per-node width vector (the paper's
+§5.3 NASP testbed alternates 20- and 32-core nodes), and because worlds
+stay node-confined, a shrink still returns *complete* nodes to the RMS
+whatever their width.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 
@@ -26,25 +30,83 @@ class NodeGroup:
 
 
 class DevicePool:
-    """Partition of the host's devices into fixed-size "nodes".
+    """Partition of the host's devices into "nodes", uniform or uneven.
 
     The pool plays the RMS's role of owning idle nodes: `acquire` hands a
     node's devices to a new group, `release` (the TS path) returns them.
+
+    Args:
+        devices: devices to partition (defaults to all host devices).
+        devices_per_node: uniform node width; node ``i`` owns devices
+            ``[i*w, (i+1)*w)`` (leftover devices are ignored).
+        node_widths: explicit per-node width vector (the heterogeneous
+            A vector, e.g. ``(20, 32, 20, 32)``); node ``i`` owns the
+            next ``node_widths[i]`` devices in pool order.  Mutually
+            exclusive with a non-default ``devices_per_node``; raises
+            if the vector needs more devices than the pool holds.
     """
 
-    def __init__(self, devices: Sequence[Any] | None = None, devices_per_node: int = 1):
+    def __init__(
+        self,
+        devices: Sequence[Any] | None = None,
+        devices_per_node: int = 1,
+        node_widths: Optional[Sequence[int]] = None,
+    ):
         devices = list(devices if devices is not None else jax.devices())
-        if devices_per_node <= 0:
-            raise ValueError("devices_per_node must be positive")
-        self.devices_per_node = devices_per_node
+        if node_widths is not None:
+            if devices_per_node != 1:
+                raise ValueError(
+                    "pass either devices_per_node or node_widths, not both"
+                )
+            widths = [int(w) for w in node_widths]
+            if not widths or any(w <= 0 for w in widths):
+                raise ValueError(
+                    f"node_widths must be a non-empty sequence of positive "
+                    f"ints, got {tuple(node_widths)}"
+                )
+            if sum(widths) > len(devices):
+                raise ValueError(
+                    f"node_widths {tuple(widths)} needs {sum(widths)} "
+                    f"devices, pool only has {len(devices)}"
+                )
+        else:
+            if devices_per_node <= 0:
+                raise ValueError("devices_per_node must be positive")
+            widths = [devices_per_node] * (len(devices) // devices_per_node)
+        self.node_widths: tuple[int, ...] = tuple(widths)
         self.nodes: dict[int, tuple[Any, ...]] = {}
-        for i in range(len(devices) // devices_per_node):
-            self.nodes[i] = tuple(devices[i * devices_per_node:(i + 1) * devices_per_node])
+        offset = 0
+        for i, w in enumerate(widths):
+            self.nodes[i] = tuple(devices[offset:offset + w])
+            offset += w
         self.free: set[int] = set(self.nodes)
 
     @property
     def n_nodes(self) -> int:
         return len(self.nodes)
+
+    @property
+    def uniform(self) -> bool:
+        """True when every node has the same width (the MN5 case)."""
+        return len(set(self.node_widths)) <= 1
+
+    @property
+    def devices_per_node(self) -> int:
+        """Uniform node width; raises on an uneven pool (use ``width``)."""
+        widths = set(self.node_widths)
+        if len(widths) > 1:
+            raise ValueError(
+                f"pool is uneven ({self.node_widths}); devices_per_node is "
+                "undefined — use width(node) / node_widths instead"
+            )
+        return widths.pop() if widths else 1
+
+    def width(self, node: int) -> int:
+        """Devices owned by ``node`` (its entry in the A vector)."""
+        return len(self.nodes[node])
+
+    def total_devices(self) -> int:
+        return sum(self.node_widths)
 
     def acquire(self, node: int) -> tuple[Any, ...]:
         if node not in self.free:

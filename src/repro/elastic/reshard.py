@@ -204,9 +204,16 @@ class PytreeBytesModel:
         return self._cache["abstract"]
 
     def __call__(self, ns: int, nt: int) -> int:
+        return self.stats(ns, nt)["bytes_moved"]
+
+    def stats(self, ns: int, nt: int) -> dict:
+        """Full per-link prediction ``{"bytes_total", "bytes_stayed",
+        "bytes_moved"}`` for an ``ns -> nt`` resize — the engine consults
+        this (in preference to ``__call__``) so stayed and moved bytes
+        are charged against their own link bandwidths."""
         if ns == nt or ns <= 0 or nt <= 0:
-            return 0
+            return {"bytes_total": 0, "bytes_stayed": 0, "bytes_moved": 0}
         shapes, _ = self._abstract()
         return predicted_transfer_stats(
             shapes, self._shardings(ns), self._shardings(nt)
-        )["bytes_moved"]
+        )

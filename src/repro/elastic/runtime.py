@@ -7,8 +7,8 @@ the same plan objects to real device groups:
 
   1. feasibility        — the (simulated) RMS grants/reclaims nodes;
   2. process management — a SpawnPlan brings NodeGroups up (hypercube for
-                          homogeneous pools, diffusive for heterogeneous),
-                          TS terminates whole groups;
+                          homogeneous pools, diffusive for heterogeneous /
+                          uneven-width pools), TS terminates whole groups;
   3. data redistribution— the caller reshards its pytrees onto the new
                           mesh (see :mod:`repro.elastic.reshard`);
   4. resume             — the caller re-jits its step for the new mesh.
@@ -57,8 +57,9 @@ class ReconfigRecord:
     groups: int = 0
     nodes_returned: tuple[int, ...] = ()
     nodes_pinned: tuple[int, ...] = ()
-    bytes_moved: int = 0       # stage-3 bytes charged on the timeline
+    bytes_moved: int = 0       # stage-3 cross-link bytes charged on the timeline
     queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
+    bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
 
 
 class ElasticRuntime:
@@ -191,13 +192,21 @@ class ElasticRuntime:
                     self.pool.release(node)
 
     # ---------------------------------------------------------------- expand --
+    def ranks_in_use(self) -> int:
+        """Live ranks (== devices) across all worlds."""
+        return sum(w.size for w in self.state.worlds.values())
+
     def expand(self, target_nodes: int, *,
                queue_delay_s: float = 0.0) -> ReconfigRecord:
         """Grow the job to ``target_nodes`` NodeGroup-confined nodes.
 
-        Plans through the engine's strategy registry, applies the plan to
-        the device pool, and charges the event timeline (including the
-        stage-3 bytes from the engine's bytes model, if configured).
+        Plans through the engine's strategy registry against the pool's
+        actual per-node width vector (uniform or uneven), applies the
+        plan to the device pool, and charges the event timeline
+        (including the stage-3 bytes from the engine's bytes model, if
+        configured).  New nodes are taken lowest-id-first, the same
+        greedy order the simulator backend uses, so both executors see
+        identical A vectors and charge identical timelines.
 
         Args:
             target_nodes: new total node count (must exceed the current).
@@ -208,13 +217,24 @@ class ElasticRuntime:
             The appended :class:`ReconfigRecord`.
         Raises:
             ValueError: if ``target_nodes`` does not grow the job.
+            RuntimeError: if the pool has too few free nodes.
         """
         before = self.n_nodes
         if target_nodes <= before:
             raise ValueError("expand() requires target_nodes > current nodes")
-        cpn = self.pool.devices_per_node
-        ns, nt = before * cpn, target_nodes * cpn
-        plan = self.engine.plan_expand(ns, nt, self._cores_arg(cpn, target_nodes),
+        need = target_nodes - before
+        free = sorted(self.pool.free)
+        if need > len(free):
+            raise RuntimeError(
+                f"device pool exhausted: expand to {target_nodes} nodes "
+                f"needs {need} free nodes, pool has {len(free)}"
+            )
+        new_nodes = free[:need]
+        ns = self.ranks_in_use()
+        nt = ns + sum(self.pool.width(n) for n in new_nodes)
+        cores = self._cores_arg(
+            sorted(self.state.nodes_in_use() | set(new_nodes)))
+        plan = self.engine.plan_expand(ns, nt, cores,
                                        queue_delay_s=queue_delay_s)
         outcome = self.engine.execute(plan, backend=self)
 
@@ -231,17 +251,24 @@ class ElasticRuntime:
             groups=len(spawn.groups),
             bytes_moved=outcome.bytes_moved,
             queued_s=outcome.queued_s,
+            bytes_stayed=outcome.bytes_stayed,
         )
         self.history.append(rec)
         return rec
 
-    def _cores_arg(self, cpn: int, target_nodes: int):
-        """Vector-capable strategies get the explicit A vector."""
+    def _cores_arg(self, nodes: list[int]):
+        """Allocation argument for the planner: the pool's A vector over
+        ``nodes`` (node-id order).  Homogeneous-only strategies get the
+        scalar width on a uniform allocation; on an uneven one they get
+        the vector anyway, so the planner raises its §4.2 guidance error
+        ("use PARALLEL_DIFFUSIVE") instead of silently mis-planning."""
         from repro.core import get_strategy
 
-        if get_strategy(self.engine.strategy).homogeneous_only:
-            return cpn
-        return [cpn] * target_nodes
+        widths = [self.pool.width(n) for n in nodes]
+        if (get_strategy(self.engine.strategy).homogeneous_only
+                and len(set(widths)) == 1):
+            return widths[0]
+        return widths
 
     # ---------------------------------------------------------------- shrink --
     def shrink(self, n_nodes_to_release: int, kind: str = "shrink") -> ReconfigRecord:
@@ -275,6 +302,7 @@ class ElasticRuntime:
             nodes_pinned=plan.shrink.nodes_pinned,
             bytes_moved=outcome.bytes_moved,
             queued_s=outcome.queued_s,
+            bytes_stayed=outcome.bytes_stayed,
         )
         self.history.append(rec)
         return rec

@@ -68,24 +68,31 @@ class ElasticTrainer:
         charges, so per-event downtimes (and charged bytes) agree across
         both paths.  Pass ``engine`` to override the scenario's default —
         e.g. one carrying a :class:`~repro.elastic.reshard.PytreeBytesModel`
-        so charged bytes exactly equal the measured reshard."""
-        from repro.elastic.node_group import DevicePool
+        so charged bytes exactly equal the measured reshard.
 
-        if scenario.sim_only:
-            raise ValueError(
-                f"scenario {scenario.name!r} has a heterogeneous core pool "
-                "(simulator-only); the live DevicePool partitions devices "
-                "uniformly"
-            )
-        pool = pool or DevicePool(devices_per_node=scenario.cores_per_node)
-        if pool.n_nodes < scenario.max_nodes():
+        Heterogeneous scenarios run too: the pool is partitioned with the
+        scenario's uneven ``core_pool`` width vector (host devices must
+        cover ``sum(core_pool)``)."""
+        from repro.malleability.scenarios import check_scenario_pool, scenario_pool
+
+        need = (sum(scenario.core_pool) if scenario.core_pool
+                else scenario.max_nodes() * scenario.cores_per_node)
+        if pool is None:
+            devs = jax.devices()
+            if len(devs) >= need:
+                pool = scenario_pool(scenario, devices=devs)
+        else:
+            check_scenario_pool(scenario, pool)
+        if pool is None or pool.n_nodes < scenario.max_nodes():
+            width = (f"widths {scenario.core_pool}" if scenario.core_pool
+                     else f"{scenario.cores_per_node} devices/node")
+            have = (pool.n_nodes if pool is not None
+                    else f"{len(jax.devices())} devices")
             raise ValueError(
                 f"scenario {scenario.name!r} peaks at {scenario.max_nodes()} "
-                f"nodes but the device pool only has {pool.n_nodes} "
-                f"({scenario.cores_per_node} devices/node); set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count="
-                f"{scenario.max_nodes() * scenario.cores_per_node} before "
-                "importing jax, or pass a larger pool"
+                f"nodes ({width}) but the host/pool only has {have}; set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+                "before importing jax, or pass a larger pool"
             )
         runtime = ElasticRuntime(
             pool=pool,

@@ -81,11 +81,6 @@ def run_scenario(model: Model, args) -> None:
     from repro.malleability import get_scenario
 
     scenario = get_scenario(args.scenario)
-    if scenario.sim_only:
-        raise SystemExit(
-            f"scenario {scenario.name!r} is heterogeneous (simulator-only); "
-            "pick a homogeneous one for live training"
-        )
     trainer = ElasticTrainer.from_scenario(
         model, scenario, lr=args.lr, batch=args.batch, seq=args.seq,
         checkpoint_dir=args.checkpoint_dir,

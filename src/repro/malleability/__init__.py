@@ -28,6 +28,7 @@ from .cost_model import (
     CostModel,
     fsdp_bytes_model,
     replicated_bytes_model,
+    replicated_link_model,
 )
 from .policies import (
     ArbitratedJob,
@@ -64,6 +65,7 @@ from .scenarios import (
     registered_scenarios,
     run_scenario_live,
     run_scenario_sim,
+    scenario_pool,
     steady_cycle,
     straggler_churn,
 )
@@ -111,9 +113,11 @@ __all__ = [
     "registered_policy_scenarios",
     "registered_scenarios",
     "replicated_bytes_model",
+    "replicated_link_model",
     "run_multijob_sim",
     "run_scenario_live",
     "run_scenario_sim",
+    "scenario_pool",
     "simulate_expansion",
     "simulate_redistribution",
     "simulate_shrink",

@@ -51,6 +51,14 @@ class CostModel:
     # -- data redistribution --------------------------------------------------------
     redist_bw: float = 10.0e9       # aggregate bytes/s between old and new ranks
     redist_alpha: float = 5.0e-3    # per-event setup (plan exchange, buffer pin)
+    # Per-link split of the aggregate: bytes that stay on a surviving
+    # device (``bytes_stayed``) are re-validated over the local link,
+    # bytes that cross devices (``bytes_moved``) go over the cross-group
+    # link.  ``None`` falls back to the aggregate ``redist_bw``, so the
+    # default model (local == cross == redist_bw) charges exactly the
+    # old single-bandwidth numbers for every moved-bytes-only model.
+    redist_bw_local: float | None = None
+    redist_bw_cross: float | None = None
 
     # -- partial overlap (stage x compute) -------------------------------------------
     # Fraction of each stage that can proceed under application compute when
@@ -120,14 +128,45 @@ class CostModel:
             + self.comm_split(nt)
         )
 
-    def redistribution(self, total_bytes: int) -> float:
-        """Stage-3 wall time for moving ``total_bytes`` across the job.
+    @property
+    def bw_local(self) -> float:
+        """Resolved local-link bandwidth (aggregate unless split)."""
+        return self.redist_bw if self.redist_bw_local is None else self.redist_bw_local
 
-        Zero bytes means no redistribution event at all (no setup charge).
+    @property
+    def bw_cross(self) -> float:
+        """Resolved cross-group bandwidth (aggregate unless split)."""
+        return self.redist_bw if self.redist_bw_cross is None else self.redist_bw_cross
+
+    def redistribution(self, moved_bytes: int, stayed_bytes: int = 0) -> float:
+        """Stage-3 wall time: per-link pricing of one redistribution.
+
+        ``moved_bytes`` cross device boundaries and are charged against
+        the cross-group bandwidth; ``stayed_bytes`` are shards a
+        surviving device already holds, re-validated over the (usually
+        much faster) local link.  Zero bytes on both links means no
+        redistribution event at all (no setup charge).  With the default
+        single-bandwidth model and ``stayed_bytes == 0`` — which is what
+        every moved-bytes-only model reports — this is bit-for-bit the
+        old aggregate charge ``redist_alpha + moved / redist_bw``.
         """
-        if total_bytes <= 0:
+        if moved_bytes <= 0 and stayed_bytes <= 0:
             return 0.0
-        return self.redist_alpha + total_bytes / self.redist_bw
+        return (
+            self.redist_alpha
+            + max(0, stayed_bytes) / self.bw_local
+            + max(0, moved_bytes) / self.bw_cross
+        )
+
+    def with_link_bandwidths(
+        self, *, local: float | None = None, cross: float | None = None
+    ) -> "CostModel":
+        """Copy of this model with split per-link redistribution bandwidths."""
+        return replace(
+            self,
+            redist_bw_local=self.redist_bw_local if local is None else local,
+            redist_bw_cross=self.redist_bw_cross if cross is None else cross,
+        )
 
     def with_overlap(
         self,
@@ -168,6 +207,14 @@ class CostModel:
             t_barrier_hop=self.t_barrier_hop * factor,
             t_term_base=self.t_term_base * factor,
             redist_bw=self.redist_bw / factor,
+            redist_bw_local=(
+                None if self.redist_bw_local is None
+                else self.redist_bw_local / factor
+            ),
+            redist_bw_cross=(
+                None if self.redist_bw_cross is None
+                else self.redist_bw_cross / factor
+            ),
             redist_alpha=self.redist_alpha * factor,
         )
 
@@ -222,6 +269,40 @@ def fsdp_bytes_model(param_bytes: int):
         return param_bytes
 
     return bytes_moved
+
+
+def replicated_link_model(param_bytes: int):
+    """Link-aware replicated model: reports *both* transfer classes.
+
+    Same placement assumptions as :func:`replicated_bytes_model`, but the
+    returned callable yields a ``{"bytes_stayed", "bytes_moved"}`` dict
+    (the :func:`repro.elastic.reshard.predicted_transfer_stats` shape):
+    a grow ships one replica to each new rank (moved, cross link) while
+    every survivor re-validates its own replica (stayed, local link);
+    a shrink leaves the survivors' replicas in place (stayed only).
+
+    Use this with split ``redist_bw_local`` / ``redist_bw_cross``
+    bandwidths; with the default single-bandwidth model, prefer
+    :func:`replicated_bytes_model`, which charges moved bytes only and
+    reproduces the pre-split aggregate numbers bit-for-bit.
+
+    Args:
+        param_bytes: total size of the replicated pytree in bytes.
+    Returns:
+        ``f(ns, nt) -> dict`` usable as ``ReconfigEngine.bytes_model``.
+    """
+
+    def transfer(ns: int, nt: int) -> dict:
+        if ns <= 0 or nt <= 0 or nt == ns:
+            return {"bytes_stayed": 0, "bytes_moved": 0}
+        if nt > ns:
+            return {
+                "bytes_stayed": param_bytes * ns,
+                "bytes_moved": param_bytes * (nt - ns),
+            }
+        return {"bytes_stayed": param_bytes * nt, "bytes_moved": 0}
+
+    return transfer
 
 
 # MareNostrum 5: 112-core nodes, MPICH 4.2 over InfiniBand (CH4:OFI).

@@ -31,7 +31,13 @@ from typing import Iterable, Optional, Union
 
 from repro.core import ClusterState, Method, ReconfigEngine, Strategy, apply_shrink
 
-from .cost_model import MN5, NASP, CostModel, replicated_bytes_model
+from .cost_model import (
+    MN5,
+    NASP,
+    CostModel,
+    replicated_bytes_model,
+    replicated_link_model,
+)
 
 # Event kinds (string-typed so scenarios stay pure data; they map 1:1 to
 # repro.elastic.rms.EventKind values).
@@ -96,9 +102,9 @@ class Scenario:
     events: tuple[ScenarioEvent, ...]
     cores_per_node: int = 1          # homogeneous node width (== devices/node
     #                                  when executed on the live runtime)
-    core_pool: tuple[int, ...] = ()  # heterogeneous A vector; when set the
-    #                                  scenario is simulator-only (the live
-    #                                  DevicePool partitions uniformly)
+    core_pool: tuple[int, ...] = ()  # heterogeneous A vector; the live
+    #                                  DevicePool partitions its devices with
+    #                                  the same uneven widths (node_widths)
     steps: int = 20                  # application steps the trace spans
     profile: str = "mn5"             # default cost-model profile
     arch: str = ""                   # model config whose pytree the trace moves
@@ -106,14 +112,19 @@ class Scenario:
     contention: float = 0.0          # >0 overrides the cost model's overlap
     #                                  contention (multi-job interference
     #                                  degrades how well ASYNC hides work)
-
-    @property
-    def sim_only(self) -> bool:
-        return bool(self.core_pool)
+    redist_bw_local: float = 0.0     # per-link stage-3 bandwidths; >0 splits
+    redist_bw_cross: float = 0.0     # the profile's aggregate redist_bw and
+    #                                  switches the default engine to the
+    #                                  link-aware (stayed+moved) bytes model
 
     @property
     def heterogeneous(self) -> bool:
         return bool(self.core_pool)
+
+    @property
+    def link_aware(self) -> bool:
+        """True when the trace prices stage 3 per link (split bandwidths)."""
+        return self.redist_bw_local > 0.0 or self.redist_bw_cross > 0.0
 
     def cores_for(self, n_nodes: int) -> Union[int, list[int]]:
         """Allocation argument for an expansion to ``n_nodes`` nodes."""
@@ -145,6 +156,11 @@ class Scenario:
         cm = NASP if self.profile == "nasp" else MN5
         if self.contention > 0.0:
             cm = cm.with_overlap(contention=self.contention)
+        if self.link_aware:
+            cm = cm.with_link_bandwidths(
+                local=self.redist_bw_local or None,
+                cross=self.redist_bw_cross or None,
+            )
         return cm
 
     def resolved_param_bytes(self) -> int:
@@ -172,11 +188,18 @@ class Scenario:
                 else Strategy.PARALLEL_HYPERCUBE
             )
         pb = self.resolved_param_bytes()
+        bytes_model = None
+        if pb:
+            # Per-link traces charge both transfer classes; aggregate
+            # traces keep the moved-only model (bit-for-bit the
+            # pre-split numbers).
+            bytes_model = (replicated_link_model(pb) if self.link_aware
+                           else replicated_bytes_model(pb))
         return ReconfigEngine(
             method=Method.MERGE if method is None else method,
             strategy=strategy,
             cost_model=self.cost_model(),
-            bytes_model=replicated_bytes_model(pb) if pb else None,
+            bytes_model=bytes_model,
         )
 
     def with_cores_per_node(self, cpn: int) -> "Scenario":
@@ -344,11 +367,21 @@ def heterogeneous_pool(
     nodes: int = 8,
     widths: tuple[int, ...] = (20, 32),
     profile: str = "nasp",
+    arch: str = "",
+    param_bytes: int = 0,
+    redist_bw_local: float = 0.0,
+    redist_bw_cross: float = 0.0,
 ) -> Scenario:
     """NASP-style heterogeneous pool (§5.3): alternating node widths.
 
-    Requires the diffusive strategy; simulator-only (the live DevicePool
-    partitions the host's devices uniformly).
+    Requires the diffusive strategy (§4.2).  Runs through BOTH executors:
+    the live ``DevicePool`` partitions its devices with the same uneven
+    ``node_widths`` vector, and because worlds stay node-confined,
+    shrinks return complete uneven nodes to the pool.  ``arch`` /
+    ``param_bytes`` size the pytree the trace reshards; split
+    ``redist_bw_local`` / ``redist_bw_cross`` bandwidths price stage 3
+    per link (see :func:`~repro.malleability.cost_model
+    .replicated_link_model`).
     """
     pool = tuple(widths[i % len(widths)] for i in range(nodes))
     events = (
@@ -364,6 +397,10 @@ def heterogeneous_pool(
         events=events,
         steps=16,
         profile=profile,
+        arch=arch,
+        param_bytes=param_bytes,
+        redist_bw_local=redist_bw_local,
+        redist_bw_cross=redist_bw_cross,
     )
 
 
@@ -377,6 +414,15 @@ for _sc in (
     # a real model config's parameter pytree, so est_wall is dominated by
     # data movement rather than spawning — swap `arch` to sweep it.
     steady_cycle(name="redist-cycle", arch="stablelm_3b"),
+    # Uneven widths x real pytree bytes x per-link pricing: a small
+    # (2,1,2,1) pool — sized so the full ElasticTrainer loop can run it
+    # on a handful of host devices — resharding xlstm_125m's parameters
+    # with the local link 10x faster than the cross-group Ethernet, so
+    # bytes_stayed and bytes_moved are charged at different bandwidths.
+    heterogeneous_pool(
+        name="hetero-redist", nodes=4, widths=(2, 1), arch="xlstm_125m",
+        redist_bw_local=25.0e9, redist_bw_cross=2.5e9,
+    ),
 ):
     register_scenario(_sc)
 
@@ -393,8 +439,9 @@ class ScenarioRecord:
     nodes_after: int
     est_wall_s: float          # timeline total
     downtime_s: float          # timeline downtime
-    bytes_moved: int = 0       # stage-3 bytes charged on the timeline
+    bytes_moved: int = 0       # stage-3 cross-link bytes charged on the timeline
     queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
+    bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
 
 
 @dataclass
@@ -459,6 +506,7 @@ class _SimCluster:
             nodes_before=before, nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
             bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
+            bytes_stayed=outcome.bytes_stayed,
         )
 
     def shrink_nodes(self, victims: list[int], kind: str,
@@ -475,6 +523,7 @@ class _SimCluster:
             nodes_before=before, nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
             bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
+            bytes_stayed=outcome.bytes_stayed,
         )
 
 
@@ -533,6 +582,7 @@ class RuntimeAdapter:
             nodes_before=rec.nodes_before, nodes_after=rec.nodes_after,
             est_wall_s=rec.est_wall_s, downtime_s=rec.downtime_s,
             bytes_moved=rec.bytes_moved, queued_s=rec.queued_s,
+            bytes_stayed=rec.bytes_stayed,
         )
 
     def expand(self, target_nodes: int,
@@ -565,6 +615,51 @@ def run_scenario_sim(
     return records
 
 
+def scenario_pool(scenario: Scenario, devices=None):
+    """Build the live :class:`~repro.elastic.node_group.DevicePool` a
+    scenario expects: uniform ``cores_per_node``-wide nodes, or the
+    scenario's uneven ``core_pool`` width vector.  ``devices=None``
+    fabricates bookkeeping-only fake device objects sized to the pool.
+    """
+    from repro.elastic.node_group import DevicePool
+
+    if scenario.core_pool:
+        if devices is None:
+            devices = [object() for _ in range(sum(scenario.core_pool))]
+        return DevicePool(devices=devices, node_widths=scenario.core_pool)
+    cpn = scenario.cores_per_node
+    if devices is None:
+        devices = [object() for _ in range(scenario.max_nodes() * cpn)]
+    return DevicePool(devices=devices, devices_per_node=cpn)
+
+
+def check_scenario_pool(scenario: Scenario, pool) -> None:
+    """Raise unless a caller-supplied pool can replay ``scenario`` in
+    lockstep with the simulator.
+
+    Both executors derive plans from node widths, so a pool whose
+    widths disagree with the scenario's (``core_pool``, or the uniform
+    ``cores_per_node``) would not error — it would silently produce
+    different timelines and break the sim == live parity every consumer
+    relies on.  Fail loudly instead.
+    """
+    n = scenario.max_nodes()
+    if pool.n_nodes < n:
+        raise ValueError(
+            f"scenario {scenario.name!r} peaks at {n} nodes but the pool "
+            f"only has {pool.n_nodes}"
+        )
+    widths = tuple(pool.node_widths[:n])
+    expect = (tuple(scenario.core_pool[:n]) if scenario.core_pool
+              else (scenario.cores_per_node,) * n)
+    if widths != expect:
+        raise ValueError(
+            f"pool widths {widths} do not match scenario "
+            f"{scenario.name!r} widths {expect}; the live runtime would "
+            "plan different timelines than the simulator"
+        )
+
+
 def run_scenario_live(
     scenario: Scenario,
     pool=None,
@@ -575,20 +670,16 @@ def run_scenario_live(
     Bookkeeping-only (fake devices by default): exercises the identical
     engine/backend path the :class:`ElasticTrainer` uses, without JAX
     compilation, so tests can assert sim/live timeline agreement cheaply.
+    Heterogeneous traces run too: the pool is partitioned with the
+    scenario's uneven ``core_pool`` width vector.
     """
-    if scenario.sim_only:
-        raise ValueError(
-            f"scenario {scenario.name!r} has a heterogeneous core pool; "
-            "the live DevicePool partitions devices uniformly"
-        )
-    from repro.elastic.node_group import DevicePool
     from repro.elastic.runtime import ElasticRuntime
 
     engine = engine or scenario.default_engine()
-    cpn = scenario.cores_per_node
     if pool is None:
-        fake = [object() for _ in range(scenario.max_nodes() * cpn)]
-        pool = DevicePool(devices=fake, devices_per_node=cpn)
+        pool = scenario_pool(scenario)
+    else:
+        check_scenario_pool(scenario, pool)
     rt = ElasticRuntime(pool=pool, initial_nodes=scenario.initial_nodes,
                         engine=engine)
     adapter = RuntimeAdapter(rt)

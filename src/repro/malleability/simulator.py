@@ -52,6 +52,7 @@ class ExpansionReport:
     t_redist: float = 0.0
     bytes_moved: int = 0
     t_queue: float = 0.0
+    bytes_stayed: int = 0
 
     def as_row(self) -> dict:
         """Report as a flat dict row (benchmark CSV shape)."""
@@ -70,6 +71,7 @@ class ExpansionReport:
             "total_s": round(self.total, 6),
             "downtime_s": round(self.downtime, 6),
             "bytes_moved": self.bytes_moved,
+            "bytes_stayed": self.bytes_stayed,
             "steps": self.steps,
             "groups": self.groups,
         }
@@ -86,29 +88,32 @@ class ShrinkReport:
     detail: dict = field(default_factory=dict)
     timeline: Timeline = field(default_factory=Timeline, repr=False, compare=False)
     bytes_moved: int = 0
+    bytes_stayed: int = 0
 
 
 def simulate_expansion(
     plan: SpawnPlan, cm: CostModel, asynchronous: bool = False,
-    bytes_total: int = 0, queue_delay_s: float = 0.0,
+    bytes_total: int = 0, queue_delay_s: float = 0.0, bytes_stayed: int = 0,
 ) -> ExpansionReport:
     """Charge one expansion plan and report its per-phase breakdown.
 
     Args:
         plan: the spawn plan to charge.
-        cm: cost model (latencies, bandwidth, overlap fractions).
+        cm: cost model (latencies, bandwidths, overlap fractions).
         asynchronous: report ASYNC downtime (partial overlap) instead of
             the full wall time.
-        bytes_total: stage-3 data volume to charge as a REDISTRIBUTION
-            event (0 skips the event).
+        bytes_total: stage-3 cross-link data volume to charge as a
+            REDISTRIBUTION event (0 skips the event).
         queue_delay_s: RMS arbitration wait charged as a leading QUEUE
             event (0 skips the event).
+        bytes_stayed: stage-3 local-link volume (per-link pricing).
     Returns:
         An :class:`ExpansionReport` whose every field is a read of the
         charged :class:`~repro.core.Timeline`.
     """
     tl = expansion_timeline(plan, cm, bytes_total=bytes_total,
-                            queue_delay_s=queue_delay_s)
+                            queue_delay_s=queue_delay_s,
+                            bytes_stayed=bytes_stayed)
     return ExpansionReport(
         strategy=plan.strategy,
         method=plan.method,
@@ -127,6 +132,7 @@ def simulate_expansion(
         t_redist=tl.span(Stage.REDISTRIBUTION),
         bytes_moved=tl.bytes_moved,
         t_queue=tl.queued_s,
+        bytes_stayed=tl.bytes_stayed,
     )
 
 
@@ -140,11 +146,13 @@ def simulate_shrink(
     nodes_returned: int = 0,
     nodes_pinned: int = 0,
     bytes_total: int = 0,
+    bytes_stayed: int = 0,
 ) -> ShrinkReport:
     """Charge one shrink by mechanism (TS / ZS / SS) off its timeline.
 
-    ``bytes_total`` > 0 additionally charges the survivors' absorption
-    of the doomed ranks' shards as a REDISTRIBUTION event.
+    ``bytes_total`` > 0 (cross link) or ``bytes_stayed`` > 0 (local
+    link) additionally charges the survivors' absorption of the doomed
+    ranks' shards as a REDISTRIBUTION event.
     """
     tl = shrink_timeline(
         kind,
@@ -154,6 +162,7 @@ def simulate_shrink(
         doomed_world_sizes=doomed_world_sizes,
         respawn_plan=respawn_plan,
         bytes_total=bytes_total,
+        bytes_stayed=bytes_stayed,
     )
     if kind is ShrinkKind.TS:
         detail = {"worlds_terminated": len(doomed_world_sizes or [])}
@@ -171,9 +180,11 @@ def simulate_shrink(
         detail=detail,
         timeline=tl,
         bytes_moved=tl.bytes_moved,
+        bytes_stayed=tl.bytes_stayed,
     )
 
 
-def simulate_redistribution(cm: CostModel, total_bytes: int) -> float:
-    """Stage-3 wall time for moving ``total_bytes`` (setup + bandwidth)."""
-    return cm.redistribution(total_bytes)
+def simulate_redistribution(cm: CostModel, total_bytes: int,
+                            stayed_bytes: int = 0) -> float:
+    """Stage-3 wall time for one redistribution (setup + per-link bw)."""
+    return cm.redistribution(total_bytes, stayed_bytes)

@@ -1,0 +1,88 @@
+"""Bench-regression gate: comparator semantics + committed baseline shape."""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), os.pardir)
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+from check_bench import compare, index_rows, main  # noqa: E402
+
+
+def doc(rows, smoke=True):
+    return {"smoke": smoke,
+            "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                     for n, us in rows]}
+
+
+class TestComparator:
+    def test_identical_runs_pass(self):
+        d = doc([("a", 100), ("b", 0)])
+        failures, infos = compare(d, d)
+        assert failures == [] and infos == []
+
+    def test_drift_beyond_tolerance_fails_both_directions(self):
+        base = doc([("a", 100), ("b", 100)])
+        cur = doc([("a", 111), ("b", 89)])
+        failures, _ = compare(base, cur, tolerance=0.10)
+        assert len(failures) == 2
+        assert all("DRIFT" in f for f in failures)
+
+    def test_drift_within_tolerance_passes(self):
+        failures, _ = compare(doc([("a", 100)]), doc([("a", 109)]),
+                              tolerance=0.10)
+        assert failures == []
+
+    def test_missing_row_fails_new_row_is_informational(self):
+        failures, infos = compare(doc([("a", 100)]), doc([("b", 100)]))
+        assert len(failures) == 1 and "MISSING" in failures[0]
+        assert len(infos) == 1 and "NEW" in infos[0]
+
+    def test_zero_baseline_rows_must_stay_zero(self):
+        failures, _ = compare(doc([("t2", 0)]), doc([("t2", 5)]))
+        assert len(failures) == 1 and "NONZERO" in failures[0]
+        failures, _ = compare(doc([("t2", 0)]), doc([("t2", 0)]))
+        assert failures == []
+
+    def test_duplicate_names_compared_positionally(self):
+        base = doc([("fail", 10), ("fail", 20)])
+        assert set(index_rows(base)) == {"fail", "fail#1"}
+        failures, _ = compare(base, doc([("fail", 10), ("fail", 40)]))
+        assert len(failures) == 1 and "fail#1" in failures[0]
+
+    def test_main_exit_codes(self, tmp_path):
+        good = tmp_path / "good.json"
+        bad = tmp_path / "bad.json"
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps(doc([("a", 100)])))
+        good.write_text(json.dumps(doc([("a", 105)])))
+        bad.write_text(json.dumps(doc([("a", 200)])))
+        assert main([str(base), str(good)]) == 0
+        assert main([str(base), str(bad)]) == 1
+
+
+class TestCommittedBaseline:
+    """The committed BENCH_baseline.json must stay a valid --smoke --json
+    document covering every table family run.py emits."""
+
+    @pytest.fixture(scope="class")
+    def baseline(self):
+        with open(os.path.join(REPO, "BENCH_baseline.json")) as f:
+            return json.load(f)
+
+    def test_is_a_smoke_run_with_envelopes(self, baseline):
+        assert baseline["smoke"] is True
+        assert len(baseline["envelopes"]) == 5
+
+    def test_covers_every_table_family(self, baseline):
+        families = {r["name"].split("/")[0] for r in baseline["rows"]}
+        assert {"fig4a", "fig4b", "fig5", "fig6a", "fig6b", "table2",
+                "fig1", "scenario", "hetero", "redist", "overlap",
+                "policy"} <= families
+
+    def test_hetero_rows_present_with_per_link_bytes(self, baseline):
+        hetero = [r for r in baseline["rows"]
+                  if r["name"].startswith("hetero/hetero-redist/")]
+        assert hetero and all("stayed=" in r["derived"] for r in hetero)

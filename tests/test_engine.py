@@ -333,6 +333,81 @@ class TestBytesCharging:
         assert shrink_rec.bytes_moved == 777 * 4
 
 
+class TestPerLinkPricing:
+    """redist_bw_local / redist_bw_cross split the aggregate bandwidth:
+    bytes_stayed go over the local link, bytes_moved over the cross one."""
+
+    def test_default_model_is_bitwise_the_old_aggregate(self):
+        # local == cross == redist_bw and stayed == 0 (what every
+        # moved-bytes-only model reports) is exactly the old charge
+        assert MN5.bw_local == MN5.bw_cross == MN5.redist_bw
+        for b in (1, 10 ** 6, 10 ** 10):
+            assert MN5.redistribution(b) == MN5.redist_alpha + b / MN5.redist_bw
+        assert MN5.redistribution(0) == 0.0
+
+    def test_stayed_bytes_priced_on_the_local_link(self):
+        cm = MN5.with_link_bandwidths(local=50.0e9, cross=5.0e9)
+        assert cm.redistribution(10 ** 9, 10 ** 9) == pytest.approx(
+            cm.redist_alpha + 10 ** 9 / 50.0e9 + 10 ** 9 / 5.0e9)
+        # stayed-only traffic still creates an event (local re-validation)
+        assert cm.redistribution(0, 10 ** 9) == pytest.approx(
+            cm.redist_alpha + 10 ** 9 / 50.0e9)
+
+    def test_scaled_profile_scales_split_bandwidths(self):
+        cm = MN5.with_link_bandwidths(local=40.0e9, cross=4.0e9).scaled(4.0)
+        assert cm.bw_local == pytest.approx(10.0e9)
+        assert cm.bw_cross == pytest.approx(1.0e9)
+        # unsplit models stay unsplit through scaled()
+        assert MN5.scaled(4.0).redist_bw_local is None
+
+    def test_dict_bytes_model_flows_into_timeline_event(self):
+        engine = ReconfigEngine(
+            cost_model=MN5.with_link_bandwidths(local=100.0e9),
+            bytes_model=lambda ns, nt: {"bytes_stayed": 3 * 10 ** 9,
+                                        "bytes_moved": 10 ** 9},
+        )
+        plan = engine.plan_expand(4, 16, 4)
+        assert plan.redistribution.bytes_total == 10 ** 9
+        assert plan.redistribution.bytes_stayed == 3 * 10 ** 9
+        out = engine.execute(plan)
+        assert out.bytes_moved == 10 ** 9
+        assert out.bytes_stayed == 3 * 10 ** 9
+        (ev,) = [e for e in out.timeline.events
+                 if e.stage is Stage.REDISTRIBUTION]
+        assert (ev.bytes_moved, ev.bytes_stayed) == (10 ** 9, 3 * 10 ** 9)
+        assert ev.duration == pytest.approx(
+            MN5.redist_alpha + 3 * 10 ** 9 / 100.0e9 + 10 ** 9 / MN5.redist_bw)
+
+    def test_stats_attribute_preferred_over_call(self):
+        class Model:
+            def __call__(self, ns, nt):
+                raise AssertionError("stats() should be consulted first")
+
+            def stats(self, ns, nt):
+                return {"bytes_stayed": 7, "bytes_moved": 11}
+
+        engine = ReconfigEngine(cost_model=MN5, bytes_model=Model())
+        assert engine.redistribution_stats(1, 4) == (7, 11)
+        assert engine.redistribution_bytes(1, 4) == 11
+
+    def test_replicated_link_model_shapes(self):
+        from repro.malleability import replicated_link_model
+
+        m = replicated_link_model(1000)
+        assert m(2, 6) == {"bytes_stayed": 2000, "bytes_moved": 4000}
+        assert m(6, 3) == {"bytes_stayed": 3000, "bytes_moved": 0}
+        assert m(4, 4) == {"bytes_stayed": 0, "bytes_moved": 0}
+        assert m(0, 4) == {"bytes_stayed": 0, "bytes_moved": 0}
+
+    def test_shrink_timeline_charges_stayed_bytes(self):
+        cm = MN5.with_link_bandwidths(local=20.0e9)
+        tl = shrink_timeline(ShrinkKind.TS, cm, doomed_world_sizes=[C],
+                             bytes_total=0, bytes_stayed=10 ** 9)
+        assert tl.bytes_stayed == 10 ** 9 and tl.bytes_moved == 0
+        assert tl.span(Stage.REDISTRIBUTION) == pytest.approx(
+            cm.redist_alpha + 10 ** 9 / 20.0e9)
+
+
 class TestEnginePlanning:
     def test_plan_shrink_captures_doomed_sizes(self):
         pool = DevicePool(devices=[object() for _ in range(6)], devices_per_node=1)

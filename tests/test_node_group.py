@@ -1,0 +1,136 @@
+"""Uneven DevicePool edge cases: width-vector validation, exhaustion
+under uneven allocation, whole-node release on shrink, and RMS policy
+grants clamping against an uneven pool."""
+import pytest
+
+from repro.core import Strategy
+from repro.elastic import DevicePool, ElasticRuntime
+from repro.elastic.rms import (
+    BackfillPolicy,
+    ClusterState,
+    JobSpec,
+    SimulatedRMS,
+)
+
+
+def uneven_pool(widths=(2, 1, 2, 1), extra=0):
+    devs = [object() for _ in range(sum(widths) + extra)]
+    return DevicePool(devices=devs, node_widths=widths)
+
+
+class TestUnevenPartition:
+    def test_widths_partition_in_pool_order(self):
+        devs = [object() for _ in range(6)]
+        pool = DevicePool(devices=devs, node_widths=(2, 1, 3))
+        assert pool.node_widths == (2, 1, 3)
+        assert pool.nodes[0] == tuple(devs[0:2])
+        assert pool.nodes[1] == tuple(devs[2:3])
+        assert pool.nodes[2] == tuple(devs[3:6])
+        assert pool.width(0) == 2 and pool.width(2) == 3
+        assert not pool.uniform
+        assert pool.total_devices() == 6
+
+    def test_width_vector_device_count_mismatch_raises(self):
+        with pytest.raises(ValueError, match="needs 7 devices"):
+            DevicePool(devices=[object()] * 6, node_widths=(2, 2, 3))
+
+    def test_extra_devices_are_ignored(self):
+        pool = uneven_pool(widths=(2, 1), extra=3)
+        assert pool.n_nodes == 2 and pool.total_devices() == 3
+
+    def test_invalid_widths_raise(self):
+        with pytest.raises(ValueError):
+            DevicePool(devices=[object()] * 4, node_widths=())
+        with pytest.raises(ValueError):
+            DevicePool(devices=[object()] * 4, node_widths=(2, 0))
+        with pytest.raises(ValueError):
+            DevicePool(devices=[object()] * 4, node_widths=(2,),
+                       devices_per_node=2)
+
+    def test_devices_per_node_undefined_when_uneven(self):
+        pool = uneven_pool()
+        with pytest.raises(ValueError, match="uneven"):
+            pool.devices_per_node
+        # a width vector that HAPPENS to be uniform keeps the accessor
+        assert DevicePool(devices=[object()] * 4,
+                          node_widths=(2, 2)).devices_per_node == 2
+
+
+class TestUnevenRuntime:
+    def make_runtime(self, widths=(2, 1, 2, 1)):
+        return ElasticRuntime(pool=uneven_pool(widths),
+                              strategy=Strategy.PARALLEL_DIFFUSIVE,
+                              initial_nodes=1)
+
+    def test_expand_allocates_uneven_widths(self):
+        rt = self.make_runtime()
+        assert rt.ranks_in_use() == 2          # node 0 is 2 wide
+        rec = rt.expand(4)
+        assert rec.mechanism == "diffusive"
+        assert rt.n_nodes == 4
+        assert rt.ranks_in_use() == 6          # 2+1+2+1
+        # every world is node-confined and matches its node's width
+        for w in rt.state.worlds.values():
+            assert len(w.nodes) == 1
+            assert w.size == rt.pool.width(w.nodes[0])
+
+    def test_shrink_returns_whole_uneven_nodes(self):
+        rt = self.make_runtime()
+        rt.expand(4)
+        rec = rt.shrink_nodes([2, 3])
+        assert rec.mechanism == "termination_shrinkage"
+        assert rec.nodes_returned == (2, 3)
+        assert rt.pool.free == {2, 3}
+        # the freed nodes still own their complete (uneven) device sets
+        assert len(rt.pool.nodes[2]) == 2 and len(rt.pool.nodes[3]) == 1
+        assert rt.ranks_in_use() == 3
+
+    def test_exhaustion_under_uneven_allocation(self):
+        rt = self.make_runtime(widths=(2, 1))
+        with pytest.raises(RuntimeError, match="exhausted"):
+            rt.expand(5)
+        # the failed expand must not have leaked any acquisitions
+        assert rt.pool.free == {1}
+
+    def test_homogeneous_only_strategy_rejected_on_uneven_pool(self):
+        rt = ElasticRuntime(pool=uneven_pool(), initial_nodes=1)  # hypercube
+        with pytest.raises(ValueError, match="PARALLEL_DIFFUSIVE"):
+            rt.expand(4)
+
+    def test_regrow_reuses_lowest_freed_node(self):
+        rt = self.make_runtime()
+        rt.expand(4)
+        rt.shrink_nodes([1, 2])
+        rec = rt.expand(3)
+        assert rec.nodes_after == 3
+        assert sorted(rt.state.nodes_in_use()) == [0, 1, 3]
+        assert rt.ranks_in_use() == 2 + 1 + 1
+
+
+class TestPolicyOverUnevenPool:
+    def test_from_policy_grants_clamp_against_uneven_pool(self):
+        """RMS grants are node-counted: an uneven DevicePool clamps a
+        greedy job to its node count, and the granted trace replays on
+        the SAME uneven pool through the live runtime."""
+        pool = uneven_pool(widths=(2, 1, 2, 1))
+        cluster = ClusterState.from_pool(
+            pool, jobs=(JobSpec("train", min_nodes=1, max_nodes=99),))
+        assert cluster.total_nodes == 4
+        policy = BackfillPolicy()
+        trace = policy.generate(cluster)
+        sc = trace.scenario("train")
+        peak = sc.max_nodes()
+        assert peak <= pool.n_nodes      # clamped to the uneven pool
+        rms = SimulatedRMS.from_policy(policy, cluster)
+        rt = ElasticRuntime(pool=pool,
+                            strategy=Strategy.PARALLEL_DIFFUSIVE,
+                            initial_nodes=sc.initial_nodes)
+        for ev in rms.events_until(10 ** 9):
+            if ev.kind.value == "grow" and ev.target_nodes > rt.n_nodes:
+                rt.expand(ev.target_nodes)
+            elif ev.kind.value == "shrink":
+                victims = [n for n in ev.nodes
+                           if n in rt.state.nodes_in_use()]
+                if victims:
+                    rt.shrink_nodes(victims)
+        assert rt.n_nodes <= pool.n_nodes

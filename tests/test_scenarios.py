@@ -22,11 +22,13 @@ from repro.malleability import (
 )
 
 DUAL_PATH = ["steady-cycle", "burst-arrival", "node-failures", "straggler-churn"]
+HETERO = ["hetero-nasp", "hetero-redist"]
 
 
 def _key(rec):
     return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
-            rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved)
+            rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved,
+            rec.queued_s, rec.bytes_stayed)
 
 
 class TestSimLiveAgreement:
@@ -34,7 +36,7 @@ class TestSimLiveAgreement:
     identical timeline-derived downtime numbers (exact float equality —
     both paths charge the same engine timeline)."""
 
-    @pytest.mark.parametrize("name", DUAL_PATH)
+    @pytest.mark.parametrize("name", DUAL_PATH + HETERO)
     def test_downtimes_identical(self, name):
         sc = get_scenario(name)
         sim = run_scenario_sim(sc)
@@ -64,14 +66,45 @@ class TestScenarioStructure:
         assert set(DUAL_PATH) <= names
         assert "hetero-nasp" in names
 
-    def test_heterogeneous_is_sim_only(self):
+    def test_heterogeneous_runs_both_executors(self):
+        """hetero-nasp is no longer simulator-only: the live DevicePool
+        partitions with the uneven width vector and agrees per event."""
         sc = get_scenario("hetero-nasp")
-        assert sc.sim_only
-        with pytest.raises(ValueError):
-            run_scenario_live(sc)
-        recs = run_scenario_sim(sc)
-        assert any(r.mechanism == "diffusive" for r in recs)
-        assert any(r.mechanism == "termination_shrinkage" for r in recs)
+        assert sc.heterogeneous
+        sim = run_scenario_sim(sc)
+        live = run_scenario_live(sc)
+        assert [_key(r) for r in sim] == [_key(r) for r in live]
+        assert any(r.mechanism == "diffusive" for r in sim)
+        assert any(r.mechanism == "termination_shrinkage" for r in sim)
+
+    def test_hetero_shrink_returns_whole_uneven_nodes(self):
+        """The paper's headline property on an uneven pool: a TS shrink
+        hands COMPLETE nodes back, whatever their width."""
+        from repro.malleability import scenario_pool
+
+        sc = get_scenario("hetero-nasp")
+        pool = scenario_pool(sc)
+        run_scenario_live(sc, pool=pool)
+        # trace ends at 7 of 8 nodes -> exactly one node is free again,
+        # and every free node still owns its full width of devices
+        assert len(pool.free) == 1
+        for node in pool.free:
+            assert len(pool.nodes[node]) == sc.core_pool[node]
+
+    def test_mismatched_explicit_pool_rejected(self):
+        """A caller-supplied pool whose widths disagree with the trace
+        would silently break sim==live parity — it must raise instead."""
+        from repro.elastic import DevicePool
+
+        sc = get_scenario("hetero-nasp")
+        uniform = DevicePool(devices=[object()] * sc.max_nodes(),
+                             devices_per_node=1)
+        with pytest.raises(ValueError, match="widths"):
+            run_scenario_live(sc, pool=uniform)
+        # homogeneous traces are guarded too
+        wide = DevicePool(devices=[object()] * 16, devices_per_node=2)
+        with pytest.raises(ValueError, match="widths"):
+            run_scenario_live(get_scenario("steady-cycle"), pool=wide)
 
     def test_duplicate_registration_raises(self):
         sc = registered_scenarios()[0]
@@ -145,6 +178,50 @@ class TestRedistributionAware:
         assert any(r.bytes_moved > 0 for r in sim)
 
 
+class TestPerLinkRedistribution:
+    """Stage-3 pricing split per link: bytes_stayed charged against
+    redist_bw_local, bytes_moved against redist_bw_cross."""
+
+    def test_hetero_redist_charges_both_link_classes(self):
+        recs = run_scenario_sim(get_scenario("hetero-redist"))
+        expands = [r for r in recs if r.kind == "expand"]
+        assert expands and all(r.bytes_moved > 0 for r in expands)
+        assert all(r.bytes_stayed > 0 for r in expands)
+        # the shrink leaves survivor replicas in place: local link only
+        shrink = next(r for r in recs if r.kind == "shrink")
+        assert shrink.bytes_moved == 0 and shrink.bytes_stayed > 0
+
+    def test_link_bandwidths_change_est_wall(self):
+        sc = get_scenario("hetero-redist")
+        from dataclasses import replace
+
+        slow_cross = replace(sc, name="tmp-slow-cross",
+                             redist_bw_cross=sc.redist_bw_cross / 10)
+        base = run_scenario_sim(sc)
+        slow = run_scenario_sim(slow_cross)
+        for b, s in zip(base, slow):
+            assert (b.bytes_moved, b.bytes_stayed) == (s.bytes_moved,
+                                                       s.bytes_stayed)
+            if b.bytes_moved > 0:
+                assert s.est_wall_s > b.est_wall_s
+
+    def test_aggregate_traces_reproduce_single_bandwidth_numbers(self):
+        """A trace without split bandwidths keeps the moved-only model:
+        bytes_stayed stays 0 and est_wall is the pre-split aggregate
+        charge, bit for bit."""
+        from repro.malleability import MN5
+
+        sc = get_scenario("redist-cycle")
+        assert not sc.link_aware
+        recs = run_scenario_sim(sc)
+        grow = next(r for r in recs if r.kind == "expand")
+        assert grow.bytes_stayed == 0
+        plain = run_scenario_sim(get_scenario("steady-cycle"))
+        base = next(r for r in plain if r.kind == "expand")
+        assert grow.est_wall_s == base.est_wall_s + MN5.redist_alpha + (
+            grow.bytes_moved / MN5.redist_bw)
+
+
 class TestRMSBridge:
     def test_from_scenario_preserves_trace(self):
         sc = get_scenario("node-failures")
@@ -162,41 +239,62 @@ TRAINER_SCRIPT = textwrap.dedent("""
     import numpy as np
     from repro.configs import smoke_config
     from repro.elastic import ElasticTrainer
-    from repro.malleability import get_scenario, run_scenario_sim
+    from repro.malleability import (
+        get_scenario, heterogeneous_pool, run_scenario_sim,
+    )
     from repro.models import Model
 
     model = Model(smoke_config("stablelm_3b"))
-    for name in ("steady-cycle", "burst-arrival", "node-failures",
-                 "straggler-churn"):
-        sc = get_scenario(name)
+
+    def run_one(name, sc, batch):
         sim = run_scenario_sim(sc)
-        tr = ElasticTrainer.from_scenario(model, sc, batch=8, seq=32)
+        tr = ElasticTrainer.from_scenario(model, sc, batch=batch, seq=32)
         hist = tr.run(sc.steps)
         live = tr.runtime.history
         assert len(live) == len(sim), (name, len(live), len(sim))
         for s, l in zip(sim, live):
             assert l.downtime_s == s.downtime_s, (name, s, l)
             assert l.est_wall_s == s.est_wall_s, (name, s, l)
+            assert l.queued_s == s.queued_s, (name, s, l)
+            assert (l.bytes_moved, l.bytes_stayed) == (
+                s.bytes_moved, s.bytes_stayed), (name, s, l)
             assert (l.nodes_before, l.nodes_after) == (
                 s.nodes_before, s.nodes_after), (name, s, l)
         losses = np.array(tr.losses())
         assert np.isfinite(losses).all(), name
         print("SCENARIO_TRAINER_OK", name, len(live), "reconfigs")
+
+    for name in ("steady-cycle", "burst-arrival", "node-failures",
+                 "straggler-churn"):
+        run_one(name, get_scenario(name), batch=8)
+
+    # Heterogeneous uneven-width pools through the FULL trainer loop:
+    # the registered hetero-redist trace (pool (2,1,2,1), per-link
+    # priced pytree), plus a width-scaled hetero-nasp built by the same
+    # builder (the paper trace's 20/32-wide nodes need 208 host
+    # devices; (2,1) preserves the trace shape on 6).  Node counts
+    # along both traces are 2/6/3/5 ranks -> batch 30 shards cleanly.
+    run_one("hetero-redist", get_scenario("hetero-redist"), batch=30)
+    run_one("hetero-nasp-small",
+            heterogeneous_pool(name="hetero-nasp-small", nodes=4,
+                               widths=(2, 1)), batch=30)
 """)
 
 
 @pytest.mark.slow
 def test_trainer_loop_matches_simulator_downtime():
-    """Full ElasticTrainer loop on every dual-path scenario: its runtime
-    history must carry exactly the simulator's timeline-derived downtimes."""
+    """Full ElasticTrainer loop on every dual-path scenario — the
+    heterogeneous uneven-width traces included: its runtime history must
+    carry exactly the simulator's timeline-derived downtimes, queue
+    spans, and per-link bytes."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     proc = subprocess.run(
         [sys.executable, "-c", TRAINER_SCRIPT], capture_output=True, text=True,
-        timeout=1200, env=env,
+        timeout=1800, env=env,
     )
     assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
-    for name in DUAL_PATH:
+    for name in DUAL_PATH + ["hetero-redist", "hetero-nasp-small"]:
         assert f"SCENARIO_TRAINER_OK {name}" in proc.stdout
 
 
@@ -212,8 +310,11 @@ BYTES_AGREEMENT_SCRIPT = textwrap.dedent("""
 
     # One-event-per-step scenarios: the trainer's single reshard per
     # drained step covers exactly one engine-charged event, so the
-    # measured bytes must equal the charged/simulated bytes EXACTLY.
-    for name in ("steady-cycle", "burst-arrival"):
+    # measured bytes must equal the charged/simulated bytes EXACTLY —
+    # per link: bytes_moved AND bytes_stayed.  hetero-redist runs the
+    # same gate over an uneven (2,1,2,1) pool with split bandwidths.
+    for name, batch in (("steady-cycle", 8), ("burst-arrival", 8),
+                        ("hetero-redist", 30)):
         sc = get_scenario(name)
         engine = sc.default_engine()
         engine.bytes_model = PytreeBytesModel(model)
@@ -222,7 +323,7 @@ BYTES_AGREEMENT_SCRIPT = textwrap.dedent("""
         engine_live = sc.default_engine()
         engine_live.bytes_model = PytreeBytesModel(model)
         tr = ElasticTrainer.from_scenario(model, sc, engine=engine_live,
-                                          batch=8, seq=32)
+                                          batch=batch, seq=32)
         tr.run(sc.steps)
         live = tr.runtime.history
         assert len(live) == len(sim) == len(tr.transfer_log), name
@@ -230,8 +331,10 @@ BYTES_AGREEMENT_SCRIPT = textwrap.dedent("""
         for s, l, t in zip(sim, live, tr.transfer_log):
             # simulator == live-charged == live-MEASURED, byte for byte
             assert s.bytes_moved == l.bytes_moved, (name, s, l)
+            assert s.bytes_stayed == l.bytes_stayed, (name, s, l)
             assert t["charged_bytes_moved"] == s.bytes_moved, (name, s, t)
             assert t["bytes_moved"] == s.bytes_moved, (name, s, t)
+            assert t["bytes_stayed"] == s.bytes_stayed, (name, s, t)
             assert s.est_wall_s == l.est_wall_s, (name, s, l)
             moved_any |= s.bytes_moved > 0
         assert moved_any, name
@@ -241,15 +344,16 @@ BYTES_AGREEMENT_SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_simulated_bytes_equal_measured_bytes_exactly():
-    """Acceptance: the simulator's per-event bytes_moved equals the live
-    runtime's *measured* transfer_stats value exactly, per scenario, when
-    both charge through PytreeBytesModel."""
+    """Acceptance: the simulator's per-event bytes_moved AND bytes_stayed
+    equal the live runtime's *measured* transfer_stats values exactly,
+    per scenario (uneven pools included), when both charge through
+    PytreeBytesModel."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     proc = subprocess.run(
         [sys.executable, "-c", BYTES_AGREEMENT_SCRIPT], capture_output=True,
-        text=True, timeout=1200, env=env,
+        text=True, timeout=1800, env=env,
     )
     assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
-    for name in ("steady-cycle", "burst-arrival"):
+    for name in ("steady-cycle", "burst-arrival", "hetero-redist"):
         assert f"BYTES_AGREEMENT_OK {name}" in proc.stdout
