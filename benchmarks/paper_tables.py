@@ -274,6 +274,47 @@ def table_hetero_strategies(traces: tuple[str, ...] = HETERO_TRACES) -> list[dic
     return rows
 
 
+# -------------------------------------------- topology-aware placement --
+TOPO_TRACES = ("topo-nasp", "topo-redist")
+
+
+def table_topology(traces: tuple[str, ...] = TOPO_TRACES) -> list[dict]:
+    """Topo vs diffusive vs classics on the rack-topology traces.
+
+    Every vector-capable registered strategy replays each topology-aware
+    trace through the simulator (all of them price stage-3 bytes per
+    distance class — the rack tree rides on the engine); only ``topo``
+    also *places* against it: rack-local regrows and rack-vacating
+    shrinks, which is what moves bytes off the cross_rack link.  The
+    per-class byte columns are the table's point: on ``topo-redist`` the
+    greedy classics leave the vacated rack fragmented and keep paying
+    cross-rack bandwidth where topo pays intra-rack.
+    """
+    rows = []
+    for name in traces:
+        sc = get_scenario(name)
+        for spec in registered_strategies():
+            if spec.homogeneous_only and sc.heterogeneous:
+                continue
+            recs = run_scenario_sim(
+                sc, engine=sc.default_engine(strategy=spec.key))
+            by_class = {"intra_node": 0, "intra_rack": 0, "cross_rack": 0}
+            for rec in recs:
+                for cls, b in rec.bytes_by_class.items():
+                    by_class[cls] += b
+            rows.append({
+                "scenario": name,
+                "strategy": spec.key,
+                "events": len(recs),
+                "makespan_s": round(sum(r.est_wall_s for r in recs), 6),
+                "downtime_s": round(sum(r.downtime_s for r in recs), 6),
+                "bytes_intra_node": by_class["intra_node"],
+                "bytes_intra_rack": by_class["intra_rack"],
+                "bytes_cross_rack": by_class["cross_rack"],
+            })
+    return rows
+
+
 # ------------------------------------------------ RMS policy x strategy --
 def policy_sweep(traces: tuple[str, ...] = POLICY_SCENARIO_NAMES) -> list[dict]:
     """Makespan/downtime/bytes envelopes: strategy x RMS-policy trace.

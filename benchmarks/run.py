@@ -13,9 +13,12 @@ benchmark job uploads stdout as a workflow artifact.
 
 ``--json`` emits the same rows as a machine-readable document — this is
 the bench-regression gate's interchange format: ``BENCH_baseline.json``
-at the repo root is a committed ``--smoke --json`` run, and
-``scripts/check_bench.py`` fails CI when any row's est_wall drifts more
-than 10% from it.
+at the repo root is a committed ``--smoke --json`` run (refresh it with
+``scripts/check_bench.py --update``), and ``scripts/check_bench.py``
+fails CI when any row's est_wall drifts more than 10% from it.  JSON
+rows are emitted in a stable sort order (by row name, so scenario then
+strategy; duplicates keep their relative order), which keeps baseline
+diffs reviewable and ``--update`` runs byte-reproducible.
 """
 from __future__ import annotations
 
@@ -43,6 +46,7 @@ from paper_tables import (  # noqa: E402
     table2_trace,
     table_hetero_strategies,
     table_redistribution,
+    table_topology,
 )
 
 SMOKE_MN5_NODES = [1, 2, 4]
@@ -98,6 +102,14 @@ def collect_rows(smoke: bool = False) -> list[dict]:
             f"downtime_us={r['downtime_s']*1e6:.0f};events={r['events']};"
             f"bytes={r['bytes_moved']};stayed={r['bytes_stayed']}")
 
+    for r in table_topology():
+        add(f"topo/{r['scenario']}/{r['strategy']}",
+            r["makespan_s"] * 1e6,
+            f"downtime_us={r['downtime_s']*1e6:.0f};events={r['events']};"
+            f"intra_node={r['bytes_intra_node']};"
+            f"intra_rack={r['bytes_intra_rack']};"
+            f"cross_rack={r['bytes_cross_rack']}")
+
     for r in table_redistribution(archs):
         add(f"redist/{r['arch']}/{r['bytes_model']}/I{r['I']}-N{r['N']}",
             r["time_s"] * 1e6,
@@ -136,6 +148,11 @@ def main(argv=None) -> None:
     envelopes = paper_envelopes(mn5, nasp)
 
     if args.as_json:
+        # Stable row order (scenario, strategy — encoded in the name):
+        # baseline diffs stay reviewable and --update is reproducible.
+        # sorted() is stable, so duplicate names keep their relative
+        # order and the gate's #k disambiguation is unaffected.
+        rows = sorted(rows, key=lambda r: r["name"])
         print(json.dumps(
             {
                 "smoke": args.smoke,

@@ -1,11 +1,18 @@
-"""Bench-regression gate: compare a benchmark run against the baseline.
+"""Bench-regression gate: compare a benchmark run against the baseline,
+or deterministically regenerate the baseline itself.
 
 Usage:
+    # gate (CI): fail on >10% est_wall drift per row
     PYTHONPATH=src python benchmarks/run.py --smoke --json > current.json
     python scripts/check_bench.py BENCH_baseline.json current.json
 
-Both files are ``benchmarks/run.py --json`` documents.  The gate fails
-(exit 1) when, for any table row present in the baseline:
+    # refresh the committed baseline (what the workflow_dispatch CI job
+    # runs; byte-identical to piping run.py --smoke --json yourself)
+    python scripts/check_bench.py --update [BENCH_baseline.json]
+
+Both files are ``benchmarks/run.py --json`` documents (rows are emitted
+in a stable name-sorted order, so regenerated baselines diff cleanly).
+The gate fails (exit 1) when, for any table row present in the baseline:
 
 * the row is missing from the current run (a table silently shrank), or
 * its ``us_per_call`` (simulated est_wall in microseconds) drifts more
@@ -14,17 +21,24 @@ Both files are ``benchmarks/run.py --json`` documents.  The gate fails
   non-zero.
 
 Rows only present in the current run are reported as informational —
-new tables are how the benchmark surface grows — and the gate prints
-every drifting row before failing, so the artifact shows the whole
-regression at once.  Refresh the baseline deliberately (rerun the two
-commands above and commit) whenever a PR *intends* to move est_wall.
+new tables are how the benchmark surface grows — and on failure the
+gate prints a per-row drift table covering EVERY offending row (worst
+drift first), so the CI log shows the whole regression at once.
+Refresh the baseline deliberately (``--update`` + commit) whenever a PR
+*intends* to move est_wall.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
 import json
+import os
 import sys
 from typing import Dict, List, Tuple
+
+DEFAULT_BASELINE = "BENCH_baseline.json"
+_NAME_W = 44
 
 
 def index_rows(doc: dict) -> Dict[str, float]:
@@ -32,7 +46,9 @@ def index_rows(doc: dict) -> Dict[str, float]:
 
     Some tables legitimately repeat a name (e.g. one ``fail`` row per
     victim node in a failure wave), so occurrences are disambiguated in
-    order: ``name``, ``name#1``, ``name#2`` ...
+    order: ``name``, ``name#1``, ``name#2`` ...  (name-stable sorting in
+    run.py keeps duplicates in their original relative order, so the
+    suffixes match across runs).
     """
     out: Dict[str, float] = {}
     seen: Dict[str, int] = {}
@@ -44,41 +60,98 @@ def index_rows(doc: dict) -> Dict[str, float]:
     return out
 
 
+def _row(status: str, name: str, base: str, cur: str, drift: str) -> str:
+    return (f"{status:<8} {name:<{_NAME_W}} {base:>12} {cur:>12} {drift:>8}")
+
+
 def compare(
     baseline: dict, current: dict, tolerance: float = 0.10
 ) -> Tuple[List[str], List[str]]:
-    """Return ``(failures, infos)`` comparing two ``--json`` documents."""
+    """Return ``(failures, infos)`` comparing two ``--json`` documents.
+
+    Failures are pre-formatted drift-table rows (status, row name,
+    baseline us, current us, relative drift), worst drift first.
+    """
     base = index_rows(baseline)
     cur = index_rows(current)
-    failures: List[str] = []
+    failing: List[Tuple[float, str]] = []   # (|drift| sort key, row)
     infos: List[str] = []
     for name, b in base.items():
         if name not in cur:
-            failures.append(f"MISSING  {name}: baseline {b:.0f} us, no current row")
+            failing.append((float("inf"), _row(
+                "MISSING", name, f"{b:.0f}", "—", "—")))
             continue
         c = cur[name]
         if b == 0.0:
             if c != 0.0:
-                failures.append(f"NONZERO  {name}: baseline 0 us -> {c:.0f} us")
+                failing.append((float("inf"), _row(
+                    "NONZERO", name, "0", f"{c:.0f}", "—")))
             continue
         drift = (c - b) / b
         if abs(drift) > tolerance:
-            failures.append(
-                f"DRIFT    {name}: {b:.0f} us -> {c:.0f} us ({drift:+.1%})"
-            )
+            failing.append((abs(drift), _row(
+                "DRIFT", name, f"{b:.0f}", f"{c:.0f}", f"{drift:+.1%}")))
     for name in cur:
         if name not in base:
             infos.append(f"NEW      {name}: {cur[name]:.0f} us (not in baseline)")
+    # Ascending by -|drift|: MISSING/NONZERO (infinite severity) first,
+    # then worst drift first.
+    failures = [row for _, row in sorted(failing, key=lambda t: -t[0])]
     return failures, infos
+
+
+def update_baseline(path: str) -> int:
+    """Regenerate ``path`` as a fresh ``--smoke --json`` document.
+
+    Runs the benchmark driver in-process and writes its exact stdout, so
+    the result is byte-identical to
+    ``PYTHONPATH=src python benchmarks/run.py --smoke --json > path``
+    (the simulator is deterministic and rows are name-sorted, so two
+    refreshes of the same tree produce the same bytes).
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for p in (os.path.join(repo, "benchmarks"), os.path.join(repo, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    import run as bench_run  # benchmarks/run.py
+
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        bench_run.main(["--smoke", "--json"])
+    text = buf.getvalue()
+    doc = json.loads(text)          # refuse to write a malformed baseline
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"check_bench: wrote {len(doc['rows'])} rows to {path}")
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline", help="committed BENCH_baseline.json")
-    ap.add_argument("current", help="fresh benchmarks/run.py --smoke --json output")
+    ap.add_argument("baseline", nargs="?", default=DEFAULT_BASELINE,
+                    help=f"committed baseline (default {DEFAULT_BASELINE})")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="fresh benchmarks/run.py --smoke --json output")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative est_wall drift per row (default 0.10)")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the baseline file deterministically "
+                         "instead of comparing")
     args = ap.parse_args(argv)
+
+    if args.update:
+        if args.current is not None:
+            ap.error("--update takes only the baseline path")
+        path = args.baseline
+        if not os.path.isabs(path):
+            # Resolve against the repo root, not the CWD: running the
+            # script from elsewhere must refresh the committed baseline,
+            # not silently create a stray copy.
+            repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+            path = os.path.join(repo, path)
+        return update_baseline(path)
+    if args.current is None:
+        ap.error("compare mode needs both baseline and current files")
 
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -91,10 +164,12 @@ def main(argv=None) -> int:
     failures, infos = compare(baseline, current, tolerance=args.tolerance)
     for line in infos:
         print(line)
-    for line in failures:
-        print(line, file=sys.stderr)
     n = len(index_rows(baseline))
     if failures:
+        print(_row("status", "row", "baseline_us", "current_us", "drift"),
+              file=sys.stderr)
+        for line in failures:
+            print(line, file=sys.stderr)
         print(f"check_bench: {len(failures)}/{n} baseline rows FAILED "
               f"(tolerance {args.tolerance:.0%})", file=sys.stderr)
         return 1

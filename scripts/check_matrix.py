@@ -1,0 +1,105 @@
+"""Strategy x scenario completeness gate.
+
+Replays EVERY registered scenario under EVERY registered spawning
+strategy through the timeline-charging simulator and fails (exit 1)
+when:
+
+* any compatible pair raises — a new strategy or scenario that silently
+  cannot run the rest of the registry is exactly the coverage rot this
+  gate exists to stop;
+* any registered strategy ends up exercised by zero scenarios, or any
+  registered scenario by zero strategies — a registry entry nothing can
+  run is dead weight at best and a wiring bug at worst;
+* a compatible pair produces zero reconfiguration records — the trace
+  ran but did nothing, so its numbers pin nothing.
+
+The only pairs skipped are the *documented* incompatibility: a
+``homogeneous_only`` strategy (hypercube, §4.1) on a heterogeneous
+uneven-width pool, which the planner rejects by design with its §4.2
+guidance error.
+
+Usage:
+    PYTHONPATH=src python scripts/check_matrix.py [-v]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def run_matrix(verbose: bool = False) -> int:
+    from repro.core import registered_strategies
+    from repro.malleability import registered_scenarios, run_scenario_sim
+
+    strategies = registered_strategies()
+    scenarios = registered_scenarios()
+    failures: list[str] = []
+    exercised_strategy: dict[str, int] = {s.key: 0 for s in strategies}
+    exercised_scenario: dict[str, int] = {sc.name: 0 for sc in scenarios}
+    pairs = skipped = 0
+
+    for sc in scenarios:
+        for spec in strategies:
+            if spec.homogeneous_only and sc.heterogeneous:
+                skipped += 1      # documented §4.1/§4.2 incompatibility
+                continue
+            pairs += 1
+            try:
+                recs = run_scenario_sim(
+                    sc, engine=sc.default_engine(strategy=spec.key))
+            except Exception:
+                failures.append(
+                    f"ERROR    {sc.name} x {spec.key}:\n"
+                    + traceback.format_exc(limit=3)
+                )
+                continue
+            if not recs:
+                failures.append(
+                    f"EMPTY    {sc.name} x {spec.key}: trace produced no "
+                    "reconfiguration records"
+                )
+                continue
+            exercised_strategy[spec.key] += 1
+            exercised_scenario[sc.name] += 1
+            if verbose:
+                print(f"ok  {sc.name:<22} x {spec.key:<12} "
+                      f"{len(recs)} events")
+
+    for key, n in exercised_strategy.items():
+        if n == 0:
+            failures.append(
+                f"UNUSED   strategy {key!r} is exercised by no scenario")
+    for name, n in exercised_scenario.items():
+        if n == 0:
+            failures.append(
+                f"UNUSED   scenario {name!r} is exercised by no strategy")
+
+    for line in failures:
+        print(line, file=sys.stderr)
+    if failures:
+        print(
+            f"check_matrix: FAILED — {len(failures)} problems across "
+            f"{pairs} pairs ({len(strategies)} strategies x "
+            f"{len(scenarios)} scenarios, {skipped} documented skips)",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"check_matrix: {pairs} strategy x scenario pairs OK "
+        f"({len(strategies)} strategies x {len(scenarios)} scenarios, "
+        f"{skipped} documented homogeneous-only skips)"
+    )
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print one line per passing pair")
+    args = ap.parse_args(argv)
+    return run_matrix(verbose=args.verbose)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,8 @@ Faithful implementations of:
   * Rank reordering               (§4.5, Eq. 9)      -> :mod:`.reorder`
   * TS/ZS/SS shrink planning      (§4.6-4.7)         -> :mod:`.shrink`
   * MaM-style manager facade      (§3)               -> :mod:`.manager`
+  * Cluster topology + distance classes              -> :mod:`.topology`
+  * Topology-aware spawning strategy ("topo")        -> :mod:`.topo`
 """
 from .connect import (
     ConnectRound,
@@ -50,6 +52,10 @@ from .sync import (
     port_openers,
     spawn_children,
 )
+from .topology import DISTANCE_CLASSES, Topology
+# Importing .topo registers the "topo" strategy in the engine registry
+# (it is an ordinary third-party-style registration).
+from .topo import TOPO_KEY, place_rack_local, plan_topo, vacate_racks
 from .types import (
     SOURCE_GID,
     GroupSpec,
@@ -66,8 +72,11 @@ from .types import (
 )
 
 __all__ = [
+    "DISTANCE_CLASSES",
     "SOURCE_GID",
+    "TOPO_KEY",
     "ClusterState",
+    "Topology",
     "ConnectRound",
     "Event",
     "EventGraph",
@@ -103,11 +112,13 @@ __all__ = [
     "global_order",
     "node_of_rank",
     "nodes_at_step",
+    "place_rack_local",
     "plan_diffusive",
     "plan_hypercube",
     "plan_initial_world_shrink",
     "plan_sequential",
     "plan_shrink",
+    "plan_topo",
     "port_openers",
     "procs_at_step",
     "register_strategy",
@@ -120,4 +131,5 @@ __all__ = [
     "spawn_children",
     "steps_required",
     "strategy_key",
+    "vacate_racks",
 ]

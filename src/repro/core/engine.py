@@ -32,7 +32,7 @@ from __future__ import annotations
 import enum
 import math
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Callable, Optional, Protocol, Sequence, Union
+from typing import TYPE_CHECKING, Callable, Iterable, Optional, Protocol, Sequence, Union
 
 from .connect import binary_connection_schedule, extend_graph_with_connection
 from .diffusive import plan_diffusive
@@ -42,6 +42,7 @@ from .sequential import plan_sequential
 from .shrink import ClusterState
 from .shrink import plan_shrink as _plan_shrink_actions
 from .sync import EventGraph, build_sync_graph
+from .topology import Topology, split_bytes_by_class
 from .types import Method, ShrinkKind, ShrinkPlan, SpawnPlan, Strategy
 
 if TYPE_CHECKING:  # runtime import would be circular (malleability → core)
@@ -75,9 +76,13 @@ class TimelineEvent:
     proceed under application compute when the job runs ASYNC (MaM's
     binary model is the special case 1.0 for spawn, 0.0 elsewhere).
     ``bytes_moved`` / ``bytes_stayed`` are the stage-3 data volumes this
-    event accounts for per link class — moved bytes cross devices over
-    the cross-group link, stayed bytes are re-validated locally —
-    (non-zero only on REDISTRIBUTION events today).
+    event accounts for per link — moved bytes cross devices, stayed
+    bytes are re-validated on the device that already holds them —
+    (non-zero only on REDISTRIBUTION events today).  ``bytes_cross_rack``
+    is the portion of ``bytes_moved`` whose source and destination nodes
+    sit in different racks of the engine's :class:`~repro.core.topology
+    .Topology` (0 without a topology: everything is one rack), so
+    :attr:`bytes_by_class` recovers the full distance-class split.
     """
 
     stage: Stage
@@ -87,6 +92,13 @@ class TimelineEvent:
     overlap_fraction: float = 0.0
     bytes_moved: int = 0
     bytes_stayed: int = 0
+    bytes_cross_rack: int = 0
+
+    @property
+    def bytes_by_class(self) -> dict[str, int]:
+        """Stage-3 bytes per distance class (sums to stayed + moved)."""
+        return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
+                                    self.bytes_cross_rack)
 
     @property
     def duration(self) -> float:
@@ -142,6 +154,17 @@ class Timeline:
         return sum(e.bytes_stayed for e in self.events)
 
     @property
+    def bytes_cross_rack(self) -> int:
+        """Total stage-3 rack-crossing bytes charged across all events."""
+        return sum(e.bytes_cross_rack for e in self.events)
+
+    @property
+    def bytes_by_class(self) -> dict[str, int]:
+        """Stage-3 bytes per distance class across all events."""
+        return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
+                                    self.bytes_cross_rack)
+
+    @property
     def queued_s(self) -> float:
         """Seconds spent queued behind in-flight reconfigurations."""
         return self.span(Stage.QUEUE)
@@ -182,6 +205,7 @@ class Timeline:
                 "overlappable": e.overlappable,
                 "bytes_moved": e.bytes_moved,
                 "bytes_stayed": e.bytes_stayed,
+                "bytes_cross_rack": e.bytes_cross_rack,
             }
             for e in self.events
         ]
@@ -197,19 +221,20 @@ class _TimelineBuilder:
 
     def add(self, stage: Stage, duration: float, label: str = "",
             overlap_fraction: float = 0.0, bytes_moved: int = 0,
-            bytes_stayed: int = 0) -> None:
+            bytes_stayed: int = 0, bytes_cross_rack: int = 0) -> None:
         if duration <= 0.0:
             return
         self._events.append(
             TimelineEvent(stage, self._t, self._t + duration, label,
-                          overlap_fraction, bytes_moved, bytes_stayed)
+                          overlap_fraction, bytes_moved, bytes_stayed,
+                          bytes_cross_rack)
         )
         self._t += duration
 
     def extend(self, events: Sequence[TimelineEvent]) -> None:
         for e in events:
             self.add(e.stage, e.duration, e.label, e.overlap_fraction,
-                     e.bytes_moved, e.bytes_stayed)
+                     e.bytes_moved, e.bytes_stayed, e.bytes_cross_rack)
 
     def build(self) -> Timeline:
         return Timeline(events=tuple(self._events), contention=self._contention)
@@ -227,13 +252,20 @@ class StrategySpec:
 
     ``planner`` has the normalized signature ``(ns, nt, cores, method)``
     where ``cores`` is either C (homogeneous cores-per-node) or the
-    per-node A vector.
+    per-node A vector.  ``topology_aware`` strategies additionally drive
+    *placement*: when the engine carries a :class:`~repro.core.topology
+    .Topology`, :meth:`ReconfigEngine.select_expansion_nodes` places
+    their expansion groups rack-local-first and
+    :meth:`ReconfigEngine.select_release_nodes` shrinks them so whole
+    racks are vacated; topology-blind strategies keep the greedy
+    lowest-id / highest-id orders.
     """
 
     key: str                      # registry key, e.g. "hypercube"
     planner: PlannerFn
     parallel: bool = False        # pays sync/connect/reorder phases (§4.3-4.5)
     homogeneous_only: bool = False
+    topology_aware: bool = False  # placement honours the engine's Topology
     description: str = ""
 
 
@@ -317,6 +349,30 @@ def running_vector(a_vec: Sequence[int], ns: int) -> list[int]:
     return out
 
 
+def _cross_share(total: int, parts: Sequence[tuple[int, bool]]) -> int:
+    """Portion of ``total`` bytes belonging to the cross-marked parts.
+
+    ``parts`` is ``(weight, is_cross)`` per destination, in a
+    deterministic order; ``total`` is distributed proportionally to the
+    weights with exact integer arithmetic (cumulative shares), so the
+    cross and non-cross portions always sum to ``total`` — the invariant
+    the ``bytes_by_class`` reports rely on.
+    """
+    weight_sum = sum(w for w, _ in parts)
+    if total <= 0 or weight_sum <= 0:
+        return 0
+    out = 0
+    cum = 0
+    prev = 0
+    for w, is_cross in parts:
+        cum += w
+        share = total * cum // weight_sum
+        if is_cross:
+            out += share - prev
+        prev = share
+    return out
+
+
 def _as_homogeneous(cores: Union[int, Sequence[int]]) -> int:
     if isinstance(cores, int):
         return cores
@@ -386,7 +442,9 @@ class RedistributionSpec:
     ``bytes_stayed`` is the local-link volume (shards a surviving device
     already holds) when the bytes model reports the per-link split —
     moved-bytes-only models leave it 0 and reproduce the aggregate
-    single-bandwidth charge exactly.
+    single-bandwidth charge exactly.  ``bytes_cross_rack`` is the part
+    of ``bytes_total`` resolved (against the engine's topology and the
+    plan's node placement) to cross racks; 0 without a topology.
     """
 
     layout: tuple[tuple[int, int], ...]
@@ -395,6 +453,13 @@ class RedistributionSpec:
     bytes_per_rank: int = 0
     bytes_total: int = 0
     bytes_stayed: int = 0
+    bytes_cross_rack: int = 0
+
+    @property
+    def bytes_by_class(self) -> dict[str, int]:
+        """Stage-3 bytes per distance class (sums to stayed + total)."""
+        return split_bytes_by_class(self.bytes_stayed, self.bytes_total,
+                                    self.bytes_cross_rack)
 
 
 @dataclass(frozen=True)
@@ -419,6 +484,12 @@ class ReconfigPlan:
     redistribution: Optional[RedistributionSpec] = None
     shrink_world_sizes: tuple[int, ...] = ()   # sizes of TS-doomed worlds
     queue_delay_s: float = 0.0     # RMS arbitration wait before stage 2
+    # Cluster node id of each allocation-vector entry (expansions):
+    # ``node_ids[i]`` is where A-vector slot ``i`` lives.  Backends
+    # acquire the plan's NEW nodes from this list (in order) instead of
+    # greedily, which is what makes placement a priced, first-class
+    # decision; empty means "no explicit placement" (greedy fallback).
+    node_ids: tuple[int, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -447,6 +518,16 @@ class ReconfigOutcome:
     def bytes_stayed(self) -> int:
         """Stage-3 local-link bytes charged on the timeline."""
         return self.timeline.bytes_stayed
+
+    @property
+    def bytes_cross_rack(self) -> int:
+        """Stage-3 rack-crossing bytes charged on the timeline."""
+        return self.timeline.bytes_cross_rack
+
+    @property
+    def bytes_by_class(self) -> dict[str, int]:
+        """Stage-3 bytes per distance class charged on the timeline."""
+        return self.timeline.bytes_by_class
 
     @property
     def queued_s(self) -> float:
@@ -545,6 +626,7 @@ def _connect_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> N
 def expansion_timeline(
     plan: SpawnPlan, cm: "CostModel", bytes_total: int = 0,
     queue_delay_s: float = 0.0, bytes_stayed: int = 0,
+    bytes_cross_rack: int = 0,
 ) -> Timeline:
     """Charge one expansion as the paper's serial stage pipeline.
 
@@ -560,6 +642,9 @@ def expansion_timeline(
             toward downtime.
         bytes_stayed: stage-3 local-link volume (shards surviving
             devices already hold), charged against ``cm.bw_local``.
+        bytes_cross_rack: the rack-crossing portion of ``bytes_total``,
+            charged against ``cm.bw_cross_rack`` (the rest rides the
+            intra-rack link).
     Returns:
         The charged :class:`Timeline`.
     """
@@ -578,21 +663,30 @@ def expansion_timeline(
     # via the intercommunicator MPI_Comm_spawn returns).
     final = cm.connect_merge(plan.nt) if parallel else cm.beta_connect * plan.nt
     tb.add(Stage.FINAL, final, label="final intercomm merge")
-    _redistribution_event(tb, cm, bytes_total, bytes_stayed)
+    _redistribution_event(tb, cm, bytes_total, bytes_stayed, bytes_cross_rack)
     return tb.build()
 
 
 def _redistribution_event(tb: _TimelineBuilder, cm: "CostModel",
-                          bytes_total: int, bytes_stayed: int) -> None:
-    """Append the stage-3 event, priced per link (no bytes, no event)."""
+                          bytes_total: int, bytes_stayed: int,
+                          bytes_cross_rack: int = 0) -> None:
+    """Append the stage-3 event, priced per distance class (no bytes,
+    no event)."""
     if bytes_total <= 0 and bytes_stayed <= 0:
         return
-    label = (f"redistribute {bytes_total} B" if bytes_stayed <= 0 else
-             f"redistribute {bytes_total} B cross + {bytes_stayed} B local")
+    xrack = min(max(0, bytes_cross_rack), max(0, bytes_total))
+    if xrack > 0:
+        label = (f"redistribute {bytes_total - xrack} B intra-rack + "
+                 f"{xrack} B cross-rack + {max(0, bytes_stayed)} B local")
+    elif bytes_stayed > 0:
+        label = f"redistribute {bytes_total} B cross + {bytes_stayed} B local"
+    else:
+        label = f"redistribute {bytes_total} B"
     tb.add(Stage.REDISTRIBUTION,
-           cm.redistribution(bytes_total, bytes_stayed),
+           cm.redistribution(bytes_total, bytes_stayed, xrack),
            label=label, overlap_fraction=cm.redist_overlap,
-           bytes_moved=bytes_total, bytes_stayed=max(0, bytes_stayed))
+           bytes_moved=bytes_total, bytes_stayed=max(0, bytes_stayed),
+           bytes_cross_rack=xrack)
 
 
 def shrink_timeline(
@@ -606,6 +700,7 @@ def shrink_timeline(
     bytes_total: int = 0,
     queue_delay_s: float = 0.0,
     bytes_stayed: int = 0,
+    bytes_cross_rack: int = 0,
 ) -> Timeline:
     """Charge one shrink by mechanism (§4.6-4.7).
 
@@ -648,7 +743,7 @@ def shrink_timeline(
                 cm.ss_respawn(nt, max(1, -(-nt // width)), ns),
                 label="SS respawn",
             )
-    _redistribution_event(tb, cm, bytes_total, bytes_stayed)
+    _redistribution_event(tb, cm, bytes_total, bytes_stayed, bytes_cross_rack)
     return tb.build()
 
 
@@ -669,6 +764,14 @@ class ReconfigEngine:
     asynchronous: bool = False
     bytes_per_rank: int = 0
     cost_model: Optional["CostModel"] = None
+    # Cluster layout (node -> rack -> pod).  When set, stage-3 bytes are
+    # resolved to the distance class between their source and
+    # destination nodes (intra_node / intra_rack / cross_rack) and
+    # topology-aware strategies place expansions rack-local-first and
+    # shrink whole racks (see select_expansion_nodes /
+    # select_release_nodes).  None behaves as a single rack: every moved
+    # byte is intra_rack, reproducing the 2-class local/cross pricing.
+    topology: Optional[Topology] = None
     # Stage-3 bytes model: ``f(ns_ranks, nt_ranks) -> bytes_moved`` (an
     # int charged on the cross link), or — for per-link pricing — a
     # mapping with ``bytes_stayed`` / ``bytes_moved`` keys (the
@@ -687,6 +790,66 @@ class ReconfigEngine:
             from repro.malleability.cost_model import MN5
 
             self.cost_model = MN5
+
+    # ------------------------------------------------------------ placement --
+    def select_expansion_nodes(
+        self,
+        used: Iterable[int],
+        free: Iterable[int],
+        need: int,
+        *,
+        strategy: Optional[StrategyLike] = None,
+    ) -> list[int]:
+        """Pick which free nodes an expansion acquires, in fill order.
+
+        Topology-aware strategies (with a topology configured) place
+        rack-local-first and pack fresh racks whole (see
+        :func:`repro.core.topo.place_rack_local`); everything else keeps
+        the greedy lowest-id order both backends have always used, so
+        plans and timelines are unchanged for existing strategies.
+        """
+        spec = get_strategy(strategy if strategy is not None else self.strategy)
+        if self.topology is not None and spec.topology_aware:
+            from .topo import place_rack_local
+
+            return place_rack_local(self.topology, set(used), set(free), need)
+        return sorted(free)[:need]
+
+    def select_release_nodes(
+        self,
+        used: Iterable[int],
+        n_release: int,
+        *,
+        strategy: Optional[StrategyLike] = None,
+    ) -> list[int]:
+        """Pick which nodes a target-count shrink returns to the RMS.
+
+        Topology-aware strategies vacate whole racks first (see
+        :func:`repro.core.topo.vacate_racks`); everything else releases
+        the highest node ids, the runtime's historical order.
+        """
+        spec = get_strategy(strategy if strategy is not None else self.strategy)
+        if self.topology is not None and spec.topology_aware:
+            from .topo import vacate_racks
+
+            return vacate_racks(self.topology, set(used), n_release)
+        return sorted(used)[-n_release:] if n_release > 0 else []
+
+    def allocation_arg(self, widths: Sequence[int]) -> Union[int, list[int]]:
+        """Planner ``cores`` argument for a node set's width vector.
+
+        Homogeneous-only strategies get the scalar width on a uniform
+        allocation; on an uneven one they get the vector anyway, so the
+        planner raises its §4.2 guidance error ("use
+        PARALLEL_DIFFUSIVE") instead of silently mis-planning.  BOTH
+        executors build their planner input here — the sim == live
+        invariant depends on them never diverging.
+        """
+        out = [int(w) for w in widths]
+        if (get_strategy(self.strategy).homogeneous_only
+                and len(set(out)) == 1):
+            return out[0]
+        return out
 
     # ------------------------------------------------------------- planning --
     def redistribution_stats(self, ns: int, nt: int) -> tuple[int, int]:
@@ -712,6 +875,67 @@ class ReconfigEngine:
         """Stage-3 cross-link (moved) bytes for an ``ns -> nt`` resize."""
         return self.redistribution_stats(ns, nt)[1]
 
+    def _expand_cross_rack_bytes(
+        self, spawn: SpawnPlan, node_ids: Sequence[int], moved: int
+    ) -> int:
+        """Rack-crossing portion of an expansion's moved bytes.
+
+        Each spawned rank receives its proportional share of the moved
+        volume; a destination node whose rack holds NO source rank can
+        only be fed across racks.  Exact integer arithmetic (cumulative
+        shares), so the per-class volumes always sum to ``moved``.
+        Without a topology or explicit placement everything is one rack.
+        """
+        if self.topology is None or moved <= 0 or not node_ids:
+            return 0
+        topo = self.topology
+        src_racks = {
+            topo.rack_of(node_ids[i])
+            for i, r in enumerate(spawn.running)
+            if r > 0 and i < len(node_ids)
+        }
+        parts = [
+            (s, topo.rack_of(node_ids[i]) not in src_racks)
+            for i, s in enumerate(spawn.to_spawn)
+            if s > 0 and i < len(node_ids)
+        ]
+        return _cross_share(moved, parts)
+
+    def _shrink_cross_rack_bytes(
+        self, state: ClusterState, shrink: ShrinkPlan, moved: int
+    ) -> int:
+        """Rack-crossing portion of a shrink's moved bytes.
+
+        Survivors absorb the doomed ranks' shards proportionally, one
+        part per (world, node) a surviving rank sits on — a multi-node
+        initial world spanning racks is accounted node by node — and a
+        destination node whose rack holds NO doomed node receives its
+        share across racks.
+        """
+        if self.topology is None or moved <= 0:
+            return 0
+        topo = self.topology
+        doomed = set(shrink.doomed_wids())
+        victim_racks = {
+            topo.rack_of(n)
+            for a in shrink.actions
+            if a.wid in doomed
+            for n in a.nodes
+        }
+        if not victim_racks:
+            return 0
+        survivors = sorted(
+            (w for w in state.worlds.values() if w.wid not in doomed),
+            key=lambda w: (min(w.nodes), w.wid),
+        )
+        parts = []
+        for w in survivors:
+            for node in sorted({r.node for r in w.ranks}):
+                n_ranks = sum(1 for r in w.ranks if r.node == node)
+                parts.append(
+                    (n_ranks, topo.rack_of(node) not in victim_racks))
+        return _cross_share(moved, parts)
+
     def plan_expand(
         self,
         ns: int,
@@ -721,6 +945,7 @@ class ReconfigEngine:
         strategy: Optional[StrategyLike] = None,
         method: Optional[Method] = None,
         queue_delay_s: float = 0.0,
+        node_ids: Sequence[int] = (),
     ) -> ReconfigPlan:
         """Plan an NS -> NT expansion onto the given allocation.
 
@@ -733,9 +958,16 @@ class ReconfigEngine:
             method: override this engine's method for one plan.
             queue_delay_s: RMS arbitration wait charged as a leading
                 QUEUE timeline event (see :func:`expansion_timeline`).
+            node_ids: cluster node id of each allocation-vector entry
+                (source nodes first, then the placement order from
+                :meth:`select_expansion_nodes`).  Backends acquire the
+                new nodes from this list, and stage-3 bytes resolve
+                their distance class through it; empty keeps the greedy
+                single-rack behaviour.
         Returns:
             A self-contained :class:`ReconfigPlan` (spawn plan, sync
-            graph, connect rounds, resolved redistribution bytes).
+            graph, connect rounds, resolved per-class redistribution
+            bytes).
         """
         spec = get_strategy(strategy if strategy is not None else self.strategy)
         m = method if method is not None else self.method
@@ -754,6 +986,8 @@ class ReconfigEngine:
             bytes_per_rank=self.bytes_per_rank,
             bytes_total=moved,
             bytes_stayed=stayed,
+            bytes_cross_rack=self._expand_cross_rack_bytes(
+                spawn, node_ids, moved),
         )
         return ReconfigPlan(
             kind="expand",
@@ -767,13 +1001,14 @@ class ReconfigEngine:
             connect_rounds=rounds,
             redistribution=redistribution,
             queue_delay_s=max(0.0, queue_delay_s),
+            node_ids=tuple(node_ids),
         )
 
     def plan_shrink(
         self,
         state: ClusterState,
-        release_nodes=None,
-        release_cores=None,
+        release_nodes: Optional[Sequence[int]] = None,
+        release_cores: Optional[dict] = None,
         *,
         queue_delay_s: float = 0.0,
     ) -> ReconfigPlan:
@@ -819,6 +1054,8 @@ class ReconfigEngine:
                 bytes_per_rank=self.bytes_per_rank,
                 bytes_total=moved,
                 bytes_stayed=stayed,
+                bytes_cross_rack=self._shrink_cross_rack_bytes(
+                    state, shrink, moved),
             ),
             queue_delay_s=max(0.0, queue_delay_s),
         )
@@ -831,29 +1068,36 @@ class ReconfigEngine:
         a REDISTRIBUTION event, so ``est_wall`` prices data movement for
         every consumer reading this timeline.
         """
+        cm = self.cost_model
+        assert cm is not None  # resolved in __post_init__
         bytes_total = (
             plan.redistribution.bytes_total if plan.redistribution else 0
         )
         bytes_stayed = (
             plan.redistribution.bytes_stayed if plan.redistribution else 0
         )
+        bytes_cross_rack = (
+            plan.redistribution.bytes_cross_rack if plan.redistribution else 0
+        )
         if plan.kind == "expand":
             assert plan.spawn is not None
             return expansion_timeline(
-                plan.spawn, self.cost_model, bytes_total=bytes_total,
+                plan.spawn, cm, bytes_total=bytes_total,
                 queue_delay_s=plan.queue_delay_s, bytes_stayed=bytes_stayed,
+                bytes_cross_rack=bytes_cross_rack,
             )
         if plan.kind == "shrink":
             assert plan.shrink is not None
             return shrink_timeline(
                 plan.shrink.kind,
-                self.cost_model,
+                cm,
                 ns=plan.ns,
                 nt=plan.nt,
                 doomed_world_sizes=list(plan.shrink_world_sizes) or [1],
                 bytes_total=bytes_total,
                 queue_delay_s=plan.queue_delay_s,
                 bytes_stayed=bytes_stayed,
+                bytes_cross_rack=bytes_cross_rack,
             )
         return Timeline()
 

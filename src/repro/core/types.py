@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 SOURCE_GID = -1  # pseudo group-id of the initial (source) group
 
@@ -105,7 +105,10 @@ class SpawnPlan:
     """
 
     method: Method
-    strategy: Strategy
+    # Built-in plans carry the Strategy enum; third-party registered
+    # strategies (e.g. repro.core.topo) carry their registry key string.
+    # Normalize with repro.core.strategy_key when a label is needed.
+    strategy: Union[Strategy, str]
     nodes: int                     # N, nodes in the target allocation
     cores: tuple[int, ...]         # A vector (cores per node)
     running: tuple[int, ...]       # R vector (ranks running per node)

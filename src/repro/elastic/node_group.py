@@ -15,6 +15,8 @@ from typing import Any, Optional, Sequence
 
 import jax
 
+from repro.core.topology import Topology
+
 
 @dataclass(frozen=True)
 class NodeGroup:
@@ -44,6 +46,10 @@ class DevicePool:
             next ``node_widths[i]`` devices in pool order.  Mutually
             exclusive with a non-default ``devices_per_node``; raises
             if the vector needs more devices than the pool holds.
+        topology: optional :class:`~repro.core.topology.Topology`
+            (node -> rack -> pod tree) over this pool's node ids; must
+            cover every node exactly.  Placement-aware engines read it
+            via :meth:`rack_of`; ``None`` behaves as a single rack.
     """
 
     def __init__(
@@ -51,6 +57,7 @@ class DevicePool:
         devices: Sequence[Any] | None = None,
         devices_per_node: int = 1,
         node_widths: Optional[Sequence[int]] = None,
+        topology: Optional[Topology] = None,
     ):
         devices = list(devices if devices is not None else jax.devices())
         if node_widths is not None:
@@ -74,6 +81,13 @@ class DevicePool:
                 raise ValueError("devices_per_node must be positive")
             widths = [devices_per_node] * (len(devices) // devices_per_node)
         self.node_widths: tuple[int, ...] = tuple(widths)
+        if topology is not None and topology.n_nodes != len(widths):
+            raise ValueError(
+                f"topology covers {topology.n_nodes} nodes but the pool "
+                f"partitions into {len(widths)}; rack_sizes must match "
+                "the node count exactly"
+            )
+        self.topology: Optional[Topology] = topology
         self.nodes: dict[int, tuple[Any, ...]] = {}
         offset = 0
         for i, w in enumerate(widths):
@@ -104,6 +118,12 @@ class DevicePool:
     def width(self, node: int) -> int:
         """Devices owned by ``node`` (its entry in the A vector)."""
         return len(self.nodes[node])
+
+    def rack_of(self, node: int) -> int:
+        """Rack owning ``node`` (0 for the whole pool without a topology)."""
+        if node not in self.nodes:
+            raise KeyError(node)
+        return 0 if self.topology is None else self.topology.rack_of(node)
 
     def total_devices(self) -> int:
         return sum(self.node_widths)

@@ -20,6 +20,7 @@ timeline the simulator reports, by construction.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Optional
 
@@ -32,7 +33,9 @@ from repro.core import (
     ReconfigPlan,
     Strategy,
     apply_shrink,
+    strategy_key,
 )
+from repro.core.topology import split_bytes_by_class
 from repro.malleability import MN5, CostModel
 
 from .node_group import DevicePool, NodeGroup
@@ -60,6 +63,13 @@ class ReconfigRecord:
     bytes_moved: int = 0       # stage-3 cross-link bytes charged on the timeline
     queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
     bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
+    bytes_cross_rack: int = 0  # rack-crossing portion of bytes_moved
+
+    @property
+    def bytes_by_class(self) -> dict[str, int]:
+        """Stage-3 bytes per distance class (sums to stayed + moved)."""
+        return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
+                                    self.bytes_cross_rack)
 
 
 class ElasticRuntime:
@@ -102,11 +112,34 @@ class ElasticRuntime:
                     "explicit `engine` already carries those knobs and the "
                     "runtime would silently ignore them"
                 )
+        if (engine is not None and engine.topology is not None
+                and self.pool.topology is not None
+                and engine.topology != self.pool.topology):
+            raise ValueError(
+                "engine and pool carry different topologies; placement "
+                "and distance-class pricing would silently disagree"
+            )
+        if (engine is not None and engine.topology is not None
+                and engine.topology.n_nodes < self.pool.n_nodes):
+            raise ValueError(
+                f"engine topology covers {engine.topology.n_nodes} nodes "
+                f"but the pool partitions into {self.pool.n_nodes}; "
+                "placement and distance-class pricing would fall off the "
+                "rack tree mid-reconfiguration"
+            )
+        if (engine is not None and engine.topology is None
+                and self.pool.topology is not None):
+            # Adopt the pool's layout so an engine built without one
+            # still prices distance classes over the real rack tree —
+            # on a runtime-local copy, never by mutating the caller's
+            # engine (which may outlive this pool).
+            engine = dataclasses.replace(engine, topology=self.pool.topology)
         self.engine = engine or ReconfigEngine(
             method=method,
             strategy=strategy,
             asynchronous=asynchronous,
             cost_model=cost_model,
+            topology=self.pool.topology,
         )
         self.cost_model = self.engine.cost_model
         self.state = ClusterState()
@@ -162,13 +195,22 @@ class ElasticRuntime:
         strategy's single multi-node group is split one NodeGroup per
         node (the substrate's releasable unit), mirroring the simulator
         backend — the charged timeline still prices the plan's own spawn
-        structure.
+        structure.  A plan carrying explicit ``node_ids`` (placement is
+        the strategy's decision) has its new nodes acquired in exactly
+        that order; without them the historical greedy lowest-id order
+        applies.
         """
         assert plan.spawn is not None
+        in_use = self.state.nodes_in_use()
+        queue = [n for n in plan.node_ids if n not in in_use]
         for g in plan.spawn.groups:
             remaining = g.size
             while remaining > 0:
-                node, devs = self.pool.acquire_any()
+                if queue:
+                    node = queue.pop(0)
+                    devs = self.pool.acquire(node)
+                else:
+                    node, devs = self.pool.acquire_any()
                 take = min(len(devs), remaining)
                 w = self.state.add_world([node], [take])
                 self.groups[w.wid] = NodeGroup(gid=w.wid, node=node, devices=devs)
@@ -223,26 +265,31 @@ class ElasticRuntime:
         if target_nodes <= before:
             raise ValueError("expand() requires target_nodes > current nodes")
         need = target_nodes - before
-        free = sorted(self.pool.free)
+        free = self.pool.free
         if need > len(free):
             raise RuntimeError(
                 f"device pool exhausted: expand to {target_nodes} nodes "
                 f"needs {need} free nodes, pool has {len(free)}"
             )
-        new_nodes = free[:need]
+        used_sorted = sorted(self.state.nodes_in_use())
+        # Placement is the strategy's decision: greedy lowest-id for the
+        # classics (the historical order), rack-local-first for
+        # topology-aware strategies on a topologized engine.
+        new_nodes = self.engine.select_expansion_nodes(used_sorted, free, need)
+        nodes_all = used_sorted + new_nodes
         ns = self.ranks_in_use()
         nt = ns + sum(self.pool.width(n) for n in new_nodes)
-        cores = self._cores_arg(
-            sorted(self.state.nodes_in_use() | set(new_nodes)))
+        cores = self._cores_arg(nodes_all)
         plan = self.engine.plan_expand(ns, nt, cores,
-                                       queue_delay_s=queue_delay_s)
+                                       queue_delay_s=queue_delay_s,
+                                       node_ids=nodes_all)
         outcome = self.engine.execute(plan, backend=self)
 
         spawn = plan.spawn
         assert spawn is not None
         rec = ReconfigRecord(
             kind="expand",
-            mechanism=spawn.strategy.value,
+            mechanism=strategy_key(spawn.strategy),
             nodes_before=before,
             nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s,
@@ -252,27 +299,25 @@ class ElasticRuntime:
             bytes_moved=outcome.bytes_moved,
             queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
+            bytes_cross_rack=outcome.bytes_cross_rack,
         )
         self.history.append(rec)
         return rec
 
     def _cores_arg(self, nodes: list[int]):
-        """Allocation argument for the planner: the pool's A vector over
-        ``nodes`` (node-id order).  Homogeneous-only strategies get the
-        scalar width on a uniform allocation; on an uneven one they get
-        the vector anyway, so the planner raises its §4.2 guidance error
-        ("use PARALLEL_DIFFUSIVE") instead of silently mis-planning."""
-        from repro.core import get_strategy
-
-        widths = [self.pool.width(n) for n in nodes]
-        if (get_strategy(self.engine.strategy).homogeneous_only
-                and len(set(widths)) == 1):
-            return widths[0]
-        return widths
+        """Planner allocation argument: the pool's A vector over
+        ``nodes`` (node-id order), normalized by the shared
+        :meth:`ReconfigEngine.allocation_arg` rule both executors use."""
+        return self.engine.allocation_arg(
+            [self.pool.width(n) for n in nodes])
 
     # ---------------------------------------------------------------- shrink --
     def shrink(self, n_nodes_to_release: int, kind: str = "shrink") -> ReconfigRecord:
-        """TS-shrink the ``n_nodes_to_release`` highest-id nodes.
+        """TS-shrink ``n_nodes_to_release`` nodes chosen by the strategy.
+
+        Victim choice is the engine's placement decision: highest-id
+        nodes for the classics (the historical order), whole racks first
+        for topology-aware strategies on a topologized engine.
 
         Args:
             n_nodes_to_release: how many nodes to return to the pool.
@@ -280,7 +325,8 @@ class ElasticRuntime:
         Returns:
             The appended :class:`ReconfigRecord`.
         """
-        victims = sorted(self.state.nodes_in_use())[-n_nodes_to_release:]
+        victims = self.engine.select_release_nodes(
+            sorted(self.state.nodes_in_use()), n_nodes_to_release)
         return self.shrink_nodes(victims, kind=kind)
 
     def shrink_nodes(self, victims: list[int], kind: str = "shrink", *,
@@ -303,6 +349,7 @@ class ElasticRuntime:
             bytes_moved=outcome.bytes_moved,
             queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
+            bytes_cross_rack=outcome.bytes_cross_rack,
         )
         self.history.append(rec)
         return rec

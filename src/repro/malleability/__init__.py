@@ -61,6 +61,7 @@ from .scenarios import (
     heterogeneous_pool,
     node_failures,
     param_bytes_for_arch,
+    record_parity_key,
     register_scenario,
     registered_scenarios,
     run_scenario_live,
@@ -68,6 +69,8 @@ from .scenarios import (
     scenario_pool,
     steady_cycle,
     straggler_churn,
+    topology_nasp,
+    topology_redist,
 )
 from .simulator import (
     ExpansionReport,
@@ -109,6 +112,7 @@ __all__ = [
     "node_failures",
     "param_bytes_for_arch",
     "priority_preempt",
+    "record_parity_key",
     "register_scenario",
     "registered_policy_scenarios",
     "registered_scenarios",
@@ -123,5 +127,7 @@ __all__ = [
     "simulate_shrink",
     "steady_cycle",
     "straggler_churn",
+    "topology_nasp",
+    "topology_redist",
     "two_job_interference",
 ]

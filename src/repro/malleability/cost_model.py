@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
+from typing import Mapping
 
 
 @dataclass(frozen=True)
@@ -51,14 +52,19 @@ class CostModel:
     # -- data redistribution --------------------------------------------------------
     redist_bw: float = 10.0e9       # aggregate bytes/s between old and new ranks
     redist_alpha: float = 5.0e-3    # per-event setup (plan exchange, buffer pin)
-    # Per-link split of the aggregate: bytes that stay on a surviving
-    # device (``bytes_stayed``) are re-validated over the local link,
-    # bytes that cross devices (``bytes_moved``) go over the cross-group
-    # link.  ``None`` falls back to the aggregate ``redist_bw``, so the
-    # default model (local == cross == redist_bw) charges exactly the
-    # old single-bandwidth numbers for every moved-bytes-only model.
+    # Per-distance-class bandwidths generalizing the PR-4 local/cross
+    # split (see repro.core.topology.DISTANCE_CLASSES).  Bytes that stay
+    # on a surviving device (``bytes_stayed``) ride the ``intra_node``
+    # link (``redist_bw_local``); bytes that cross devices split between
+    # ``intra_rack`` and ``cross_rack`` by the topology distance between
+    # their source and destination nodes.  The class-specific bandwidths
+    # fall back ``intra_rack``/``cross_rack`` -> ``redist_bw_cross`` ->
+    # aggregate ``redist_bw``, so the 2-class defaults (and the fully
+    # unset model) reproduce the pre-topology numbers bit for bit.
     redist_bw_local: float | None = None
     redist_bw_cross: float | None = None
+    redist_bw_intra_rack: float | None = None
+    redist_bw_cross_rack: float | None = None
 
     # -- partial overlap (stage x compute) -------------------------------------------
     # Fraction of each stage that can proceed under application compute when
@@ -130,7 +136,7 @@ class CostModel:
 
     @property
     def bw_local(self) -> float:
-        """Resolved local-link bandwidth (aggregate unless split)."""
+        """Resolved intra_node bandwidth (aggregate unless split)."""
         return self.redist_bw if self.redist_bw_local is None else self.redist_bw_local
 
     @property
@@ -138,25 +144,79 @@ class CostModel:
         """Resolved cross-group bandwidth (aggregate unless split)."""
         return self.redist_bw if self.redist_bw_cross is None else self.redist_bw_cross
 
-    def redistribution(self, moved_bytes: int, stayed_bytes: int = 0) -> float:
-        """Stage-3 wall time: per-link pricing of one redistribution.
+    @property
+    def bw_intra_rack(self) -> float:
+        """Resolved intra_rack bandwidth (cross link unless split further)."""
+        return (self.bw_cross if self.redist_bw_intra_rack is None
+                else self.redist_bw_intra_rack)
 
-        ``moved_bytes`` cross device boundaries and are charged against
-        the cross-group bandwidth; ``stayed_bytes`` are shards a
-        surviving device already holds, re-validated over the (usually
-        much faster) local link.  Zero bytes on both links means no
-        redistribution event at all (no setup charge).  With the default
-        single-bandwidth model and ``stayed_bytes == 0`` — which is what
-        every moved-bytes-only model reports — this is bit-for-bit the
-        old aggregate charge ``redist_alpha + moved / redist_bw``.
+    @property
+    def bw_cross_rack(self) -> float:
+        """Resolved cross_rack bandwidth (cross link unless split further)."""
+        return (self.bw_cross if self.redist_bw_cross_rack is None
+                else self.redist_bw_cross_rack)
+
+    def bw_for_class(self, distance_class: str) -> float:
+        """Bandwidth pricing one :data:`~repro.core.topology
+        .DISTANCE_CLASSES` entry (unknown classes raise)."""
+        try:
+            return {
+                "intra_node": self.bw_local,
+                "intra_rack": self.bw_intra_rack,
+                "cross_rack": self.bw_cross_rack,
+            }[distance_class]
+        except KeyError:
+            raise ValueError(
+                f"unknown distance class {distance_class!r}"
+            ) from None
+
+    def redistribution_by_class(self, bytes_by_class: Mapping[str, int]) -> float:
+        """Stage-3 wall time: each byte priced on its distance class.
+
+        Zero bytes across every class means no redistribution event at
+        all (no setup charge).  The two *moved* classes (``intra_rack``
+        / ``cross_rack``) collapse into one division whenever their
+        bandwidths are equal — floating-point associativity would
+        otherwise make a cost-neutral rack split drift in the last ulp,
+        and the 2-class model must reproduce the pre-topology charge
+        bit for bit.
         """
-        if moved_bytes <= 0 and stayed_bytes <= 0:
+        for cls in bytes_by_class:
+            if cls not in ("intra_node", "intra_rack", "cross_rack"):
+                self.bw_for_class(cls)      # unknown classes always raise
+        if all(b <= 0 for b in bytes_by_class.values()):
             return 0.0
-        return (
-            self.redist_alpha
-            + max(0, stayed_bytes) / self.bw_local
-            + max(0, moved_bytes) / self.bw_cross
-        )
+        stayed = max(0, bytes_by_class.get("intra_node", 0))
+        intra = max(0, bytes_by_class.get("intra_rack", 0))
+        cross = max(0, bytes_by_class.get("cross_rack", 0))
+        total = self.redist_alpha + stayed / self.bw_local
+        if self.bw_intra_rack == self.bw_cross_rack:
+            total += (intra + cross) / self.bw_cross_rack
+        else:
+            total += intra / self.bw_intra_rack + cross / self.bw_cross_rack
+        return total
+
+    def redistribution(self, moved_bytes: int, stayed_bytes: int = 0,
+                       cross_rack_bytes: int = 0) -> float:
+        """Stage-3 wall time: per-class pricing of one redistribution.
+
+        ``moved_bytes`` cross device boundaries; the ``cross_rack_bytes``
+        portion of them additionally crosses racks and is charged on the
+        ``cross_rack`` link, the rest on ``intra_rack``.  ``stayed_bytes``
+        are shards a surviving device already holds, re-validated over
+        the (usually much faster) ``intra_node`` link.  With the default
+        2-class model (no per-rack split) both moved classes price at the
+        cross-link bandwidth, so ``cross_rack_bytes`` splits are
+        cost-neutral there and the charge is bit-for-bit the PR-4
+        local/cross number — and with ``stayed_bytes == 0``, the original
+        aggregate charge ``redist_alpha + moved / redist_bw``.
+        """
+        xrack = min(max(0, cross_rack_bytes), max(0, moved_bytes))
+        return self.redistribution_by_class({
+            "intra_node": max(0, stayed_bytes),
+            "intra_rack": max(0, moved_bytes) - xrack,
+            "cross_rack": xrack,
+        })
 
     def with_link_bandwidths(
         self, *, local: float | None = None, cross: float | None = None
@@ -166,6 +226,24 @@ class CostModel:
             self,
             redist_bw_local=self.redist_bw_local if local is None else local,
             redist_bw_cross=self.redist_bw_cross if cross is None else cross,
+        )
+
+    def with_class_bandwidths(
+        self,
+        *,
+        intra_node: float | None = None,
+        intra_rack: float | None = None,
+        cross_rack: float | None = None,
+    ) -> "CostModel":
+        """Copy of this model with per-distance-class stage-3 bandwidths."""
+        return replace(
+            self,
+            redist_bw_local=(self.redist_bw_local if intra_node is None
+                             else intra_node),
+            redist_bw_intra_rack=(self.redist_bw_intra_rack if intra_rack is None
+                                  else intra_rack),
+            redist_bw_cross_rack=(self.redist_bw_cross_rack if cross_rack is None
+                                  else cross_rack),
         )
 
     def with_overlap(
@@ -214,6 +292,14 @@ class CostModel:
             redist_bw_cross=(
                 None if self.redist_bw_cross is None
                 else self.redist_bw_cross / factor
+            ),
+            redist_bw_intra_rack=(
+                None if self.redist_bw_intra_rack is None
+                else self.redist_bw_intra_rack / factor
+            ),
+            redist_bw_cross_rack=(
+                None if self.redist_bw_cross_rack is None
+                else self.redist_bw_cross_rack / factor
             ),
             redist_alpha=self.redist_alpha * factor,
         )

@@ -32,7 +32,9 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+from repro.core import Topology
 
 from .scenarios import (
     GROW,
@@ -78,15 +80,27 @@ class ClusterState:
     bookkeeping): this is the scheduler's view ACROSS jobs.  Policies
     read it to decide who grows/shrinks; they never mutate it — a policy
     run is a pure function from this view to a trace.
+
+    ``topology`` is the pool's node -> rack -> pod tree (when known):
+    policy-generated scenarios inherit it, so their traces replay with
+    topology-aware placement and distance-class stage-3 pricing — the
+    dynamic-resource-aware-SLURM view where the scheduler knows the
+    rack layout it is granting from.
     """
 
     total_nodes: int
     jobs: tuple[JobSpec, ...] = ()
     allocations: Dict[str, int] = field(default_factory=dict)
+    topology: Optional[Topology] = None
 
     def __post_init__(self) -> None:
         if self.total_nodes <= 0:
             raise ValueError("total_nodes must be positive")
+        if self.topology is not None and self.topology.n_nodes < self.total_nodes:
+            raise ValueError(
+                f"topology covers {self.topology.n_nodes} nodes but the "
+                f"pool holds {self.total_nodes}"
+            )
         names = [j.name for j in self.jobs]
         if len(names) != len(set(names)):
             raise ValueError(f"duplicate job names: {names}")
@@ -102,8 +116,10 @@ class ClusterState:
     def from_pool(cls, pool, jobs: Sequence[JobSpec] = ()) -> "ClusterState":
         """Schedule over a live :class:`~repro.elastic.node_group.DevicePool`
         (or anything with ``n_nodes``): the policy layer then sees exactly
-        the pool the elastic runtime partitions."""
-        return cls(total_nodes=pool.n_nodes, jobs=tuple(jobs))
+        the pool the elastic runtime partitions — its rack topology
+        included, when the pool carries one."""
+        return cls(total_nodes=pool.n_nodes, jobs=tuple(jobs),
+                   topology=getattr(pool, "topology", None))
 
     # ---- queries -----------------------------------------------------------
     def spec(self, name: str) -> JobSpec:
@@ -156,6 +172,7 @@ class PolicyTrace:
     events: Dict[str, Tuple[ScenarioEvent, ...]]  # job -> trace
     steps: int
     specs: Dict[str, JobSpec] = field(default_factory=dict)
+    topology: Optional[Topology] = None           # pool layout, if known
 
     @property
     def primary_job(self) -> str:
@@ -168,10 +185,15 @@ class PolicyTrace:
             raise KeyError(
                 f"no trace for job {job!r}; traced: {sorted(self.events)}")
         spec = self.specs.get(job)
-        kwargs = dict(
+        kwargs: Dict[str, Any] = dict(
             arch=spec.arch if spec else "",
             param_bytes=spec.param_bytes if spec else 0,
         )
+        if self.topology is not None:
+            # The generated trace inherits the pool's rack layout, so
+            # replays place and price against the real topology.
+            kwargs["rack_sizes"] = self.topology.rack_sizes
+            kwargs["pod_sizes"] = self.topology.pod_sizes
         kwargs.update(overrides)
         return Scenario(
             name=name or f"{self.policy}:{job}",
@@ -327,6 +349,7 @@ class BackfillPolicy:
             events={job.name: tuple(events)},
             steps=self.horizon + 2,
             specs={job.name: job},
+            topology=cluster.topology,
         )
 
 
@@ -400,6 +423,7 @@ class PreemptionPolicy:
             events={job.name: tuple(events)},
             steps=self.horizon + 2,
             specs={job.name: job},
+            topology=cluster.topology,
         )
         # Resolve mid-cycle compositions into QUEUE charges.
         queued = charge_in_flight_queueing(trace.scenario(job.name))
@@ -449,6 +473,7 @@ class ChurnPolicy:
             events={job.name: tuple(events)},
             steps=step + 2,
             specs={job.name: job},
+            topology=cluster.topology,
         )
 
 

@@ -27,9 +27,19 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field, replace
-from typing import Iterable, Optional, Union
+from typing import Iterable, Optional
 
-from repro.core import ClusterState, Method, ReconfigEngine, Strategy, apply_shrink
+from repro.core import (
+    TOPO_KEY,
+    ClusterState,
+    Method,
+    ReconfigEngine,
+    Strategy,
+    Topology,
+    apply_shrink,
+    strategy_key,
+)
+from repro.core.topology import split_bytes_by_class
 
 from .cost_model import (
     MN5,
@@ -57,11 +67,17 @@ class ScenarioEvent:
     :mod:`repro.malleability.policies`).  Both executors charge it as a
     leading QUEUE timeline event, so it raises ``est_wall`` (makespan)
     but never downtime.
+
+    A SHRINK may name explicit victim ``nodes``, or instead give a
+    ``target_nodes`` total with no victims: then victim choice is the
+    engine's placement decision (highest-id nodes for the classics,
+    whole racks first for topology-aware strategies), identically in
+    both executors.
     """
 
     step: int
     kind: str                       # grow | shrink | fail | straggler
-    target_nodes: int = 0           # GROW: new total node count
+    target_nodes: int = 0           # GROW: new total; SHRINK: shrink-to total
     nodes: tuple[int, ...] = ()     # SHRINK/FAIL/STRAGGLER: victim node ids
     queue_delay_s: float = 0.0      # RMS arbitration wait before stage 2
 
@@ -116,30 +132,72 @@ class Scenario:
     redist_bw_cross: float = 0.0     # the profile's aggregate redist_bw and
     #                                  switches the default engine to the
     #                                  link-aware (stayed+moved) bytes model
+    redist_bw_intra_rack: float = 0.0  # >0 additionally splits the moved
+    #                                  bytes per rack distance: intra-rack
+    #                                  transfers price here, rack-crossing
+    #                                  ones at redist_bw_cross
+    rack_sizes: tuple[int, ...] = ()  # nodes per rack (prefix node numbering,
+    #                                  uneven allowed); non-empty makes the
+    #                                  trace topology-aware: the default
+    #                                  engine carries the Topology and the
+    #                                  "topo" strategy places against it
+    pod_sizes: tuple[int, ...] = ()  # optional racks per pod (prefix order)
 
     @property
     def heterogeneous(self) -> bool:
         return bool(self.core_pool)
 
     @property
+    def topology_aware(self) -> bool:
+        """True when the trace declares a rack layout."""
+        return bool(self.rack_sizes)
+
+    @property
     def link_aware(self) -> bool:
         """True when the trace prices stage 3 per link (split bandwidths)."""
-        return self.redist_bw_local > 0.0 or self.redist_bw_cross > 0.0
+        return (self.redist_bw_local > 0.0 or self.redist_bw_cross > 0.0
+                or self.redist_bw_intra_rack > 0.0)
 
-    def cores_for(self, n_nodes: int) -> Union[int, list[int]]:
-        """Allocation argument for an expansion to ``n_nodes`` nodes."""
+    def topology(self) -> Optional[Topology]:
+        """The declared :class:`~repro.core.Topology`, or ``None``.
+
+        The rack tree must cover the trace's peak node count — a
+        smaller tree would leave placement/pricing undefined for the
+        outer nodes — and on a heterogeneous trace it must match the
+        ``core_pool`` width vector node for node (the live
+        ``DevicePool`` enforces the same), so mismatches raise.
+        """
+        if not self.rack_sizes:
+            return None
+        topo = Topology(rack_sizes=self.rack_sizes, pod_sizes=self.pod_sizes)
+        if topo.n_nodes < self.max_nodes():
+            raise ValueError(
+                f"scenario {self.name!r}: topology covers {topo.n_nodes} "
+                f"nodes but the trace peaks at {self.max_nodes()}"
+            )
+        if self.core_pool and topo.n_nodes != len(self.core_pool):
+            raise ValueError(
+                f"scenario {self.name!r}: topology covers {topo.n_nodes} "
+                f"nodes but core_pool has {len(self.core_pool)}"
+            )
+        return topo
+
+    def pool_nodes(self) -> int:
+        """Node count of the pool BOTH executors run against.
+
+        This is exactly the pool :func:`scenario_pool` builds — the
+        ``core_pool`` length, the topology's node count (spare whole
+        racks beyond the trace's peak are legitimate), or the peak
+        itself.  The simulator sizes its free set identically, so
+        placement ranks the same candidate nodes as the live runtime
+        (the sim == live invariant would silently break otherwise).
+        """
         if self.core_pool:
-            if n_nodes > len(self.core_pool):
-                raise ValueError(
-                    f"scenario {self.name!r}: pool has {len(self.core_pool)} "
-                    f"nodes, {n_nodes} requested"
-                )
-            return list(self.core_pool[:n_nodes])
-        return self.cores_per_node
-
-    def ranks_for(self, n_nodes: int) -> int:
-        cores = self.cores_for(n_nodes)
-        return sum(cores) if isinstance(cores, list) else cores * n_nodes
+            return len(self.core_pool)
+        topo = self.topology()
+        if topo is not None:
+            return topo.n_nodes
+        return self.max_nodes()
 
     def max_nodes(self) -> int:
         """Peak node count along the trace (sizes pools/device counts)."""
@@ -161,6 +219,13 @@ class Scenario:
                 local=self.redist_bw_local or None,
                 cross=self.redist_bw_cross or None,
             )
+            if self.redist_bw_intra_rack > 0.0:
+                # Three distance classes: intra-rack moves price here,
+                # rack-crossing moves keep the (slower) cross link.
+                cm = cm.with_class_bandwidths(
+                    intra_rack=self.redist_bw_intra_rack,
+                    cross_rack=self.redist_bw_cross or None,
+                )
         return cm
 
     def resolved_param_bytes(self) -> int:
@@ -175,18 +240,23 @@ class Scenario:
     def default_engine(self, strategy=None, method=None) -> ReconfigEngine:
         """Engine every executor uses for this trace (the dedup point).
 
-        Heterogeneous pools require the diffusive strategy (§4.2); a
-        sized pytree wires the replicated analytic bytes model so each
-        reconfiguration charges stage-3 data movement.  ``strategy`` /
-        ``method`` override the defaults for sweeps (e.g. the benchmark
+        Topology-aware traces default to the ``topo`` strategy (their
+        rack tree rides on the engine either way, so every strategy's
+        stage-3 bytes resolve distance classes); heterogeneous pools
+        require a vector-capable strategy (§4.2); a sized pytree wires
+        the replicated analytic bytes model so each reconfiguration
+        charges stage-3 data movement.  ``strategy`` / ``method``
+        override the defaults for sweeps (e.g. the benchmark
         ``policy_sweep`` running each policy trace under every
         registered strategy).
         """
         if strategy is None:
-            strategy = (
-                Strategy.PARALLEL_DIFFUSIVE if self.heterogeneous
-                else Strategy.PARALLEL_HYPERCUBE
-            )
+            if self.topology_aware:
+                strategy = TOPO_KEY
+            elif self.heterogeneous:
+                strategy = Strategy.PARALLEL_DIFFUSIVE
+            else:
+                strategy = Strategy.PARALLEL_HYPERCUBE
         pb = self.resolved_param_bytes()
         bytes_model = None
         if pb:
@@ -200,6 +270,7 @@ class Scenario:
             strategy=strategy,
             cost_model=self.cost_model(),
             bytes_model=bytes_model,
+            topology=self.topology(),
         )
 
     def with_cores_per_node(self, cpn: int) -> "Scenario":
@@ -404,6 +475,78 @@ def heterogeneous_pool(
     )
 
 
+def topology_nasp(name: str = "topo-nasp") -> Scenario:
+    """2-rack uneven pool with placement-sensitive reconfigurations.
+
+    Rack 0 holds nodes {0,1} (2 devices each), rack 1 holds {2,3,4}
+    (1,1,2 devices) — uneven racks AND uneven widths.  The trace forces
+    every placement decision the ``topo`` strategy exists for:
+
+    * grow to the full pool, then a shrink **to a target count** (victim
+      choice is the strategy's): ``topo`` vacates whole rack 0 and tops
+      up from rack 1 — a shrink that must cross racks, returning
+      rack-granular capacity to the RMS;
+    * the regrow then lands **rack-local** (node 4, next to the
+      survivors in rack 1) where the greedy classics would take node 0
+      and re-fragment the vacated rack.
+
+    Rank counts along the trace (2, 8, 2, 4) all divide a batch of 8,
+    so the full ElasticTrainer loop runs it on 8 host devices.
+    """
+    return Scenario(
+        name=name,
+        description="2-rack uneven pool: rack-vacating shrink + "
+                    "rack-local regrow (topo placement)",
+        initial_nodes=1,
+        core_pool=(2, 2, 1, 1, 2),
+        rack_sizes=(2, 3),
+        events=(
+            ScenarioEvent(step=2, kind=GROW, target_nodes=5),
+            ScenarioEvent(step=6, kind=SHRINK, target_nodes=2),
+            ScenarioEvent(step=10, kind=GROW, target_nodes=3),
+        ),
+        steps=13,
+        profile="nasp",
+    )
+
+
+def topology_redist(name: str = "topo-redist") -> Scenario:
+    """Move a real pytree across racks under 3-class link pricing.
+
+    The same 2-rack uneven pool as :func:`topology_nasp`, now resharding
+    xlstm_125m's parameters with three distinct bandwidths: replicas
+    re-validated in place ride the 25 GB/s intra-node link, rack-local
+    copies the 10 GB/s intra-rack fabric, and rack-crossing copies the
+    2.5 GB/s inter-rack Ethernet.  The burst grow ships 4 of its 6
+    replicas across racks (rack 1 opens fresh), the rack-vacating shrink
+    leaves the survivors' replicas in place (intra_node only), and the
+    regrow is where placement pays: ``topo`` lands rack-local next to
+    the survivors (intra_rack bytes) while the greedy classics reopen
+    the vacated rack and pay cross_rack bandwidth for the same copies —
+    the ``table_topology`` benchmark prints exactly that column.  Rank
+    counts (2, 8, 2, 4) divide a batch of 8 on 8 host devices, so the
+    full trainer loop replays it.
+    """
+    return Scenario(
+        name=name,
+        description="2-rack uneven pool resharding xlstm_125m under "
+                    "intra_node/intra_rack/cross_rack pricing",
+        initial_nodes=1,
+        core_pool=(2, 2, 1, 1, 2),
+        rack_sizes=(2, 3),
+        events=(
+            ScenarioEvent(step=2, kind=GROW, target_nodes=5),
+            ScenarioEvent(step=6, kind=SHRINK, target_nodes=2),
+            ScenarioEvent(step=10, kind=GROW, target_nodes=3),
+        ),
+        steps=13,
+        arch="xlstm_125m",
+        redist_bw_local=25.0e9,
+        redist_bw_cross=2.5e9,
+        redist_bw_intra_rack=10.0e9,
+    )
+
+
 for _sc in (
     steady_cycle(),
     burst_arrival(),
@@ -423,6 +566,10 @@ for _sc in (
         name="hetero-redist", nodes=4, widths=(2, 1), arch="xlstm_125m",
         redist_bw_local=25.0e9, redist_bw_cross=2.5e9,
     ),
+    # Topology-aware traces: placement becomes the strategy's decision
+    # and stage-3 bytes price per rack distance class.
+    topology_nasp(),
+    topology_redist(),
 ):
     register_scenario(_sc)
 
@@ -442,6 +589,26 @@ class ScenarioRecord:
     bytes_moved: int = 0       # stage-3 cross-link bytes charged on the timeline
     queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
     bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
+    bytes_cross_rack: int = 0  # rack-crossing portion of bytes_moved
+
+    @property
+    def bytes_by_class(self) -> dict[str, int]:
+        """Stage-3 bytes per distance class (sums to stayed + moved)."""
+        return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
+                                    self.bytes_cross_rack)
+
+
+def record_parity_key(rec) -> tuple:
+    """THE canonical per-event parity tuple for sim == live checks.
+
+    Every agreement gate (the test suite, the example's smoke check)
+    compares records through this one function, so adding a field to
+    :class:`ScenarioRecord` extends every gate at once instead of
+    silently weakening whichever copy was not updated.
+    """
+    return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
+            rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved,
+            rec.queued_s, rec.bytes_stayed, rec.bytes_cross_rack)
 
 
 @dataclass
@@ -458,7 +625,7 @@ class _SimCluster:
     state: ClusterState = field(default_factory=ClusterState)
 
     def __post_init__(self) -> None:
-        pool = self.scenario.max_nodes()
+        pool = self.scenario.pool_nodes()
         self._free = set(range(pool))
         initial = list(range(self.scenario.initial_nodes))
         self._free -= set(initial)
@@ -481,33 +648,65 @@ class _SimCluster:
                queue_delay_s: float = 0.0) -> ScenarioRecord:
         before = self.n_nodes
         ns = self.ranks_in_use()
-        nt = self.scenario.ranks_for(target_nodes)
+        need = target_nodes - before
+        if need > len(self._free):
+            # Same error, same message shape as ElasticRuntime.expand:
+            # an overcommitting trace must fail identically in both
+            # executors, never silently truncate in one of them.
+            raise RuntimeError(
+                f"device pool exhausted: expand to {target_nodes} nodes "
+                f"needs {need} free nodes, pool has {len(self._free)}"
+            )
+        used_sorted = sorted(self.state.nodes_in_use())
+        # Placement mirrors the live runtime exactly: the engine picks
+        # which free nodes the expansion lands on (greedy lowest-id for
+        # the classics, rack-local-first for topology-aware strategies).
+        new_nodes = self.engine.select_expansion_nodes(
+            used_sorted, self._free, need)
+        nodes_all = used_sorted + new_nodes
+        nt = ns + sum(self._width(n) for n in new_nodes)
+        cores = self._cores_arg(nodes_all)
         plan = self.engine.plan_expand(
-            ns, nt, self.scenario.cores_for(target_nodes),
-            queue_delay_s=queue_delay_s)
+            ns, nt, cores, queue_delay_s=queue_delay_s, node_ids=nodes_all)
         outcome = self.engine.execute(plan)
         assert plan.spawn is not None
+        in_use = self.state.nodes_in_use()
+        queue = [n for n in plan.node_ids if n not in in_use]
         for g in plan.spawn.groups:
             # The NodeGroup substrate keeps worlds node-confined even for
             # classic strategies whose plan spawns one multi-node group
             # (their cost timeline is unchanged — one big spawn call);
             # the group is split one world per node, exactly as the live
-            # runtime's apply_expand does.
+            # runtime's apply_expand does, taking nodes in the plan's
+            # placement order.
             remaining = g.size
             while remaining > 0:
-                node = min(self._free)
+                node = queue.pop(0) if queue else min(self._free)
                 self._free.discard(node)
                 take = min(self._width(node), remaining)
                 self.state.add_world([node], [take])
                 remaining -= take
         self.state.expansions_done += 1
         return ScenarioRecord(
-            step=-1, kind="expand", mechanism=plan.spawn.strategy.value,
+            step=-1, kind="expand",
+            mechanism=strategy_key(plan.spawn.strategy),
             nodes_before=before, nodes_after=self.n_nodes,
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
             bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
+            bytes_cross_rack=outcome.bytes_cross_rack,
         )
+
+    def _cores_arg(self, nodes: list[int]):
+        """Planner allocation argument in node order, normalized by the
+        shared :meth:`ReconfigEngine.allocation_arg` rule both
+        executors use."""
+        return self.engine.allocation_arg([self._width(n) for n in nodes])
+
+    def pick_release(self, n_release: int) -> list[int]:
+        """Victims for a target-count shrink (the engine's decision)."""
+        return self.engine.select_release_nodes(
+            sorted(self.state.nodes_in_use()), n_release)
 
     def shrink_nodes(self, victims: list[int], kind: str,
                      queue_delay_s: float = 0.0) -> ScenarioRecord:
@@ -524,6 +723,7 @@ class _SimCluster:
             est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
             bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
+            bytes_cross_rack=outcome.bytes_cross_rack,
         )
 
 
@@ -533,15 +733,38 @@ def dispatch_event(
 ) -> Iterable[ScenarioRecord]:
     """THE event-to-action mapping, shared by every executor.
 
-    ``cluster`` is anything with ``n_nodes``, ``state``, ``expand`` and
-    ``shrink_nodes`` — the device-free sim cluster, or a live runtime
-    behind :class:`RuntimeAdapter` (used by both :func:`run_scenario_live`
-    and :class:`repro.elastic.ElasticTrainer`)."""
+    ``cluster`` is anything with ``n_nodes``, ``state``, ``expand``,
+    ``shrink_nodes`` and ``pick_release`` — the device-free sim cluster,
+    or a live runtime behind :class:`RuntimeAdapter` (used by both
+    :func:`run_scenario_live` and :class:`repro.elastic.ElasticTrainer`).
+
+    A SHRINK with no explicit victim ``nodes`` but a smaller
+    ``target_nodes`` lets the engine choose the victims
+    (``pick_release``): highest ids for the classics, whole racks first
+    for topology-aware strategies."""
     if kind == GROW:
         if target_nodes > cluster.n_nodes:
             yield cluster.expand(target_nodes, queue_delay_s=queue_delay_s)
     elif kind == SHRINK:
         victims = [n for n in nodes if n in cluster.state.nodes_in_use()]
+        if not victims and not nodes and 0 < target_nodes < cluster.n_nodes:
+            victims = list(cluster.pick_release(cluster.n_nodes - target_nodes))
+            vset = set(victims)
+            blockers = sorted(
+                w.wid for w in cluster.state.worlds.values()
+                if set(w.nodes) & vset and not set(w.nodes) <= vset
+            )
+            if blockers:
+                # A victim inside a multi-node world can only be
+                # zombified (§4.7): its node stays pinned and the
+                # declared target is silently missed.  Fail loudly —
+                # identically in both executors — instead.
+                raise ValueError(
+                    f"shrink to {target_nodes} nodes cannot be met: "
+                    f"victims {victims} partially overlap multi-node "
+                    f"worlds {blockers} (ZS would pin their nodes); "
+                    "name explicit victim nodes instead"
+                )
         if victims:
             yield cluster.shrink_nodes(victims, kind="shrink",
                                        queue_delay_s=queue_delay_s)
@@ -583,12 +806,18 @@ class RuntimeAdapter:
             est_wall_s=rec.est_wall_s, downtime_s=rec.downtime_s,
             bytes_moved=rec.bytes_moved, queued_s=rec.queued_s,
             bytes_stayed=rec.bytes_stayed,
+            bytes_cross_rack=rec.bytes_cross_rack,
         )
 
     def expand(self, target_nodes: int,
                queue_delay_s: float = 0.0) -> ScenarioRecord:
         return self._convert(
             self._rt.expand(target_nodes, queue_delay_s=queue_delay_s))
+
+    def pick_release(self, n_release: int) -> list[int]:
+        """Victims for a target-count shrink (the engine's decision)."""
+        return self._rt.engine.select_release_nodes(
+            sorted(self._rt.state.nodes_in_use()), n_release)
 
     def shrink_nodes(self, victims: list[int], kind: str,
                      queue_delay_s: float = 0.0) -> ScenarioRecord:
@@ -618,16 +847,26 @@ def run_scenario_sim(
 def scenario_pool(scenario: Scenario, devices=None):
     """Build the live :class:`~repro.elastic.node_group.DevicePool` a
     scenario expects: uniform ``cores_per_node``-wide nodes, or the
-    scenario's uneven ``core_pool`` width vector.  ``devices=None``
-    fabricates bookkeeping-only fake device objects sized to the pool.
+    scenario's uneven ``core_pool`` width vector, carrying the trace's
+    declared rack topology (if any).  ``devices=None`` fabricates
+    bookkeeping-only fake device objects sized to the pool.
     """
     from repro.elastic.node_group import DevicePool
 
+    topo = scenario.topology()
     if scenario.core_pool:
         if devices is None:
             devices = [object() for _ in range(sum(scenario.core_pool))]
-        return DevicePool(devices=devices, node_widths=scenario.core_pool)
+        return DevicePool(devices=devices, node_widths=scenario.core_pool,
+                          topology=topo)
     cpn = scenario.cores_per_node
+    if topo is not None:
+        # Uniform widths, but the rack tree fixes the node count (it may
+        # exceed the trace's peak: spare whole racks are legitimate).
+        widths = (cpn,) * topo.n_nodes
+        if devices is None:
+            devices = [object() for _ in range(sum(widths))]
+        return DevicePool(devices=devices, node_widths=widths, topology=topo)
     if devices is None:
         devices = [object() for _ in range(scenario.max_nodes() * cpn)]
     return DevicePool(devices=devices, devices_per_node=cpn)
@@ -657,6 +896,14 @@ def check_scenario_pool(scenario: Scenario, pool) -> None:
             f"pool widths {widths} do not match scenario "
             f"{scenario.name!r} widths {expect}; the live runtime would "
             "plan different timelines than the simulator"
+        )
+    topo = scenario.topology()
+    if topo is not None and pool.topology != topo:
+        raise ValueError(
+            f"pool topology {pool.topology} does not match scenario "
+            f"{scenario.name!r} topology {topo}; placement and "
+            "distance-class pricing would silently diverge from the "
+            "simulator"
         )
 
 

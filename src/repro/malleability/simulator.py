@@ -17,6 +17,7 @@ ceil(log2 G) unbalanced rounds).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Union
 
 from repro.core import (
     ShrinkKind,
@@ -25,6 +26,7 @@ from repro.core import (
     Timeline,
     expansion_timeline,
     shrink_timeline,
+    strategy_key,
 )
 from repro.core.types import Method, Strategy
 
@@ -35,7 +37,7 @@ from .cost_model import CostModel
 class ExpansionReport:
     """Per-phase breakdown of one charged expansion timeline."""
 
-    strategy: Strategy
+    strategy: Union[Strategy, str]
     method: Method
     ns: int
     nt: int
@@ -53,11 +55,12 @@ class ExpansionReport:
     bytes_moved: int = 0
     t_queue: float = 0.0
     bytes_stayed: int = 0
+    bytes_cross_rack: int = 0
 
     def as_row(self) -> dict:
         """Report as a flat dict row (benchmark CSV shape)."""
         return {
-            "strategy": self.strategy.value,
+            "strategy": strategy_key(self.strategy),
             "method": self.method.value,
             "ns": self.ns,
             "nt": self.nt,
@@ -72,6 +75,7 @@ class ExpansionReport:
             "downtime_s": round(self.downtime, 6),
             "bytes_moved": self.bytes_moved,
             "bytes_stayed": self.bytes_stayed,
+            "bytes_cross_rack": self.bytes_cross_rack,
             "steps": self.steps,
             "groups": self.groups,
         }
@@ -89,11 +93,13 @@ class ShrinkReport:
     timeline: Timeline = field(default_factory=Timeline, repr=False, compare=False)
     bytes_moved: int = 0
     bytes_stayed: int = 0
+    bytes_cross_rack: int = 0
 
 
 def simulate_expansion(
     plan: SpawnPlan, cm: CostModel, asynchronous: bool = False,
     bytes_total: int = 0, queue_delay_s: float = 0.0, bytes_stayed: int = 0,
+    bytes_cross_rack: int = 0,
 ) -> ExpansionReport:
     """Charge one expansion plan and report its per-phase breakdown.
 
@@ -107,13 +113,16 @@ def simulate_expansion(
         queue_delay_s: RMS arbitration wait charged as a leading QUEUE
             event (0 skips the event).
         bytes_stayed: stage-3 local-link volume (per-link pricing).
+        bytes_cross_rack: rack-crossing portion of ``bytes_total``
+            (distance-class pricing; the rest rides the intra-rack link).
     Returns:
         An :class:`ExpansionReport` whose every field is a read of the
         charged :class:`~repro.core.Timeline`.
     """
     tl = expansion_timeline(plan, cm, bytes_total=bytes_total,
                             queue_delay_s=queue_delay_s,
-                            bytes_stayed=bytes_stayed)
+                            bytes_stayed=bytes_stayed,
+                            bytes_cross_rack=bytes_cross_rack)
     return ExpansionReport(
         strategy=plan.strategy,
         method=plan.method,
@@ -133,6 +142,7 @@ def simulate_expansion(
         bytes_moved=tl.bytes_moved,
         t_queue=tl.queued_s,
         bytes_stayed=tl.bytes_stayed,
+        bytes_cross_rack=tl.bytes_cross_rack,
     )
 
 
@@ -147,12 +157,14 @@ def simulate_shrink(
     nodes_pinned: int = 0,
     bytes_total: int = 0,
     bytes_stayed: int = 0,
+    bytes_cross_rack: int = 0,
 ) -> ShrinkReport:
     """Charge one shrink by mechanism (TS / ZS / SS) off its timeline.
 
     ``bytes_total`` > 0 (cross link) or ``bytes_stayed`` > 0 (local
     link) additionally charges the survivors' absorption of the doomed
-    ranks' shards as a REDISTRIBUTION event.
+    ranks' shards as a REDISTRIBUTION event; ``bytes_cross_rack`` is the
+    rack-crossing portion of ``bytes_total`` (distance-class pricing).
     """
     tl = shrink_timeline(
         kind,
@@ -163,6 +175,7 @@ def simulate_shrink(
         respawn_plan=respawn_plan,
         bytes_total=bytes_total,
         bytes_stayed=bytes_stayed,
+        bytes_cross_rack=bytes_cross_rack,
     )
     if kind is ShrinkKind.TS:
         detail = {"worlds_terminated": len(doomed_world_sizes or [])}
@@ -181,10 +194,12 @@ def simulate_shrink(
         timeline=tl,
         bytes_moved=tl.bytes_moved,
         bytes_stayed=tl.bytes_stayed,
+        bytes_cross_rack=tl.bytes_cross_rack,
     )
 
 
 def simulate_redistribution(cm: CostModel, total_bytes: int,
-                            stayed_bytes: int = 0) -> float:
-    """Stage-3 wall time for one redistribution (setup + per-link bw)."""
-    return cm.redistribution(total_bytes, stayed_bytes)
+                            stayed_bytes: int = 0,
+                            cross_rack_bytes: int = 0) -> float:
+    """Stage-3 wall time for one redistribution (setup + per-class bw)."""
+    return cm.redistribution(total_bytes, stayed_bytes, cross_rack_bytes)

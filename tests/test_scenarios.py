@@ -23,12 +23,11 @@ from repro.malleability import (
 
 DUAL_PATH = ["steady-cycle", "burst-arrival", "node-failures", "straggler-churn"]
 HETERO = ["hetero-nasp", "hetero-redist"]
+TOPO = ["topo-nasp", "topo-redist"]
 
 
-def _key(rec):
-    return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
-            rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved,
-            rec.queued_s, rec.bytes_stayed)
+# The canonical parity tuple (shared with the example's agreement gate).
+from repro.malleability import record_parity_key as _key  # noqa: E402
 
 
 class TestSimLiveAgreement:
@@ -36,7 +35,7 @@ class TestSimLiveAgreement:
     identical timeline-derived downtime numbers (exact float equality —
     both paths charge the same engine timeline)."""
 
-    @pytest.mark.parametrize("name", DUAL_PATH + HETERO)
+    @pytest.mark.parametrize("name", DUAL_PATH + HETERO + TOPO)
     def test_downtimes_identical(self, name):
         sc = get_scenario(name)
         sim = run_scenario_sim(sc)
@@ -258,6 +257,7 @@ TRAINER_SCRIPT = textwrap.dedent("""
             assert l.queued_s == s.queued_s, (name, s, l)
             assert (l.bytes_moved, l.bytes_stayed) == (
                 s.bytes_moved, s.bytes_stayed), (name, s, l)
+            assert l.bytes_cross_rack == s.bytes_cross_rack, (name, s, l)
             assert (l.nodes_before, l.nodes_after) == (
                 s.nodes_before, s.nodes_after), (name, s, l)
         losses = np.array(tr.losses())
@@ -278,15 +278,22 @@ TRAINER_SCRIPT = textwrap.dedent("""
     run_one("hetero-nasp-small",
             heterogeneous_pool(name="hetero-nasp-small", nodes=4,
                                widths=(2, 1)), batch=30)
+
+    # Topology-aware traces: the topo strategy's rack-vacating shrink
+    # and rack-local regrow run through the full trainer with exact
+    # per-event parity, distance-class bytes included (rank counts
+    # 2/8/2/4 -> batch 8 shards cleanly on the 8 host devices).
+    run_one("topo-nasp", get_scenario("topo-nasp"), batch=8)
+    run_one("topo-redist", get_scenario("topo-redist"), batch=8)
 """)
 
 
 @pytest.mark.slow
 def test_trainer_loop_matches_simulator_downtime():
     """Full ElasticTrainer loop on every dual-path scenario — the
-    heterogeneous uneven-width traces included: its runtime history must
-    carry exactly the simulator's timeline-derived downtimes, queue
-    spans, and per-link bytes."""
+    heterogeneous uneven-width and rack-topology traces included: its
+    runtime history must carry exactly the simulator's timeline-derived
+    downtimes, queue spans, and per-distance-class bytes."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     proc = subprocess.run(
@@ -294,7 +301,8 @@ def test_trainer_loop_matches_simulator_downtime():
         timeout=1800, env=env,
     )
     assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
-    for name in DUAL_PATH + ["hetero-redist", "hetero-nasp-small"]:
+    for name in DUAL_PATH + ["hetero-redist", "hetero-nasp-small",
+                             "topo-nasp", "topo-redist"]:
         assert f"SCENARIO_TRAINER_OK {name}" in proc.stdout
 
 

@@ -1,0 +1,514 @@
+"""Topology layer tests: the rack/pod tree, distance-class pricing, the
+topo strategy's placement decisions, and the per-class byte reports.
+
+The two load-bearing invariants:
+
+* **degradation** — a single-rack topology (or none at all) reproduces
+  the PR-4 local/cross split bit for bit, and the default 2-class
+  CostModel prices any cross-rack split identically (both moved classes
+  fall back to the cross link);
+* **conservation** — ``bytes_by_class`` always sums to
+  ``bytes_stayed + bytes_moved``, on every event, timeline, and record.
+"""
+import pytest
+
+from repro.core import (
+    DISTANCE_CLASSES,
+    TOPO_KEY,
+    Method,
+    ReconfigEngine,
+    Topology,
+    get_strategy,
+    place_rack_local,
+    plan_topo,
+    strategy_key,
+    vacate_racks,
+)
+from repro.core.engine import _cross_share
+from repro.malleability import (
+    MN5,
+    CostModel,
+    get_scenario,
+    param_bytes_for_arch,
+    run_scenario_live,
+    run_scenario_sim,
+    scenario_pool,
+)
+
+
+# ================================================================= tree ==
+class TestTopologyTree:
+    def test_prefix_assignment_uneven_racks(self):
+        t = Topology(rack_sizes=(3, 2))
+        assert t.n_nodes == 5 and t.n_racks == 2
+        assert [t.rack_of(n) for n in range(5)] == [0, 0, 0, 1, 1]
+        assert t.nodes_in_rack(0) == (0, 1, 2)
+        assert t.nodes_in_rack(1) == (3, 4)
+
+    def test_distance_classes(self):
+        t = Topology(rack_sizes=(2, 2))
+        assert t.distance_class(0, 0) == "intra_node"
+        assert t.distance_class(0, 1) == "intra_rack"
+        assert t.distance_class(1, 2) == "cross_rack"
+        assert set(DISTANCE_CLASSES) == {"intra_node", "intra_rack",
+                                         "cross_rack"}
+
+    def test_pods(self):
+        t = Topology(rack_sizes=(1, 1, 1, 1), pod_sizes=(2, 2))
+        assert t.pod_of(0) == t.pod_of(1) == 0
+        assert t.pod_of(2) == t.pod_of(3) == 1
+        # without pods, each rack is its own pod
+        assert Topology(rack_sizes=(2, 2)).pod_of_rack(1) == 1
+
+    def test_uniform_and_single_rack_constructors(self):
+        t = Topology.uniform(3, 4, racks_per_pod=3)
+        assert t.rack_sizes == (4, 4, 4) and t.pod_sizes == (3,)
+        assert Topology.single_rack(6).rack_sizes == (6,)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Topology(rack_sizes=())
+        with pytest.raises(ValueError):
+            Topology(rack_sizes=(2, 0))
+        with pytest.raises(ValueError):
+            Topology(rack_sizes=(2, 2), pod_sizes=(3,))   # covers 3 racks
+        with pytest.raises(ValueError):
+            Topology.uniform(3, 2, racks_per_pod=2)       # 3 % 2 != 0
+        t = Topology(rack_sizes=(2,))
+        with pytest.raises(ValueError):
+            t.rack_of(2)
+        with pytest.raises(ValueError):
+            t.rack_of(-1)
+
+
+# ====================================================== pricing degrades ==
+class TestDistanceClassPricing:
+    def test_three_class_charge_formula(self):
+        cm = MN5.with_class_bandwidths(intra_node=20e9, intra_rack=10e9,
+                                       cross_rack=2e9)
+        got = cm.redistribution(100e9, stayed_bytes=40e9,
+                                cross_rack_bytes=30e9)
+        want = cm.redist_alpha + 40e9 / 20e9 + 70e9 / 10e9 + 30e9 / 2e9
+        assert got == want
+
+    def test_two_class_defaults_make_rack_split_cost_neutral(self):
+        """The PR-4 model: with only local/cross set, intra_rack and
+        cross_rack both resolve to the cross link, so ANY cross-rack
+        split charges bit-for-bit the pre-topology number."""
+        cm = MN5.with_link_bandwidths(local=25e9, cross=2.5e9)
+        base = cm.redistribution(10**9, stayed_bytes=10**8)
+        for xrack in (0, 1, 10**8, 10**9):
+            assert cm.redistribution(10**9, 10**8, xrack) == base
+        # and the fully-default model charges the aggregate number
+        assert MN5.redistribution(10**9) == (
+            MN5.redist_alpha + 10**9 / MN5.redist_bw)
+
+    def test_bw_for_class_resolution_and_unknown(self):
+        cm = CostModel(redist_bw_cross=4e9, redist_bw_intra_rack=8e9)
+        assert cm.bw_for_class("intra_node") == cm.redist_bw
+        assert cm.bw_for_class("intra_rack") == 8e9
+        assert cm.bw_for_class("cross_rack") == 4e9   # falls back to cross
+        with pytest.raises(ValueError):
+            cm.bw_for_class("intra_pod")
+
+    def test_scaled_scales_class_bandwidths(self):
+        cm = MN5.with_class_bandwidths(intra_rack=10e9, cross_rack=2e9)
+        slow = cm.scaled(4.0)
+        assert slow.bw_intra_rack == 2.5e9
+        assert slow.bw_cross_rack == 0.5e9
+
+    def test_redistribution_by_class_zero_bytes_no_setup(self):
+        assert MN5.redistribution_by_class(
+            {"intra_node": 0, "intra_rack": 0, "cross_rack": 0}) == 0.0
+
+
+# ======================================================== exact splitting ==
+class TestCrossShare:
+    def test_sums_exactly_whatever_the_remainders(self):
+        parts = [(3, True), (2, False), (5, True), (1, False)]
+        for total in (0, 1, 7, 10**9 + 7):
+            cross = _cross_share(total, parts)
+            inverse = _cross_share(
+                total, [(w, not c) for w, c in parts])
+            assert cross + inverse == max(0, total)
+
+    def test_proportional_when_divisible(self):
+        assert _cross_share(60, [(1, True), (2, False)]) == 20
+        assert _cross_share(60, [(1, False), (2, True)]) == 40
+
+    def test_empty_or_zero(self):
+        assert _cross_share(100, []) == 0
+        assert _cross_share(0, [(1, True)]) == 0
+
+
+# ============================================================== placement ==
+class TestPlacement:
+    TOPO = Topology(rack_sizes=(2, 3))
+
+    def test_rack_local_first_even_when_ids_are_higher(self):
+        # used node 3 sits in rack 1; its free rack-mates {2, 4} beat
+        # the lower-id nodes of the untouched rack 0
+        got = place_rack_local(self.TOPO, {3}, {0, 1, 2, 4}, 2)
+        assert got == [2, 4]
+        # with rack 1 exhausted, the higher-id rack-mate still beats
+        # the untouched rack's lower ids
+        assert place_rack_local(self.TOPO, {2, 3}, {0, 1, 4}, 2) == [4, 0]
+
+    def test_fresh_racks_packed_whole(self):
+        # nothing rack-local available: open ONE fresh rack and fill it
+        got = place_rack_local(self.TOPO, {0, 1}, {2, 3, 4}, 3)
+        assert got == [2, 3, 4]
+
+    def test_pod_local_fresh_rack_preferred(self):
+        topo = Topology(rack_sizes=(1, 1, 1, 1), pod_sizes=(2, 2))
+        # job occupies rack 0 (pod 0); the fresh rack in the SAME pod
+        # (rack 1 -> node 1) beats the pod-1 racks
+        assert place_rack_local(topo, {0}, {1, 2, 3}, 1) == [1]
+
+    def test_raises_when_pool_too_small(self):
+        with pytest.raises(RuntimeError):
+            place_rack_local(self.TOPO, {0}, {1}, 3)
+
+    def test_vacate_whole_rack_first(self):
+        # rack 0 (2 used) is the cheapest complete rack to hand back
+        assert vacate_racks(self.TOPO, {0, 1, 2, 3, 4}, 2) == [0, 1]
+        # equal counts: the higher rack id goes (matches the default
+        # highest-id-first release flavour)
+        assert vacate_racks(self.TOPO, {0, 1, 3, 4}, 2) == [3, 4]
+
+    def test_vacate_crosses_racks_when_it_must(self):
+        # releasing 3 of 5: whole rack 0 (2 nodes) + highest id of rack 1
+        assert vacate_racks(self.TOPO, {0, 1, 2, 3, 4}, 3) == [0, 1, 4]
+
+    def test_vacate_remainder_from_least_loaded_rack(self):
+        # no whole rack fits a budget of 1: take the highest id from the
+        # least-loaded (tie -> higher) rack
+        assert vacate_racks(self.TOPO, {0, 1, 3, 4}, 1) == [4]
+
+    def test_vacate_clamps_to_used(self):
+        assert vacate_racks(self.TOPO, {0, 1}, 5) == [0, 1]
+
+
+# ======================================================== topo strategy ==
+class TestTopoStrategy:
+    def test_registered_with_topology_flag(self):
+        spec = get_strategy(TOPO_KEY)
+        assert spec.parallel and spec.topology_aware
+        assert not spec.homogeneous_only
+
+    def test_plan_matches_diffusive_structure(self):
+        from repro.core import plan_diffusive
+
+        topo = plan_topo(2, 8, [2, 1, 2, 1, 2], Method.MERGE)
+        diff = plan_diffusive([2, 1, 2, 1, 2], [2, 0, 0, 0, 0], Method.MERGE)
+        assert strategy_key(topo.strategy) == TOPO_KEY
+        assert topo.to_spawn == diff.to_spawn
+        assert topo.steps == diff.steps
+        assert [g.size for g in topo.groups] == [g.size for g in diff.groups]
+
+    def test_engine_plans_by_registry_key_without_topology(self):
+        # the strategy is usable anywhere (topology optional): placement
+        # simply stays greedy and every moved byte stays intra-rack
+        engine = ReconfigEngine(strategy=TOPO_KEY)
+        plan = engine.plan_expand(2, 6, 1)
+        assert strategy_key(plan.strategy) == TOPO_KEY
+        assert engine.select_expansion_nodes([0, 1], {2, 3, 4}, 2) == [2, 3]
+
+    def test_placement_hooks_dispatch_on_topology(self):
+        topo = Topology(rack_sizes=(2, 3))
+        engine = ReconfigEngine(strategy=TOPO_KEY, topology=topo)
+        assert engine.select_expansion_nodes({3}, {0, 1, 2, 4}, 2) == [2, 4]
+        assert engine.select_release_nodes({0, 1, 2, 3, 4}, 2) == [0, 1]
+        # topology-blind strategies keep the greedy orders on the SAME engine
+        assert engine.select_expansion_nodes(
+            {3}, {0, 1, 2, 4}, 2, strategy="diffusive") == [0, 1]
+        assert engine.select_release_nodes(
+            {0, 1, 2, 3, 4}, 2, strategy="diffusive") == [3, 4]
+
+
+# ============================================= end-to-end class volumes ==
+class TestBytesByClass:
+    def test_sums_to_bytes_total_everywhere(self):
+        """Conservation: per event, per timeline, per record."""
+        for name in ("topo-redist", "hetero-redist", "redist-cycle"):
+            for rec in run_scenario_sim(get_scenario(name)):
+                assert sum(rec.bytes_by_class.values()) == (
+                    rec.bytes_stayed + rec.bytes_moved), (name, rec)
+
+    def test_topo_redist_class_volumes_pinned(self):
+        """The registered trace's exact per-class accounting."""
+        pb = param_bytes_for_arch("xlstm_125m")
+        recs = run_scenario_sim(get_scenario("topo-redist"))
+        burst, shrink, regrow = recs
+        # burst 1->5 nodes (2->8 ranks): 2 replicas to rack-mate node 1,
+        # 4 across to fresh rack 1; survivors re-validate 2 replicas
+        assert burst.bytes_by_class == {
+            "intra_node": 2 * pb, "intra_rack": 2 * pb, "cross_rack": 4 * pb}
+        # rack-vacating shrink: survivor replicas stay put
+        assert shrink.bytes_by_class == {
+            "intra_node": 2 * pb, "intra_rack": 0, "cross_rack": 0}
+        # rack-LOCAL regrow: both new replicas ride the intra-rack link
+        assert regrow.bytes_by_class == {
+            "intra_node": 2 * pb, "intra_rack": 2 * pb, "cross_rack": 0}
+
+    def test_classics_pay_cross_rack_where_topo_stays_local(self):
+        """The table_topology claim: greedy regrowth reopens the vacated
+        rack and pays the cross_rack link for copies topo gets
+        rack-locally."""
+        sc = get_scenario("topo-redist")
+        topo_total = sum(
+            r.bytes_cross_rack for r in run_scenario_sim(sc))
+        diff_recs = run_scenario_sim(
+            sc, engine=sc.default_engine(strategy="diffusive"))
+        diff_total = sum(r.bytes_cross_rack for r in diff_recs)
+        assert diff_total > topo_total
+        # and the diffusive regrow specifically crosses racks
+        assert diff_recs[-1].bytes_cross_rack > 0
+
+    def test_expansion_timeline_event_carries_the_split(self):
+        from repro.core import Stage
+
+        sc = get_scenario("topo-redist")
+        recs = run_scenario_sim(sc)
+        engine = sc.default_engine()
+        # rebuild the burst expansion's plan and inspect its event
+        plan = engine.plan_expand(2, 8, [2, 2, 1, 1, 2],
+                                 node_ids=[0, 1, 2, 3, 4])
+        tl = engine.timeline(plan)
+        ev = next(e for e in tl.events if e.stage is Stage.REDISTRIBUTION)
+        assert ev.bytes_by_class == recs[0].bytes_by_class
+        assert sum(ev.bytes_by_class.values()) == (
+            ev.bytes_stayed + ev.bytes_moved)
+        row = tl.as_rows()[-1]
+        assert row["bytes_cross_rack"] == ev.bytes_cross_rack
+
+
+# =========================================================== degradation ==
+class TestSingleRackDegradation:
+    def test_single_rack_equals_pr4_split_bit_for_bit(self):
+        """A topologized single-rack engine charges exactly what the
+        pre-topology per-link engine charged, event for event."""
+        from dataclasses import replace as dc_replace
+
+        sc = get_scenario("hetero-redist")      # PR-4's per-link trace
+        base = run_scenario_sim(sc)
+        topologized = dc_replace(
+            sc, name="tmp-single-rack",
+            rack_sizes=(sc.max_nodes(),))
+        topo = run_scenario_sim(topologized)
+        assert len(base) == len(topo)
+        for b, t in zip(base, topo):
+            assert t.est_wall_s == b.est_wall_s
+            assert t.downtime_s == b.downtime_s
+            assert (t.bytes_moved, t.bytes_stayed) == (
+                b.bytes_moved, b.bytes_stayed)
+            assert t.bytes_cross_rack == 0      # one rack: nothing crosses
+
+    def test_untopologized_records_report_zero_cross_rack(self):
+        for rec in run_scenario_sim(get_scenario("redist-cycle")):
+            assert rec.bytes_cross_rack == 0
+            assert rec.bytes_by_class["cross_rack"] == 0
+
+
+# ==================================================== live pool behaviour ==
+class TestTopoScenarioLive:
+    def test_topo_vacates_and_regrows_rack_local(self):
+        """After topo-nasp: rack 0 is ENTIRELY free (handed back whole)
+        and the regrow landed next to the rack-1 survivors."""
+        sc = get_scenario("topo-nasp")
+        pool = scenario_pool(sc)
+        run_scenario_live(sc, pool=pool)
+        assert pool.free == {0, 1}              # rack 0, complete
+        assert sorted(set(pool.nodes) - pool.free) == [2, 3, 4]
+
+    def test_greedy_strategy_fragments_the_same_trace(self):
+        """The same trace under diffusive placement keeps low ids busy —
+        the vacated capacity is NOT rack-granular."""
+        sc = get_scenario("topo-nasp")
+        pool = scenario_pool(sc)
+        run_scenario_live(sc, pool=pool,
+                          engine=sc.default_engine(strategy="diffusive"))
+        assert pool.free == {3, 4}
+        assert sorted(set(pool.nodes) - pool.free) == [0, 1, 2]
+
+    def test_shrink_returns_whole_uneven_nodes_across_racks(self):
+        """The paper's headline on a rack tree: the crossing shrink
+        still returns COMPLETE nodes, whatever their width."""
+        sc = get_scenario("topo-nasp")
+        recs = run_scenario_live(sc)
+        shrink = next(r for r in recs if r.kind == "shrink")
+        assert shrink.nodes_before == 5 and shrink.nodes_after == 2
+        # victims {0,1} empty rack 0 and {4} comes from rack 1
+        t = sc.topology()
+        assert {t.rack_of(0), t.rack_of(4)} == {0, 1}
+
+    def test_spare_whole_racks_keep_sim_live_parity(self):
+        """A rack tree larger than the trace's peak (spare whole racks)
+        must size BOTH executors' pools identically — the simulator
+        ranking placement against a smaller free set than the live
+        DevicePool silently broke per-event parity."""
+        from repro.malleability import Scenario, ScenarioEvent
+
+        sc = Scenario(
+            name="tmp-spare-racks",
+            description="peak 3 nodes on a 6-node (1,2,3) rack tree",
+            initial_nodes=1,
+            cores_per_node=2,
+            rack_sizes=(1, 2, 3),
+            events=(
+                ScenarioEvent(step=1, kind="grow", target_nodes=3),
+                ScenarioEvent(step=3, kind="shrink", target_nodes=2),
+                ScenarioEvent(step=5, kind="grow", target_nodes=3),
+            ),
+            steps=8,
+            arch="xlstm_125m",
+            redist_bw_local=25.0e9,
+            redist_bw_cross=2.5e9,
+            redist_bw_intra_rack=10.0e9,
+        )
+        assert sc.pool_nodes() == 6 > sc.max_nodes() == 3
+        sim = run_scenario_sim(sc)
+        live = run_scenario_live(sc)
+        assert len(sim) == len(live) >= 3
+        for s, l in zip(sim, live):
+            assert (s.est_wall_s, s.bytes_moved, s.bytes_stayed,
+                    s.bytes_cross_rack) == (
+                l.est_wall_s, l.bytes_moved, l.bytes_stayed,
+                l.bytes_cross_rack)
+
+    def test_multi_node_initial_world_shrinks_class_per_node(self):
+        """A multi-node initial world spanning racks is accounted node
+        by node: ranks sitting in the victims' rack absorb their share
+        intra-rack, not cross-rack."""
+        from repro.core import ClusterState as CoreState
+        from repro.malleability import fsdp_bytes_model
+
+        topo = Topology(rack_sizes=(2, 3))
+        engine = ReconfigEngine(strategy=TOPO_KEY, topology=topo,
+                                bytes_model=fsdp_bytes_model(100))
+        state = CoreState()
+        state.add_world([0, 1, 2], [1, 1, 1], is_initial=True)  # spans racks
+        state.add_world([3], [1])
+        state.add_world([4], [1])
+        plan = engine.plan_shrink(state, release_nodes=[3, 4])
+        spec = plan.redistribution
+        # victims empty rack 1's single-node worlds; the survivor world
+        # has 2 ranks in rack 0 (cross) and 1 rank in rack 1 (intra)
+        assert spec.bytes_total == 100
+        assert spec.bytes_cross_rack == 66
+        assert sum(spec.bytes_by_class.values()) == 100
+
+    def test_runtime_does_not_mutate_callers_engine(self):
+        from repro.elastic import ElasticRuntime
+
+        sc = get_scenario("topo-nasp")
+        pool = scenario_pool(sc)
+        engine = ReconfigEngine(strategy=TOPO_KEY)     # no topology
+        rt = ElasticRuntime(pool=pool, initial_nodes=1, engine=engine)
+        assert engine.topology is None                 # caller untouched
+        assert rt.engine.topology == sc.topology()     # runtime copy adopted
+
+    def test_overcommitting_grow_raises_identically_in_both_executors(self):
+        """A GROW beyond the pool must fail loudly in BOTH executors —
+        the simulator truncating where the live runtime raises would be
+        a silent parity break."""
+        from repro.malleability import Scenario, ScenarioEvent
+
+        sc = Scenario(
+            name="tmp-overcommit", description="grow past the pool",
+            initial_nodes=1, core_pool=(2, 2),
+            events=(ScenarioEvent(step=1, kind="grow", target_nodes=3),),
+            steps=4,
+        )
+        with pytest.raises(RuntimeError, match="pool exhausted"):
+            run_scenario_sim(sc)
+        with pytest.raises((RuntimeError, ValueError)):
+            run_scenario_live(sc)
+
+    def test_target_shrink_into_multinode_world_fails_loudly(self):
+        """A target-count shrink whose victims sit inside a multi-node
+        initial world would degrade to ZS (nodes pinned, target missed);
+        it must raise, identically in both executors."""
+        from repro.malleability import Scenario, ScenarioEvent
+
+        sc = Scenario(
+            name="tmp-zs-target", description="shrink-to inside initial MCW",
+            initial_nodes=4, cores_per_node=1,
+            events=(ScenarioEvent(step=1, kind="shrink", target_nodes=2),),
+            steps=4,
+        )
+        with pytest.raises(ValueError, match="multi-node"):
+            run_scenario_sim(sc)
+        with pytest.raises(ValueError, match="multi-node"):
+            run_scenario_live(sc)
+
+    def test_pool_topology_must_match_scenario(self):
+        from repro.elastic import DevicePool
+
+        sc = get_scenario("topo-nasp")
+        bare = DevicePool(devices=[object()] * sum(sc.core_pool),
+                          node_widths=sc.core_pool)
+        with pytest.raises(ValueError, match="topology"):
+            run_scenario_live(sc, pool=bare)
+
+    def test_pool_rejects_wrong_sized_topology(self):
+        from repro.elastic import DevicePool
+
+        with pytest.raises(ValueError, match="topology"):
+            DevicePool(devices=[object()] * 4, devices_per_node=1,
+                       topology=Topology(rack_sizes=(2, 3)))
+
+    def test_pool_rack_of(self):
+        pool = scenario_pool(get_scenario("topo-redist"))
+        assert pool.rack_of(0) == 0 and pool.rack_of(4) == 1
+        with pytest.raises(KeyError):
+            pool.rack_of(99)
+        bare = scenario_pool(get_scenario("steady-cycle"))
+        assert bare.rack_of(0) == 0                 # no topology: one rack
+
+    def test_runtime_rejects_conflicting_topologies(self):
+        from repro.elastic import ElasticRuntime
+
+        sc = get_scenario("topo-nasp")
+        pool = scenario_pool(sc)
+        engine = ReconfigEngine(strategy=TOPO_KEY,
+                                topology=Topology(rack_sizes=(5,)))
+        with pytest.raises(ValueError, match="topolog"):
+            ElasticRuntime(pool=pool, engine=engine)
+
+    def test_runtime_rejects_engine_topology_smaller_than_pool(self):
+        """An engine-only rack tree that does not cover the pool would
+        crash mid-reconfiguration (rack_of on an outside node) — it
+        must be rejected at construction instead."""
+        from repro.elastic import DevicePool, ElasticRuntime
+
+        pool = DevicePool(devices=[object()] * 6, devices_per_node=1)
+        engine = ReconfigEngine(strategy=TOPO_KEY,
+                                topology=Topology(rack_sizes=(2, 2)))
+        with pytest.raises(ValueError, match="covers 4 nodes"):
+            ElasticRuntime(pool=pool, engine=engine)
+
+
+# ======================================================= policy threading ==
+class TestPolicyTopology:
+    def test_from_pool_carries_topology_into_generated_traces(self):
+        from repro.malleability import BackfillPolicy, JobSpec
+        from repro.malleability.policies import ClusterState as RmsState
+
+        sc = get_scenario("topo-nasp")
+        pool = scenario_pool(sc)
+        cluster = RmsState.from_pool(
+            pool, jobs=(JobSpec("train", min_nodes=1, max_nodes=5),))
+        assert cluster.topology == sc.topology()
+        trace = BackfillPolicy(horizon=8).generate(cluster)
+        generated = trace.scenario("train", name="tmp-topo-policy")
+        assert generated.rack_sizes == sc.topology().rack_sizes
+        assert generated.topology_aware
+        # the generated trace replays through the simulator as-is
+        assert run_scenario_sim(generated) is not None
+
+    def test_undersized_topology_rejected(self):
+        from repro.malleability.policies import ClusterState as RmsState
+
+        with pytest.raises(ValueError, match="topology"):
+            RmsState(total_nodes=8, topology=Topology(rack_sizes=(2, 2)))
