@@ -26,6 +26,19 @@ gate prints a per-row drift table covering EVERY offending row (worst
 drift first), so the CI log shows the whole regression at once.
 Refresh the baseline deliberately (``--update`` + commit) whenever a PR
 *intends* to move est_wall.
+
+The documents' ``scale`` section (measured simulator throughput —
+object vs vectorized events/sec plus the 10k-node Monte-Carlo sweep)
+is machine-dependent and therefore never drift-compared.  Instead the
+gate applies thresholds to the CURRENT run:
+
+* the largest churn trace must show at least ``--min-speedup`` (default
+  50x) vectorized-over-object events/sec, and
+* the Monte-Carlo sweep must finish within ``--max-mc-seconds``
+  (default 10s),
+
+so a simulator-throughput regression fails CI even though the absolute
+rates float with the host.
 """
 from __future__ import annotations
 
@@ -100,14 +113,56 @@ def compare(
     return failures, infos
 
 
+def check_scale(
+    current: dict, min_speedup: float = 50.0, max_mc_seconds: float = 10.0
+) -> List[str]:
+    """Threshold-check the current run's measured ``scale`` section.
+
+    The section is measured wall time, so it is never compared against
+    the baseline's copy (machine-dependent) — the thresholds themselves
+    are the contract: the vectorized executor must beat the object path
+    by ``min_speedup`` on the largest churn trace, and the Monte-Carlo
+    sweep must finish within ``max_mc_seconds``.  A current run missing
+    the section entirely fails too (the throughput gate silently
+    disappearing is itself a regression).
+    """
+    failures: List[str] = []
+    section = current.get("scale") or []
+    churn = [r for r in section if r.get("table") == "scale"]
+    if churn:
+        big = max(churn, key=lambda r: r["events"])
+        speedup = float(big.get("speedup_vs_object", 0.0))
+        if speedup < min_speedup:
+            failures.append(
+                f"SCALE    vectorized speedup at {big['events']} events is "
+                f"{speedup:.1f}x (< required {min_speedup:.0f}x)")
+    else:
+        failures.append("SCALE    current run has no churn throughput rows "
+                        "(scale section missing or empty)")
+    mc = [r for r in section if r.get("table") == "scale-mc"]
+    if mc:
+        wall = float(mc[-1].get("wall_s", float("inf")))
+        if wall > max_mc_seconds:
+            failures.append(
+                f"SCALE    Monte-Carlo sweep ({mc[-1].get('pool_nodes')} "
+                f"nodes x {mc[-1].get('replicas')} replicas) took "
+                f"{wall:.2f}s (> allowed {max_mc_seconds:.0f}s)")
+    else:
+        failures.append("SCALE    current run has no Monte-Carlo sweep row "
+                        "(scale section missing or empty)")
+    return failures
+
+
 def update_baseline(path: str) -> int:
     """Regenerate ``path`` as a fresh ``--smoke --json`` document.
 
     Runs the benchmark driver in-process and writes its exact stdout, so
     the result is byte-identical to
-    ``PYTHONPATH=src python benchmarks/run.py --smoke --json > path``
-    (the simulator is deterministic and rows are name-sorted, so two
-    refreshes of the same tree produce the same bytes).
+    ``PYTHONPATH=src python benchmarks/run.py --smoke --json > path``.
+    The simulator is deterministic and rows are name-sorted, so the
+    drift-compared ``rows``/``envelopes`` sections reproduce exactly
+    across refreshes of the same tree; only the measured ``scale``
+    section (exempt from drift comparison) floats with the host.
     """
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for p in (os.path.join(repo, "benchmarks"), os.path.join(repo, "src")):
@@ -134,6 +189,12 @@ def main(argv=None) -> int:
                     help="fresh benchmarks/run.py --smoke --json output")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative est_wall drift per row (default 0.10)")
+    ap.add_argument("--min-speedup", type=float, default=50.0,
+                    help="required vectorized-over-object events/sec speedup "
+                         "on the largest churn trace (default 50)")
+    ap.add_argument("--max-mc-seconds", type=float, default=10.0,
+                    help="allowed wall time for the Monte-Carlo sweep row "
+                         "(default 10)")
     ap.add_argument("--update", action="store_true",
                     help="regenerate the baseline file deterministically "
                          "instead of comparing")
@@ -162,18 +223,29 @@ def main(argv=None) -> int:
               "different --smoke settings; comparing anyway", file=sys.stderr)
 
     failures, infos = compare(baseline, current, tolerance=args.tolerance)
+    scale_failures = check_scale(
+        current, min_speedup=args.min_speedup,
+        max_mc_seconds=args.max_mc_seconds)
     for line in infos:
         print(line)
     n = len(index_rows(baseline))
-    if failures:
-        print(_row("status", "row", "baseline_us", "current_us", "drift"),
-              file=sys.stderr)
-        for line in failures:
+    if failures or scale_failures:
+        if failures:
+            print(_row("status", "row", "baseline_us", "current_us", "drift"),
+                  file=sys.stderr)
+            for line in failures:
+                print(line, file=sys.stderr)
+        for line in scale_failures:
             print(line, file=sys.stderr)
-        print(f"check_bench: {len(failures)}/{n} baseline rows FAILED "
-              f"(tolerance {args.tolerance:.0%})", file=sys.stderr)
+        print(f"check_bench: {len(failures)}/{n} baseline rows + "
+              f"{len(scale_failures)} throughput thresholds FAILED "
+              f"(tolerance {args.tolerance:.0%}, min speedup "
+              f"{args.min_speedup:.0f}x, max MC {args.max_mc_seconds:.0f}s)",
+              file=sys.stderr)
         return 1
-    print(f"check_bench: {n} baseline rows within {args.tolerance:.0%}")
+    print(f"check_bench: {n} baseline rows within {args.tolerance:.0%}; "
+          f"throughput >= {args.min_speedup:.0f}x, "
+          f"MC <= {args.max_mc_seconds:.0f}s")
     return 0
 
 

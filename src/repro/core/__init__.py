@@ -53,6 +53,16 @@ from .sync import (
     spawn_children,
 )
 from .topology import DISTANCE_CLASSES, Topology
+from .vectorized import (
+    Charge,
+    ChargeStats,
+    EventArrays,
+    charge_stats,
+    hypercube_expand_charges,
+    queue_charge,
+    redistribution_charge,
+    ts_shrink_charges,
+)
 # Importing .topo registers the "topo" strategy in the engine registry
 # (it is an ordinary third-party-style registration).
 from .topo import TOPO_KEY, place_rack_local, plan_topo, vacate_racks
@@ -75,10 +85,13 @@ __all__ = [
     "DISTANCE_CLASSES",
     "SOURCE_GID",
     "TOPO_KEY",
+    "Charge",
+    "ChargeStats",
     "ClusterState",
     "Topology",
     "ConnectRound",
     "Event",
+    "EventArrays",
     "EventGraph",
     "ExecutionBackend",
     "GroupSpec",
@@ -106,10 +119,12 @@ __all__ = [
     "assert_ports_before_release",
     "binary_connection_schedule",
     "build_sync_graph",
+    "charge_stats",
     "expansion_timeline",
     "extend_graph_with_connection",
     "get_strategy",
     "global_order",
+    "hypercube_expand_charges",
     "node_of_rank",
     "nodes_at_step",
     "place_rack_local",
@@ -121,6 +136,8 @@ __all__ = [
     "plan_topo",
     "port_openers",
     "procs_at_step",
+    "queue_charge",
+    "redistribution_charge",
     "register_strategy",
     "registered_strategies",
     "reorder_key",
@@ -131,5 +148,6 @@ __all__ = [
     "spawn_children",
     "steps_required",
     "strategy_key",
+    "ts_shrink_charges",
     "vacate_racks",
 ]

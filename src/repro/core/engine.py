@@ -43,7 +43,7 @@ from .shrink import ClusterState
 from .shrink import plan_shrink as _plan_shrink_actions
 from .sync import EventGraph, build_sync_graph
 from .topology import Topology, split_bytes_by_class
-from .types import Method, ShrinkKind, ShrinkPlan, SpawnPlan, Strategy
+from .types import SOURCE_GID, Method, ShrinkKind, ShrinkPlan, SpawnPlan, Strategy
 
 if TYPE_CHECKING:  # runtime import would be circular (malleability → core)
     from repro.malleability.cost_model import CostModel
@@ -81,7 +81,9 @@ class TimelineEvent:
     (non-zero only on REDISTRIBUTION events today).  ``bytes_cross_rack``
     is the portion of ``bytes_moved`` whose source and destination nodes
     sit in different racks of the engine's :class:`~repro.core.topology
-    .Topology` (0 without a topology: everything is one rack), so
+    .Topology` (0 without a topology: everything is one rack), and
+    ``bytes_cross_pod`` the slice of that portion additionally crossing
+    pods (0 unless the topology defines pods), so
     :attr:`bytes_by_class` recovers the full distance-class split.
     """
 
@@ -93,12 +95,14 @@ class TimelineEvent:
     bytes_moved: int = 0
     bytes_stayed: int = 0
     bytes_cross_rack: int = 0
+    bytes_cross_pod: int = 0
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
         """Stage-3 bytes per distance class (sums to stayed + moved)."""
         return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
-                                    self.bytes_cross_rack)
+                                    self.bytes_cross_rack,
+                                    self.bytes_cross_pod)
 
     @property
     def duration(self) -> float:
@@ -159,10 +163,16 @@ class Timeline:
         return sum(e.bytes_cross_rack for e in self.events)
 
     @property
+    def bytes_cross_pod(self) -> int:
+        """Total stage-3 pod-crossing bytes charged across all events."""
+        return sum(e.bytes_cross_pod for e in self.events)
+
+    @property
     def bytes_by_class(self) -> dict[str, int]:
         """Stage-3 bytes per distance class across all events."""
         return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
-                                    self.bytes_cross_rack)
+                                    self.bytes_cross_rack,
+                                    self.bytes_cross_pod)
 
     @property
     def queued_s(self) -> float:
@@ -206,6 +216,7 @@ class Timeline:
                 "bytes_moved": e.bytes_moved,
                 "bytes_stayed": e.bytes_stayed,
                 "bytes_cross_rack": e.bytes_cross_rack,
+                "bytes_cross_pod": e.bytes_cross_pod,
             }
             for e in self.events
         ]
@@ -221,20 +232,22 @@ class _TimelineBuilder:
 
     def add(self, stage: Stage, duration: float, label: str = "",
             overlap_fraction: float = 0.0, bytes_moved: int = 0,
-            bytes_stayed: int = 0, bytes_cross_rack: int = 0) -> None:
+            bytes_stayed: int = 0, bytes_cross_rack: int = 0,
+            bytes_cross_pod: int = 0) -> None:
         if duration <= 0.0:
             return
         self._events.append(
             TimelineEvent(stage, self._t, self._t + duration, label,
                           overlap_fraction, bytes_moved, bytes_stayed,
-                          bytes_cross_rack)
+                          bytes_cross_rack, bytes_cross_pod)
         )
         self._t += duration
 
     def extend(self, events: Sequence[TimelineEvent]) -> None:
         for e in events:
             self.add(e.stage, e.duration, e.label, e.overlap_fraction,
-                     e.bytes_moved, e.bytes_stayed, e.bytes_cross_rack)
+                     e.bytes_moved, e.bytes_stayed, e.bytes_cross_rack,
+                     e.bytes_cross_pod)
 
     def build(self) -> Timeline:
         return Timeline(events=tuple(self._events), contention=self._contention)
@@ -373,6 +386,37 @@ def _cross_share(total: int, parts: Sequence[tuple[int, bool]]) -> int:
     return out
 
 
+def _class_shares(total: int,
+                  parts: Sequence[tuple[int, int]]) -> tuple[int, int]:
+    """Rack- and pod-crossing portions of ``total`` bytes.
+
+    Three-way generalization of :func:`_cross_share`: ``parts`` is
+    ``(weight, category)`` per destination where category 0 is
+    rack-local, 1 crosses racks inside the pod, and 2 crosses pods.
+    The cumulative integer boundaries are identical to
+    :func:`_cross_share` with ``is_cross = category >= 1``, so the
+    returned ``cross_rack`` total is bit-for-bit what the 2-way split
+    reported, and ``cross_pod <= cross_rack`` always holds (the pod
+    share is a refinement of the rack share).
+    """
+    weight_sum = sum(w for w, _ in parts)
+    if total <= 0 or weight_sum <= 0:
+        return 0, 0
+    xrack = 0
+    xpod = 0
+    cum = 0
+    prev = 0
+    for w, cat in parts:
+        cum += w
+        share = total * cum // weight_sum
+        if cat >= 1:
+            xrack += share - prev
+        if cat >= 2:
+            xpod += share - prev
+        prev = share
+    return xrack, xpod
+
+
 def _as_homogeneous(cores: Union[int, Sequence[int]]) -> int:
     if isinstance(cores, int):
         return cores
@@ -445,6 +489,8 @@ class RedistributionSpec:
     single-bandwidth charge exactly.  ``bytes_cross_rack`` is the part
     of ``bytes_total`` resolved (against the engine's topology and the
     plan's node placement) to cross racks; 0 without a topology.
+    ``bytes_cross_pod`` is the slice of that portion additionally
+    crossing pods; 0 unless the topology defines pods.
     """
 
     layout: tuple[tuple[int, int], ...]
@@ -454,12 +500,14 @@ class RedistributionSpec:
     bytes_total: int = 0
     bytes_stayed: int = 0
     bytes_cross_rack: int = 0
+    bytes_cross_pod: int = 0
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
         """Stage-3 bytes per distance class (sums to stayed + total)."""
         return split_bytes_by_class(self.bytes_stayed, self.bytes_total,
-                                    self.bytes_cross_rack)
+                                    self.bytes_cross_rack,
+                                    self.bytes_cross_pod)
 
 
 @dataclass(frozen=True)
@@ -525,6 +573,11 @@ class ReconfigOutcome:
         return self.timeline.bytes_cross_rack
 
     @property
+    def bytes_cross_pod(self) -> int:
+        """Stage-3 pod-crossing bytes charged on the timeline."""
+        return self.timeline.bytes_cross_pod
+
+    @property
     def bytes_by_class(self) -> dict[str, int]:
         """Stage-3 bytes per distance class charged on the timeline."""
         return self.timeline.bytes_by_class
@@ -554,14 +607,48 @@ def _is_parallel(plan: SpawnPlan) -> bool:
     return plan.strategy in (Strategy.PARALLEL_HYPERCUBE, Strategy.PARALLEL_DIFFUSIVE)
 
 
-def _spawn_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> None:
-    """Spawn phase per strategy; events overlap by ``cm.spawn_overlap``."""
+def _spawn_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel",
+                  topology: Optional[Topology] = None,
+                  node_ids: Sequence[int] = ()) -> None:
+    """Spawn phase per strategy; events overlap by ``cm.spawn_overlap``.
+
+    When the cost model prices spawn by topology (``gamma_rack`` /
+    ``gamma_pod`` set) AND the caller supplies the cluster layout plus
+    the plan's slot -> node placement, every launcher-tree edge is
+    charged a distance penalty: the class between the SPAWNING rank's
+    node and the target node (stages 1-2 are no longer a flat latency).
+    Unpriced models — or plans without explicit placement — take the
+    historical arithmetic verbatim, so existing numbers are bit-for-bit
+    unchanged.
+    """
     if not plan.groups:
         return
     f = cm.spawn_overlap
+    priced = (topology is not None and len(node_ids) > 0
+              and cm.spawn_topology_priced)
+
+    def _node(slot: int) -> Optional[int]:
+        return node_ids[slot] if 0 <= slot < len(node_ids) else None
+
+    root_slot = next((i for i, r in enumerate(plan.running) if r > 0), 0)
+
+    def _penalty(parent_slot: int, child_slot: int) -> float:
+        assert topology is not None
+        pn, cn = _node(parent_slot), _node(child_slot)
+        if pn is None or cn is None:
+            return 0.0
+        return cm.spawn_distance_penalty(topology.distance_class(pn, cn))
+
     if plan.strategy in (Strategy.SEQUENTIAL, Strategy.SINGLE):
         g = plan.groups[0]
         dur = cm.spawn_call(g.size, len(g.nodes_spanned()))
+        if priced:
+            # One collective launch rooted at the sources: the call waits
+            # for its farthest target node.
+            dur += max(
+                (_penalty(root_slot, slot) for slot in g.nodes_spanned()),
+                default=0.0,
+            )
         if plan.strategy is Strategy.SINGLE:
             # rank 0 informs the rest afterwards (MaM Single strategy)
             dur += cm.t_token * math.ceil(math.log2(max(plan.ns, 2)))
@@ -569,10 +656,21 @@ def _spawn_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> Non
         return
     if plan.strategy is Strategy.SEQUENTIAL_PER_NODE:
         for g in plan.groups:
-            tb.add(Stage.SPAWN, cm.spawn_call(g.size, 1),
+            dur = cm.spawn_call(g.size, 1)
+            if priced:
+                dur += _penalty(root_slot, g.node)
+            tb.add(Stage.SPAWN, dur,
                    label=f"spawn node {g.node}", overlap_fraction=f)
         return
     # Parallel strategies: rounds of concurrent single-node spawns.
+    by_gid = {g.gid: g for g in plan.groups}
+
+    def _parent_slot(g) -> int:
+        if g.parent_gid == SOURCE_GID:
+            return root_slot
+        parent = by_gid.get(g.parent_gid)
+        return parent.node if parent is not None else root_slot
+
     initial_nodes = sum(1 for r in plan.running if r > 0)
     for s in range(1, plan.steps + 1):
         round_groups = plan.groups_in_step(s)
@@ -581,9 +679,16 @@ def _spawn_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> Non
         oversub = plan.method is Method.BASELINE and any(
             g.node < initial_nodes for g in round_groups
         )
-        dur = cm.concurrent_round(
-            [(g.size, 1) for g in round_groups], oversubscribed=oversub
-        )
+        if priced:
+            dur = cm.concurrent_round_priced(
+                [(g.size, 1, _penalty(_parent_slot(g), g.node))
+                 for g in round_groups],
+                oversubscribed=oversub,
+            )
+        else:
+            dur = cm.concurrent_round(
+                [(g.size, 1) for g in round_groups], oversubscribed=oversub
+            )
         tb.add(Stage.SPAWN, dur, label=f"round {s} ({len(round_groups)} groups)",
                overlap_fraction=f)
 
@@ -626,7 +731,9 @@ def _connect_events(tb: _TimelineBuilder, plan: SpawnPlan, cm: "CostModel") -> N
 def expansion_timeline(
     plan: SpawnPlan, cm: "CostModel", bytes_total: int = 0,
     queue_delay_s: float = 0.0, bytes_stayed: int = 0,
-    bytes_cross_rack: int = 0,
+    bytes_cross_rack: int = 0, bytes_cross_pod: int = 0,
+    topology: Optional[Topology] = None,
+    node_ids: Sequence[int] = (),
 ) -> Timeline:
     """Charge one expansion as the paper's serial stage pipeline.
 
@@ -645,13 +752,20 @@ def expansion_timeline(
         bytes_cross_rack: the rack-crossing portion of ``bytes_total``,
             charged against ``cm.bw_cross_rack`` (the rest rides the
             intra-rack link).
+        bytes_cross_pod: the pod-crossing slice of ``bytes_cross_rack``,
+            charged against ``cm.bw_cross_pod``.
+        topology: cluster layout for topology-priced spawn (stages 1-2
+            launcher-tree edges charged by distance class); only
+            consulted when ``cm.spawn_topology_priced`` is set.
+        node_ids: cluster node id per allocation-vector slot (see
+            :class:`ReconfigPlan`); required for topology-priced spawn.
     Returns:
         The charged :class:`Timeline`.
     """
     tb = _TimelineBuilder(contention=cm.overlap_contention)
     if queue_delay_s > 0.0:
         tb.add(Stage.QUEUE, queue_delay_s, label="queued behind in-flight reconfig")
-    _spawn_events(tb, plan, cm)
+    _spawn_events(tb, plan, cm, topology=topology, node_ids=node_ids)
     _sync_event(tb, plan, cm)
     _connect_events(tb, plan, cm)
     parallel = _is_parallel(plan)
@@ -663,30 +777,35 @@ def expansion_timeline(
     # via the intercommunicator MPI_Comm_spawn returns).
     final = cm.connect_merge(plan.nt) if parallel else cm.beta_connect * plan.nt
     tb.add(Stage.FINAL, final, label="final intercomm merge")
-    _redistribution_event(tb, cm, bytes_total, bytes_stayed, bytes_cross_rack)
+    _redistribution_event(tb, cm, bytes_total, bytes_stayed, bytes_cross_rack,
+                          bytes_cross_pod)
     return tb.build()
 
 
 def _redistribution_event(tb: _TimelineBuilder, cm: "CostModel",
                           bytes_total: int, bytes_stayed: int,
-                          bytes_cross_rack: int = 0) -> None:
+                          bytes_cross_rack: int = 0,
+                          bytes_cross_pod: int = 0) -> None:
     """Append the stage-3 event, priced per distance class (no bytes,
     no event)."""
     if bytes_total <= 0 and bytes_stayed <= 0:
         return
     xrack = min(max(0, bytes_cross_rack), max(0, bytes_total))
+    xpod = min(max(0, bytes_cross_pod), xrack)
     if xrack > 0:
         label = (f"redistribute {bytes_total - xrack} B intra-rack + "
                  f"{xrack} B cross-rack + {max(0, bytes_stayed)} B local")
+        if xpod > 0:
+            label += f" ({xpod} B of it cross-pod)"
     elif bytes_stayed > 0:
         label = f"redistribute {bytes_total} B cross + {bytes_stayed} B local"
     else:
         label = f"redistribute {bytes_total} B"
     tb.add(Stage.REDISTRIBUTION,
-           cm.redistribution(bytes_total, bytes_stayed, xrack),
+           cm.redistribution(bytes_total, bytes_stayed, xrack, xpod),
            label=label, overlap_fraction=cm.redist_overlap,
            bytes_moved=bytes_total, bytes_stayed=max(0, bytes_stayed),
-           bytes_cross_rack=xrack)
+           bytes_cross_rack=xrack, bytes_cross_pod=xpod)
 
 
 def shrink_timeline(
@@ -701,6 +820,7 @@ def shrink_timeline(
     queue_delay_s: float = 0.0,
     bytes_stayed: int = 0,
     bytes_cross_rack: int = 0,
+    bytes_cross_pod: int = 0,
 ) -> Timeline:
     """Charge one shrink by mechanism (§4.6-4.7).
 
@@ -743,7 +863,8 @@ def shrink_timeline(
                 cm.ss_respawn(nt, max(1, -(-nt // width)), ns),
                 label="SS respawn",
             )
-    _redistribution_event(tb, cm, bytes_total, bytes_stayed, bytes_cross_rack)
+    _redistribution_event(tb, cm, bytes_total, bytes_stayed, bytes_cross_rack,
+                          bytes_cross_pod)
     return tb.build()
 
 
@@ -875,55 +996,79 @@ class ReconfigEngine:
         """Stage-3 cross-link (moved) bytes for an ``ns -> nt`` resize."""
         return self.redistribution_stats(ns, nt)[1]
 
-    def _expand_cross_rack_bytes(
+    def _expand_cross_bytes(
         self, spawn: SpawnPlan, node_ids: Sequence[int], moved: int
-    ) -> int:
-        """Rack-crossing portion of an expansion's moved bytes.
+    ) -> tuple[int, int]:
+        """(rack-, pod-)crossing portions of an expansion's moved bytes.
 
         Each spawned rank receives its proportional share of the moved
         volume; a destination node whose rack holds NO source rank can
-        only be fed across racks.  Exact integer arithmetic (cumulative
-        shares), so the per-class volumes always sum to ``moved``.
-        Without a topology or explicit placement everything is one rack.
+        only be fed across racks, and — when the topology defines pods —
+        one whose pod holds no source rank is fed across pods.  Exact
+        integer arithmetic (cumulative shares), so the per-class volumes
+        always sum to ``moved``.  Without a topology or explicit
+        placement everything is one rack.
         """
         if self.topology is None or moved <= 0 or not node_ids:
-            return 0
+            return 0, 0
         topo = self.topology
-        src_racks = {
-            topo.rack_of(node_ids[i])
-            for i, r in enumerate(spawn.running)
+        src_slots = [
+            i for i, r in enumerate(spawn.running)
             if r > 0 and i < len(node_ids)
-        }
+        ]
+        src_racks = {topo.rack_of(node_ids[i]) for i in src_slots}
+        src_pods = (
+            {topo.pod_of(node_ids[i]) for i in src_slots}
+            if topo.pod_sizes else set()
+        )
+
+        def _cat(node: int) -> int:
+            if topo.rack_of(node) in src_racks:
+                return 0
+            if topo.pod_sizes and topo.pod_of(node) not in src_pods:
+                return 2
+            return 1
+
         parts = [
-            (s, topo.rack_of(node_ids[i]) not in src_racks)
+            (s, _cat(node_ids[i]))
             for i, s in enumerate(spawn.to_spawn)
             if s > 0 and i < len(node_ids)
         ]
-        return _cross_share(moved, parts)
+        return _class_shares(moved, parts)
 
-    def _shrink_cross_rack_bytes(
+    def _shrink_cross_bytes(
         self, state: ClusterState, shrink: ShrinkPlan, moved: int
-    ) -> int:
-        """Rack-crossing portion of a shrink's moved bytes.
+    ) -> tuple[int, int]:
+        """(rack-, pod-)crossing portions of a shrink's moved bytes.
 
         Survivors absorb the doomed ranks' shards proportionally, one
         part per (world, node) a surviving rank sits on — a multi-node
         initial world spanning racks is accounted node by node — and a
-        destination node whose rack holds NO doomed node receives its
-        share across racks.
+        destination node whose rack (pod) holds NO doomed node receives
+        its share across racks (pods).
         """
         if self.topology is None or moved <= 0:
-            return 0
+            return 0, 0
         topo = self.topology
         doomed = set(shrink.doomed_wids())
-        victim_racks = {
-            topo.rack_of(n)
-            for a in shrink.actions
-            if a.wid in doomed
-            for n in a.nodes
-        }
+        victim_nodes = [
+            n for a in shrink.actions if a.wid in doomed for n in a.nodes
+        ]
+        victim_racks = {topo.rack_of(n) for n in victim_nodes}
         if not victim_racks:
-            return 0
+            return 0, 0
+        victim_pods = (
+            {topo.pod_of(n) for n in victim_nodes}
+            if topo.pod_sizes else set()
+        )
+
+        def _cat(node: int) -> int:
+            if topo.rack_of(node) in victim_racks:
+                return 0
+            if topo.pod_sizes and topo.pod_of(node) not in victim_pods:
+                return 2
+            return 1
+
         survivors = sorted(
             (w for w in state.worlds.values() if w.wid not in doomed),
             key=lambda w: (min(w.nodes), w.wid),
@@ -932,9 +1077,8 @@ class ReconfigEngine:
         for w in survivors:
             for node in sorted({r.node for r in w.ranks}):
                 n_ranks = sum(1 for r in w.ranks if r.node == node)
-                parts.append(
-                    (n_ranks, topo.rack_of(node) not in victim_racks))
-        return _cross_share(moved, parts)
+                parts.append((n_ranks, _cat(node)))
+        return _class_shares(moved, parts)
 
     def plan_expand(
         self,
@@ -979,6 +1123,7 @@ class ReconfigEngine:
             extend_graph_with_connection(graph, spawn)
             rounds = len(binary_connection_schedule(len(spawn.groups)))
         stayed, moved = self.redistribution_stats(ns, nt)
+        xrack, xpod = self._expand_cross_bytes(spawn, node_ids, moved)
         redistribution = RedistributionSpec(
             layout=tuple(global_order(spawn)) if spawn.groups else (),
             ns=ns,
@@ -986,8 +1131,8 @@ class ReconfigEngine:
             bytes_per_rank=self.bytes_per_rank,
             bytes_total=moved,
             bytes_stayed=stayed,
-            bytes_cross_rack=self._expand_cross_rack_bytes(
-                spawn, node_ids, moved),
+            bytes_cross_rack=xrack,
+            bytes_cross_pod=xpod,
         )
         return ReconfigPlan(
             kind="expand",
@@ -1038,6 +1183,7 @@ class ReconfigEngine:
         ns = sum(w.size for w in state.worlds.values())
         nt = max(0, ns - sum(doomed_sizes) - zombified)
         stayed, moved = self.redistribution_stats(ns, nt)
+        xrack, xpod = self._shrink_cross_bytes(state, shrink, moved)
         return ReconfigPlan(
             kind="shrink",
             method=self.method,
@@ -1054,8 +1200,8 @@ class ReconfigEngine:
                 bytes_per_rank=self.bytes_per_rank,
                 bytes_total=moved,
                 bytes_stayed=stayed,
-                bytes_cross_rack=self._shrink_cross_rack_bytes(
-                    state, shrink, moved),
+                bytes_cross_rack=xrack,
+                bytes_cross_pod=xpod,
             ),
             queue_delay_s=max(0.0, queue_delay_s),
         )
@@ -1079,12 +1225,17 @@ class ReconfigEngine:
         bytes_cross_rack = (
             plan.redistribution.bytes_cross_rack if plan.redistribution else 0
         )
+        bytes_cross_pod = (
+            plan.redistribution.bytes_cross_pod if plan.redistribution else 0
+        )
         if plan.kind == "expand":
             assert plan.spawn is not None
             return expansion_timeline(
                 plan.spawn, cm, bytes_total=bytes_total,
                 queue_delay_s=plan.queue_delay_s, bytes_stayed=bytes_stayed,
                 bytes_cross_rack=bytes_cross_rack,
+                bytes_cross_pod=bytes_cross_pod,
+                topology=self.topology, node_ids=plan.node_ids,
             )
         if plan.kind == "shrink":
             assert plan.shrink is not None
@@ -1098,6 +1249,7 @@ class ReconfigEngine:
                 queue_delay_s=plan.queue_delay_s,
                 bytes_stayed=bytes_stayed,
                 bytes_cross_rack=bytes_cross_rack,
+                bytes_cross_pod=bytes_cross_pod,
             )
         return Timeline()
 

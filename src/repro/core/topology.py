@@ -28,23 +28,32 @@ from dataclasses import dataclass
 # Stage-3 transfer classes, nearest first.  ``intra_node`` is data a
 # surviving device already holds (the former ``bytes_stayed`` /
 # local-link volume); ``intra_rack`` / ``cross_rack`` split the former
-# cross-link ``bytes_moved`` by whether the transfer leaves its rack.
-DISTANCE_CLASSES: tuple[str, ...] = ("intra_node", "intra_rack", "cross_rack")
+# cross-link ``bytes_moved`` by whether the transfer leaves its rack;
+# ``cross_pod`` is the slice of ``cross_rack`` that additionally leaves
+# its pod (only ever non-zero on a topology with ``pod_sizes`` set).
+DISTANCE_CLASSES: tuple[str, ...] = (
+    "intra_node", "intra_rack", "cross_rack", "cross_pod")
 
 
 def split_bytes_by_class(bytes_stayed: int, bytes_moved: int,
-                         bytes_cross_rack: int) -> dict[str, int]:
-    """The canonical stayed/moved/cross-rack -> distance-class split.
+                         bytes_cross_rack: int,
+                         bytes_cross_pod: int = 0) -> dict[str, int]:
+    """The canonical stayed/moved/cross-rack/cross-pod class split.
 
     Every ``bytes_by_class`` report (timeline events, timelines,
     redistribution specs, runtime and scenario records) delegates here,
     so the class accounting can only ever change in one place.  The
     values always sum to ``bytes_stayed + bytes_moved``.
+
+    ``bytes_cross_pod`` is a *refinement* of ``bytes_cross_rack`` (a
+    pod-crossing transfer necessarily crosses racks), so the reported
+    ``cross_rack`` entry is the pod-local remainder.
     """
     return {
         "intra_node": bytes_stayed,
         "intra_rack": bytes_moved - bytes_cross_rack,
-        "cross_rack": bytes_cross_rack,
+        "cross_rack": bytes_cross_rack - bytes_cross_pod,
+        "cross_pod": bytes_cross_pod,
     }
 
 
@@ -59,8 +68,11 @@ class Topology:
         pod_sizes: optional racks per pod (prefix assignment over rack
             ids); must sum to ``len(rack_sizes)`` when given.  Pods are
             a placement preference (the ``topo`` strategy opens fresh
-            racks pod-locally); pricing uses the three
-            :data:`DISTANCE_CLASSES` only.
+            racks pod-locally) *and* a pricing boundary: with pods set,
+            rack-crossing transfers that also leave their pod resolve
+            to the ``cross_pod`` class.  Without pods every rack is its
+            own pod and ``cross_pod`` never appears — the 3-class
+            behaviour, bit for bit.
     """
 
     rack_sizes: tuple[int, ...]
@@ -149,9 +161,16 @@ class Topology:
         return self.pod_of_rack(self.rack_of(node))
 
     def distance_class(self, src_node: int, dst_node: int) -> str:
-        """Transfer class between two nodes (one of DISTANCE_CLASSES)."""
+        """Transfer class between two nodes (one of DISTANCE_CLASSES).
+
+        ``cross_pod`` is only ever returned when ``pod_sizes`` is set:
+        without pods, ``pod_of_rack`` degenerates to the rack id, which
+        would misclassify every rack crossing as a pod crossing.
+        """
         if src_node == dst_node:
             return "intra_node"
         if self.rack_of(src_node) == self.rack_of(dst_node):
             return "intra_rack"
+        if self.pod_sizes and self.pod_of(src_node) != self.pod_of(dst_node):
+            return "cross_pod"
         return "cross_rack"

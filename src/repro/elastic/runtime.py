@@ -64,12 +64,14 @@ class ReconfigRecord:
     queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
     bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
     bytes_cross_rack: int = 0  # rack-crossing portion of bytes_moved
+    bytes_cross_pod: int = 0   # pod-crossing slice of bytes_cross_rack
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
         """Stage-3 bytes per distance class (sums to stayed + moved)."""
         return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
-                                    self.bytes_cross_rack)
+                                    self.bytes_cross_rack,
+                                    self.bytes_cross_pod)
 
 
 class ElasticRuntime:
@@ -300,6 +302,7 @@ class ElasticRuntime:
             queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
+            bytes_cross_pod=outcome.bytes_cross_pod,
         )
         self.history.append(rec)
         return rec
@@ -350,6 +353,7 @@ class ElasticRuntime:
             queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
+            bytes_cross_pod=outcome.bytes_cross_pod,
         )
         self.history.append(rec)
         return rec

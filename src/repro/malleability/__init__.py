@@ -35,6 +35,7 @@ from .policies import (
     BackfillPolicy,
     ChurnPolicy,
     JobSpec,
+    MonteCarloSweep,
     MultiJobOutcome,
     PolicyTrace,
     PreemptionPolicy,
@@ -45,6 +46,7 @@ from .policies import (
     backfill_pressure,
     charge_in_flight_queueing,
     churn_trace,
+    monte_carlo_sweep,
     priority_preempt,
     registered_policy_scenarios,
     run_multijob_sim,
@@ -55,6 +57,7 @@ from .scenarios import (
     Scenario,
     ScenarioEvent,
     ScenarioRecord,
+    TransitionCache,
     burst_arrival,
     dispatch_event,
     get_scenario,
@@ -66,10 +69,12 @@ from .scenarios import (
     registered_scenarios,
     run_scenario_live,
     run_scenario_sim,
+    run_scenario_vectorized,
     scenario_pool,
     steady_cycle,
     straggler_churn,
     topology_nasp,
+    topology_pods,
     topology_redist,
 )
 from .simulator import (
@@ -89,6 +94,7 @@ __all__ = [
     "CostModel",
     "ExpansionReport",
     "JobSpec",
+    "MonteCarloSweep",
     "MultiJobOutcome",
     "PolicyTrace",
     "PreemptionPolicy",
@@ -100,6 +106,7 @@ __all__ = [
     "ScenarioEvent",
     "ScenarioRecord",
     "ShrinkReport",
+    "TransitionCache",
     "arbitrate_jobs",
     "backfill_pressure",
     "burst_arrival",
@@ -109,6 +116,7 @@ __all__ = [
     "fsdp_bytes_model",
     "get_scenario",
     "heterogeneous_pool",
+    "monte_carlo_sweep",
     "node_failures",
     "param_bytes_for_arch",
     "priority_preempt",
@@ -121,6 +129,7 @@ __all__ = [
     "run_multijob_sim",
     "run_scenario_live",
     "run_scenario_sim",
+    "run_scenario_vectorized",
     "scenario_pool",
     "simulate_expansion",
     "simulate_redistribution",
@@ -128,6 +137,7 @@ __all__ = [
     "steady_cycle",
     "straggler_churn",
     "topology_nasp",
+    "topology_pods",
     "topology_redist",
     "two_job_interference",
 ]

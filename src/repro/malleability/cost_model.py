@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
+from functools import cached_property
 from typing import Mapping
 
 
@@ -29,6 +30,14 @@ class CostModel:
     gamma_tree: float = 5.0e-3      # per tree-hop of the daemon broadcast
     delta_contend: float = 8.0e-4   # serialization between concurrent calls
     oversub_penalty: float = 1.6    # slowdown while procs > cores on a node
+    # Topology-priced spawn: optional per-call surcharges when the
+    # launcher tree crosses a rack (gamma_rack) or additionally a pod
+    # (gamma_pod, on top of the rack hop) between the spawning rank's
+    # node and the spawned group's node.  Both default to None = the
+    # historical flat-latency spawn charge, bit for bit; engines only
+    # take the priced path when at least one is set.
+    gamma_rack: float | None = None
+    gamma_pod: float | None = None
 
     # -- ports / name service --------------------------------------------------
     t_port: float = 2.0e-3          # MPI_Open_port + MPI_Publish_name
@@ -59,12 +68,14 @@ class CostModel:
     # ``intra_rack`` and ``cross_rack`` by the topology distance between
     # their source and destination nodes.  The class-specific bandwidths
     # fall back ``intra_rack``/``cross_rack`` -> ``redist_bw_cross`` ->
-    # aggregate ``redist_bw``, so the 2-class defaults (and the fully
-    # unset model) reproduce the pre-topology numbers bit for bit.
+    # aggregate ``redist_bw`` (and ``cross_pod`` -> ``cross_rack``), so
+    # the 2- and 3-class defaults (and the fully unset model) reproduce
+    # the pre-topology numbers bit for bit.
     redist_bw_local: float | None = None
     redist_bw_cross: float | None = None
     redist_bw_intra_rack: float | None = None
     redist_bw_cross_rack: float | None = None
+    redist_bw_cross_pod: float | None = None
 
     # -- partial overlap (stage x compute) -------------------------------------------
     # Fraction of each stage that can proceed under application compute when
@@ -111,6 +122,45 @@ class CostModel:
             slowest *= self.oversub_penalty
         return slowest + self.delta_contend * (len(calls) - 1)
 
+    @property
+    def spawn_topology_priced(self) -> bool:
+        """True when spawn calls carry distance-class surcharges."""
+        return self.gamma_rack is not None or self.gamma_pod is not None
+
+    def spawn_distance_penalty(self, distance_class: str) -> float:
+        """Launcher-tree surcharge for one spawn call by distance class.
+
+        ``intra_node`` / ``intra_rack`` spawns stay at the flat charge;
+        a ``cross_rack`` spawn pays ``gamma_rack``; a ``cross_pod``
+        spawn pays ``gamma_rack + gamma_pod`` (the pod hop rides on top
+        of the rack hop).  Unset gammas contribute 0.0.
+        """
+        if distance_class in ("intra_node", "intra_rack"):
+            return 0.0
+        rack = self.gamma_rack or 0.0
+        if distance_class == "cross_rack":
+            return rack
+        if distance_class == "cross_pod":
+            return rack + (self.gamma_pod or 0.0)
+        raise ValueError(f"unknown distance class {distance_class!r}")
+
+    def concurrent_round_priced(
+        self, calls: list[tuple[int, int, float]],
+        oversubscribed: bool = False,
+    ) -> float:
+        """`concurrent_round` with a per-call distance surcharge.
+
+        Each call is ``(procs, nodes, penalty_s)``.  With every penalty
+        at 0.0 this reproduces :meth:`concurrent_round` exactly
+        (``x + 0.0 == x`` for the non-negative charges involved).
+        """
+        if not calls:
+            return 0.0
+        slowest = max(self.spawn_call(p, k) + pen for p, k, pen in calls)
+        if oversubscribed:
+            slowest *= self.oversub_penalty
+        return slowest + self.delta_contend * (len(calls) - 1)
+
     def barrier(self, procs: int) -> float:
         return self.t_barrier_hop * max(1, math.ceil(math.log2(max(procs, 2))))
 
@@ -134,37 +184,55 @@ class CostModel:
             + self.comm_split(nt)
         )
 
-    @property
+    # Bandwidth resolution is cached per instance: timeline charging
+    # asks for the same resolved links on every event, and the fallback
+    # chains below would otherwise be re-walked per event.  The model is
+    # frozen, so a cached value can never go stale (``replace()`` makes
+    # a fresh instance with an empty cache); ``functools.cached_property``
+    # writes straight into ``__dict__``, bypassing the frozen guard.
+    @cached_property
     def bw_local(self) -> float:
         """Resolved intra_node bandwidth (aggregate unless split)."""
         return self.redist_bw if self.redist_bw_local is None else self.redist_bw_local
 
-    @property
+    @cached_property
     def bw_cross(self) -> float:
         """Resolved cross-group bandwidth (aggregate unless split)."""
         return self.redist_bw if self.redist_bw_cross is None else self.redist_bw_cross
 
-    @property
+    @cached_property
     def bw_intra_rack(self) -> float:
         """Resolved intra_rack bandwidth (cross link unless split further)."""
         return (self.bw_cross if self.redist_bw_intra_rack is None
                 else self.redist_bw_intra_rack)
 
-    @property
+    @cached_property
     def bw_cross_rack(self) -> float:
         """Resolved cross_rack bandwidth (cross link unless split further)."""
         return (self.bw_cross if self.redist_bw_cross_rack is None
                 else self.redist_bw_cross_rack)
 
+    @cached_property
+    def bw_cross_pod(self) -> float:
+        """Resolved cross_pod bandwidth (cross_rack link unless split)."""
+        return (self.bw_cross_rack if self.redist_bw_cross_pod is None
+                else self.redist_bw_cross_pod)
+
+    @cached_property
+    def class_bandwidths(self) -> dict[str, float]:
+        """All four distance classes resolved once (cached)."""
+        return {
+            "intra_node": self.bw_local,
+            "intra_rack": self.bw_intra_rack,
+            "cross_rack": self.bw_cross_rack,
+            "cross_pod": self.bw_cross_pod,
+        }
+
     def bw_for_class(self, distance_class: str) -> float:
         """Bandwidth pricing one :data:`~repro.core.topology
         .DISTANCE_CLASSES` entry (unknown classes raise)."""
         try:
-            return {
-                "intra_node": self.bw_local,
-                "intra_rack": self.bw_intra_rack,
-                "cross_rack": self.bw_cross_rack,
-            }[distance_class]
+            return self.class_bandwidths[distance_class]
         except KeyError:
             raise ValueError(
                 f"unknown distance class {distance_class!r}"
@@ -174,48 +242,63 @@ class CostModel:
         """Stage-3 wall time: each byte priced on its distance class.
 
         Zero bytes across every class means no redistribution event at
-        all (no setup charge).  The two *moved* classes (``intra_rack``
-        / ``cross_rack``) collapse into one division whenever their
-        bandwidths are equal — floating-point associativity would
-        otherwise make a cost-neutral rack split drift in the last ulp,
-        and the 2-class model must reproduce the pre-topology charge
-        bit for bit.
+        all (no setup charge).  The *moved* classes (``intra_rack`` /
+        ``cross_rack`` / ``cross_pod``) collapse into fewer divisions
+        whenever their bandwidths are equal — floating-point
+        associativity would otherwise make a cost-neutral rack or pod
+        split drift in the last ulp, and the 2-class (and 3-class)
+        models must reproduce the pre-generalization charges bit for
+        bit.  The collapse merges *integer* byte counts, so it is
+        exact.
         """
         for cls in bytes_by_class:
-            if cls not in ("intra_node", "intra_rack", "cross_rack"):
+            if cls not in ("intra_node", "intra_rack", "cross_rack",
+                           "cross_pod"):
                 self.bw_for_class(cls)      # unknown classes always raise
         if all(b <= 0 for b in bytes_by_class.values()):
             return 0.0
         stayed = max(0, bytes_by_class.get("intra_node", 0))
         intra = max(0, bytes_by_class.get("intra_rack", 0))
         cross = max(0, bytes_by_class.get("cross_rack", 0))
+        pod = max(0, bytes_by_class.get("cross_pod", 0))
         total = self.redist_alpha + stayed / self.bw_local
+        if self.bw_cross_pod == self.bw_cross_rack:
+            cross += pod        # exact int merge: pod rides the rack link
+            pod = 0
         if self.bw_intra_rack == self.bw_cross_rack:
             total += (intra + cross) / self.bw_cross_rack
         else:
             total += intra / self.bw_intra_rack + cross / self.bw_cross_rack
+        if pod:
+            total += pod / self.bw_cross_pod
         return total
 
     def redistribution(self, moved_bytes: int, stayed_bytes: int = 0,
-                       cross_rack_bytes: int = 0) -> float:
+                       cross_rack_bytes: int = 0,
+                       cross_pod_bytes: int = 0) -> float:
         """Stage-3 wall time: per-class pricing of one redistribution.
 
         ``moved_bytes`` cross device boundaries; the ``cross_rack_bytes``
         portion of them additionally crosses racks and is charged on the
-        ``cross_rack`` link, the rest on ``intra_rack``.  ``stayed_bytes``
+        ``cross_rack`` link, the rest on ``intra_rack``; the
+        ``cross_pod_bytes`` slice of the rack-crossing portion further
+        leaves its pod and rides the ``cross_pod`` link.  ``stayed_bytes``
         are shards a surviving device already holds, re-validated over
         the (usually much faster) ``intra_node`` link.  With the default
-        2-class model (no per-rack split) both moved classes price at the
-        cross-link bandwidth, so ``cross_rack_bytes`` splits are
-        cost-neutral there and the charge is bit-for-bit the PR-4
-        local/cross number — and with ``stayed_bytes == 0``, the original
-        aggregate charge ``redist_alpha + moved / redist_bw``.
+        2-class model (no per-rack split) the moved classes all price at
+        the cross-link bandwidth, so ``cross_rack_bytes`` /
+        ``cross_pod_bytes`` splits are cost-neutral there and the charge
+        is bit-for-bit the PR-4 local/cross number — and with
+        ``stayed_bytes == 0``, the original aggregate charge
+        ``redist_alpha + moved / redist_bw``.
         """
         xrack = min(max(0, cross_rack_bytes), max(0, moved_bytes))
+        xpod = min(max(0, cross_pod_bytes), xrack)
         return self.redistribution_by_class({
             "intra_node": max(0, stayed_bytes),
             "intra_rack": max(0, moved_bytes) - xrack,
-            "cross_rack": xrack,
+            "cross_rack": xrack - xpod,
+            "cross_pod": xpod,
         })
 
     def with_link_bandwidths(
@@ -234,6 +317,7 @@ class CostModel:
         intra_node: float | None = None,
         intra_rack: float | None = None,
         cross_rack: float | None = None,
+        cross_pod: float | None = None,
     ) -> "CostModel":
         """Copy of this model with per-distance-class stage-3 bandwidths."""
         return replace(
@@ -244,6 +328,8 @@ class CostModel:
                                   else intra_rack),
             redist_bw_cross_rack=(self.redist_bw_cross_rack if cross_rack is None
                                   else cross_rack),
+            redist_bw_cross_pod=(self.redist_bw_cross_pod if cross_pod is None
+                                 else cross_pod),
         )
 
     def with_overlap(
@@ -300,6 +386,16 @@ class CostModel:
             redist_bw_cross_rack=(
                 None if self.redist_bw_cross_rack is None
                 else self.redist_bw_cross_rack / factor
+            ),
+            redist_bw_cross_pod=(
+                None if self.redist_bw_cross_pod is None
+                else self.redist_bw_cross_pod / factor
+            ),
+            gamma_rack=(
+                None if self.gamma_rack is None else self.gamma_rack * factor
+            ),
+            gamma_pod=(
+                None if self.gamma_pod is None else self.gamma_pod * factor
             ),
             redist_alpha=self.redist_alpha * factor,
         )

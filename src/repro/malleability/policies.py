@@ -41,8 +41,10 @@ from .scenarios import (
     SHRINK,
     Scenario,
     ScenarioEvent,
+    TransitionCache,
     register_scenario,
     run_scenario_sim,
+    run_scenario_vectorized,
     steady_cycle,
 )
 
@@ -462,7 +464,18 @@ class ChurnPolicy:
         events: List[ScenarioEvent] = []
         step = self.start_step
         for _ in range(self.decisions):
-            target = rng.choice([n for n in range(lo, hi + 1) if n != alloc])
+            # Stream-identical O(1) draw: ``random.choice(seq)`` consumes
+            # exactly one ``_randbelow(len(seq))``, and ``randrange(n)``
+            # is that same call, so indexing the ``hi - lo`` non-current
+            # candidates and skipping past ``alloc`` reproduces the
+            # historical list-based choice bit-for-bit without
+            # materializing the list (``hi`` can be a 10k-node pod).
+            if lo <= alloc <= hi:
+                target = lo + rng.randrange(hi - lo)
+                if target >= alloc:
+                    target += 1
+            else:  # alloc outside the band: every candidate is drawable
+                target = lo + rng.randrange(hi - lo + 1)
             events.append(_resize(step, alloc, target))
             alloc = target
             step += self.period
@@ -660,18 +673,94 @@ def run_multijob_sim(
     pool_nodes: int,
     *,
     contention: float = 1.25,
+    vectorized: bool = True,
 ):
     """Arbitrate and simulate a multi-job workload on one pool.
 
     Returns ``(records, outcome)``: per-job
     :class:`~repro.malleability.scenarios.ScenarioRecord` lists from the
     timeline-charging simulator, plus the :class:`MultiJobOutcome` whose
-    scenarios produced them.
+    scenarios produced them.  ``vectorized=True`` (the default) runs
+    each arbitrated trace through :func:`~repro.malleability.scenarios
+    .run_scenario_vectorized` — bit-for-bit the same records, charged
+    through the memoizing transition engine; caches are per trace (each
+    job carries its own cost context and contention override).
     """
     outcome = arbitrate_jobs(jobs, pool_nodes, contention=contention)
-    records = {name: run_scenario_sim(sc)
-               for name, sc in outcome.scenarios.items()}
+    runner = run_scenario_vectorized if vectorized else run_scenario_sim
+    records = {name: runner(sc) for name, sc in outcome.scenarios.items()}
     return records, outcome
+
+
+# =================================================== Monte-Carlo sweeps ==
+@dataclass(frozen=True)
+class MonteCarloSweep:
+    """Per-replica cost distributions of a seeded policy sweep."""
+
+    policy: str
+    n_replicas: int
+    makespans: Tuple[float, ...]   # per replica: sum of est_wall_s
+    downtimes: Tuple[float, ...]   # per replica: sum of downtime_s
+    reconfigs: int                 # records charged across all replicas
+    cache_hits: int
+    cache_misses: int
+
+    def summary(self) -> dict:
+        """Distribution summary (mean/min/max) as a flat dict row."""
+        def _stats(xs: Tuple[float, ...], tag: str) -> dict:
+            return {
+                f"{tag}_mean_s": sum(xs) / len(xs) if xs else 0.0,
+                f"{tag}_min_s": min(xs, default=0.0),
+                f"{tag}_max_s": max(xs, default=0.0),
+            }
+
+        row = {"policy": self.policy, "replicas": self.n_replicas,
+               "reconfigs": self.reconfigs}
+        row.update(_stats(self.makespans, "makespan"))
+        row.update(_stats(self.downtimes, "downtime"))
+        return row
+
+
+def monte_carlo_sweep(
+    policy, n_replicas: int, cluster: Optional[ClusterState] = None
+) -> MonteCarloSweep:
+    """Seeded Monte-Carlo sweep of a policy's cost distribution.
+
+    Runs ``n_replicas`` replicas of ``policy`` — seeds ``0 .. n-1`` via
+    ``dataclasses.replace(policy, seed=s)``, so the policy must carry a
+    ``seed`` field (e.g. :class:`ChurnPolicy`) — against ``cluster``
+    (default: the 8-node single-malleable-job pool the registered churn
+    trace uses).  Every replica's trace runs through
+    :func:`~repro.malleability.scenarios.run_scenario_vectorized` with
+    ONE shared :class:`~repro.malleability.scenarios.TransitionCache`:
+    the replicas differ only in their event sequences, never in cost
+    context, so transitions seen by any replica price the rest for
+    free.  This is what makes 1000-replica sweeps over 10k-node pods
+    finish in seconds.
+    """
+    if cluster is None:
+        cluster = ClusterState(
+            total_nodes=8,
+            jobs=(JobSpec("train", min_nodes=1, max_nodes=8),),
+        )
+    job = cluster.primary_malleable().name
+    cache = TransitionCache()
+    makespans: List[float] = []
+    downtimes: List[float] = []
+    reconfigs = 0
+    for s in range(n_replicas):
+        trace = replace(policy, seed=s).generate(cluster)
+        sc = trace.scenario(job, name=f"{policy.name}-mc-{s}")
+        recs = run_scenario_vectorized(sc, cache=cache)
+        reconfigs += len(recs)
+        makespans.append(sum(r.est_wall_s for r in recs))
+        downtimes.append(sum(r.downtime_s for r in recs))
+    return MonteCarloSweep(
+        policy=policy.name, n_replicas=n_replicas,
+        makespans=tuple(makespans), downtimes=tuple(downtimes),
+        reconfigs=reconfigs, cache_hits=cache.hits,
+        cache_misses=cache.misses,
+    )
 
 
 # ================================================= registered policy traces ==

@@ -34,6 +34,7 @@ from repro.core import (
     ClusterState,
     Method,
     ReconfigEngine,
+    ShrinkKind,
     Strategy,
     Topology,
     apply_shrink,
@@ -142,6 +143,16 @@ class Scenario:
     #                                  engine carries the Topology and the
     #                                  "topo" strategy places against it
     pod_sizes: tuple[int, ...] = ()  # optional racks per pod (prefix order)
+    redist_bw_cross_pod: float = 0.0  # >0 prices the pod-crossing slice of
+    #                                  the rack-crossing bytes on its own
+    #                                  (slowest) link; 0 keeps cross_pod at
+    #                                  the cross_rack bandwidth — the
+    #                                  3-class numbers, bit for bit
+    gamma_rack: float = 0.0          # >0 prices stages 1-2 by topology: per
+    gamma_pod: float = 0.0           # launcher-tree edge, rack-crossing
+    #                                  spawns pay +gamma_rack and pod-crossing
+    #                                  ones +gamma_rack+gamma_pod on top of
+    #                                  the flat latency; 0 keeps spawn flat
 
     @property
     def heterogeneous(self) -> bool:
@@ -156,7 +167,8 @@ class Scenario:
     def link_aware(self) -> bool:
         """True when the trace prices stage 3 per link (split bandwidths)."""
         return (self.redist_bw_local > 0.0 or self.redist_bw_cross > 0.0
-                or self.redist_bw_intra_rack > 0.0)
+                or self.redist_bw_intra_rack > 0.0
+                or self.redist_bw_cross_pod > 0.0)
 
     def topology(self) -> Optional[Topology]:
         """The declared :class:`~repro.core.Topology`, or ``None``.
@@ -219,13 +231,18 @@ class Scenario:
                 local=self.redist_bw_local or None,
                 cross=self.redist_bw_cross or None,
             )
-            if self.redist_bw_intra_rack > 0.0:
-                # Three distance classes: intra-rack moves price here,
-                # rack-crossing moves keep the (slower) cross link.
+            if self.redist_bw_intra_rack > 0.0 or self.redist_bw_cross_pod > 0.0:
+                # Three (or four) distance classes: intra-rack moves
+                # price here, rack-crossing moves keep the (slower)
+                # cross link, and pod-crossing ones the slowest link.
                 cm = cm.with_class_bandwidths(
-                    intra_rack=self.redist_bw_intra_rack,
+                    intra_rack=self.redist_bw_intra_rack or None,
                     cross_rack=self.redist_bw_cross or None,
+                    cross_pod=self.redist_bw_cross_pod or None,
                 )
+        if self.gamma_rack > 0.0 or self.gamma_pod > 0.0:
+            cm = replace(cm, gamma_rack=self.gamma_rack or None,
+                         gamma_pod=self.gamma_pod or None)
         return cm
 
     def resolved_param_bytes(self) -> int:
@@ -547,6 +564,42 @@ def topology_redist(name: str = "topo-redist") -> Scenario:
     )
 
 
+def topology_pods(name: str = "topo-pods") -> Scenario:
+    """Pod-aware pricing: 3 racks in 2 pods, 4-class links + priced spawn.
+
+    Pod 0 holds racks 0-1 (nodes {0,1} and {2}), pod 1 holds rack 2
+    (nodes {3,4}) — uniform 1-wide nodes so EVERY strategy (including
+    the hypercube) runs the trace.  The burst grow from node 0 must open
+    rack 1 (same pod) and rack 2 (the other pod), so its stage-3 shares
+    split across all four distance classes and its stages 1-2 launcher
+    tree pays per-edge ``gamma_rack`` / ``gamma_pod`` penalties; the
+    shrink vacates the far pod whole (survivor replicas stay put); the
+    regrow reopens it and pays the pod link again.
+    """
+    return Scenario(
+        name=name,
+        description="2-pod/3-rack pool: 4-class link pricing + "
+                    "topology-priced spawn",
+        initial_nodes=1,
+        cores_per_node=1,
+        rack_sizes=(2, 1, 2),
+        pod_sizes=(2, 1),
+        events=(
+            ScenarioEvent(step=2, kind=GROW, target_nodes=5),
+            ScenarioEvent(step=6, kind=SHRINK, nodes=(3, 4)),
+            ScenarioEvent(step=10, kind=GROW, target_nodes=4),
+        ),
+        steps=13,
+        arch="xlstm_125m",
+        redist_bw_local=25.0e9,
+        redist_bw_cross=2.5e9,
+        redist_bw_intra_rack=10.0e9,
+        redist_bw_cross_pod=1.0e9,
+        gamma_rack=0.002,
+        gamma_pod=0.004,
+    )
+
+
 for _sc in (
     steady_cycle(),
     burst_arrival(),
@@ -570,6 +623,7 @@ for _sc in (
     # and stage-3 bytes price per rack distance class.
     topology_nasp(),
     topology_redist(),
+    topology_pods(),
 ):
     register_scenario(_sc)
 
@@ -590,12 +644,14 @@ class ScenarioRecord:
     queued_s: float = 0.0      # RMS arbitration wait charged (QUEUE span)
     bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
     bytes_cross_rack: int = 0  # rack-crossing portion of bytes_moved
+    bytes_cross_pod: int = 0   # pod-crossing slice of bytes_cross_rack
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
         """Stage-3 bytes per distance class (sums to stayed + moved)."""
         return split_bytes_by_class(self.bytes_stayed, self.bytes_moved,
-                                    self.bytes_cross_rack)
+                                    self.bytes_cross_rack,
+                                    self.bytes_cross_pod)
 
 
 def record_parity_key(rec) -> tuple:
@@ -608,7 +664,8 @@ def record_parity_key(rec) -> tuple:
     """
     return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
             rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved,
-            rec.queued_s, rec.bytes_stayed, rec.bytes_cross_rack)
+            rec.queued_s, rec.bytes_stayed, rec.bytes_cross_rack,
+            rec.bytes_cross_pod)
 
 
 @dataclass
@@ -695,6 +752,7 @@ class _SimCluster:
             bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
+            bytes_cross_pod=outcome.bytes_cross_pod,
         )
 
     def _cores_arg(self, nodes: list[int]):
@@ -724,6 +782,7 @@ class _SimCluster:
             bytes_moved=outcome.bytes_moved, queued_s=outcome.queued_s,
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
+            bytes_cross_pod=outcome.bytes_cross_pod,
         )
 
 
@@ -807,6 +866,7 @@ class RuntimeAdapter:
             bytes_moved=rec.bytes_moved, queued_s=rec.queued_s,
             bytes_stayed=rec.bytes_stayed,
             bytes_cross_rack=rec.bytes_cross_rack,
+            bytes_cross_pod=rec.bytes_cross_pod,
         )
 
     def expand(self, target_nodes: int,
@@ -842,6 +902,236 @@ def run_scenario_sim(
         for rec in _dispatch(cluster, ev):
             records.append(replace(rec, step=ev.step))
     return records
+
+
+# ==================================================== vectorized fast path ==
+class TransitionCache:
+    """Memoized transition charging for :func:`run_scenario_vectorized`.
+
+    Keyed by ``(kind, nodes_before, nodes_after, queue_delay_s)``: under
+    the fast path's eligibility gates (uniform node widths, no topology,
+    prefix-range node usage) that tuple fully determines the charged
+    record, so a churn trace that revisits the same resize pays for it
+    once.  Sharing one cache across several runs is only valid when
+    every run charges with the same cost context (same widths, cost
+    model, strategy, method, bytes model) — :func:`repro.malleability
+    .policies.monte_carlo_sweep` does exactly that for its seed
+    replicas.
+    """
+
+    def __init__(self) -> None:
+        self._fields: dict[tuple, dict] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def charge_fields(self, scenario: Scenario, engine: ReconfigEngine,
+                      kind: str, before: int, after: int,
+                      queue_delay_s: float) -> dict:
+        """The cached record's field dict (``step`` pinned to ``-1``).
+
+        The hot stamping loop binds a copy of it onto a bare
+        ``ScenarioRecord.__new__`` instance and overwrites ``step`` —
+        bypassing both ``dataclasses.replace`` and the frozen
+        dataclass ``__init__`` (twelve ``object.__setattr__`` calls),
+        which together dominated the 100k-event profile.
+        """
+        key = (kind, before, after, queue_delay_s)
+        fields = self._fields.get(key)
+        if fields is not None:
+            self.hits += 1
+            return fields
+        self.misses += 1
+        rec = _charge_transition(scenario, engine, kind, before, after,
+                                 queue_delay_s)
+        fields = dict(rec.__dict__)
+        fields["step"] = -1
+        self._fields[key] = fields
+        return fields
+
+    def charge(self, scenario: Scenario, engine: ReconfigEngine, kind: str,
+               before: int, after: int, queue_delay_s: float) -> ScenarioRecord:
+        rec = ScenarioRecord.__new__(ScenarioRecord)
+        rec.__dict__.update(self.charge_fields(
+            scenario, engine, kind, before, after, queue_delay_s))
+        return rec
+
+
+def _charge_transition(scenario: Scenario, engine: ReconfigEngine, kind: str,
+                       before: int, after: int,
+                       queue_delay_s: float) -> ScenarioRecord:
+    """Charge one uniform-width prefix-range transition (cache miss).
+
+    Hot shapes take the closed-form chargers from
+    :mod:`repro.core.vectorized` (a MERGE hypercube expansion, a TS
+    shrink of single-node worlds) — the same event sequence the planner
+    and builder would emit, without constructing the plan.  Everything
+    else synthesizes the canonical prefix-range cluster at ``before``
+    nodes and dispatches through the object path, so the cached record
+    is the object path's record.
+    """
+    from repro.core.vectorized import (
+        charge_stats,
+        hypercube_expand_charges,
+        queue_charge,
+        redistribution_charge,
+        ts_shrink_charges,
+    )
+
+    cm = engine.cost_model
+    assert cm is not None  # resolved in ReconfigEngine.__post_init__
+    C = scenario.cores_per_node
+    ns, nt = before * C, after * C
+    if kind == "expand":
+        analytic = (engine.method is Method.MERGE
+                    and strategy_key(engine.strategy) == "hypercube")
+        mechanism = strategy_key(engine.strategy)
+    else:
+        # Tier-A victims are whole single-node worlds, so the shrink
+        # planner always resolves to TS (§4.6) whatever the strategy.
+        analytic = True
+        mechanism = ShrinkKind.TS.value
+    if analytic:
+        if kind == "expand":
+            mech = hypercube_expand_charges(cm, ns, nt, C)
+        else:
+            mech = ts_shrink_charges(cm, [C] * (before - after))
+        stayed, moved = engine.redistribution_stats(ns, nt)
+        charges = (queue_charge(queue_delay_s) + mech
+                   + redistribution_charge(cm, moved, stayed))
+        st = charge_stats(charges, contention=cm.overlap_contention,
+                          asynchronous=engine.asynchronous)
+        return ScenarioRecord(
+            step=-1, kind=kind, mechanism=mechanism,
+            nodes_before=before, nodes_after=after,
+            est_wall_s=st.total, downtime_s=st.downtime,
+            bytes_moved=st.bytes_moved, queued_s=st.queued,
+            bytes_stayed=st.bytes_stayed,
+            bytes_cross_rack=st.bytes_cross_rack,
+            bytes_cross_pod=st.bytes_cross_pod,
+        )
+    cluster = _SimCluster(scenario=scenario, engine=engine)
+    for n in range(scenario.initial_nodes, before):
+        cluster._free.discard(n)
+        cluster.state.add_world([n], [cluster._width(n)])
+    if kind == "expand":
+        return cluster.expand(after, queue_delay_s=queue_delay_s)
+    return cluster.shrink_nodes(list(range(after, before)), kind=kind,
+                                queue_delay_s=queue_delay_s)
+
+
+def _vector_plan(scenario: Scenario,
+                 engine: ReconfigEngine) -> Optional[list[tuple]]:
+    """Compile a trace to ``(step, kind, before, after, qd)`` transitions.
+
+    Returns None when the trace leaves the fast path's domain — uneven
+    node widths, a topology-carrying engine (placement-priced plans),
+    or any event whose node usage stops being the prefix range
+    ``0..count-1`` (e.g. a mid-range failure) — in which case the caller
+    must walk the object path.  The gates are exactly the invariants
+    that make ``(kind, before, after, qd)`` determine the record.
+    """
+    if scenario.core_pool or engine.topology is not None:
+        return None
+    # Only a declared rack tree can cap the pool below the trace's peak
+    # (pool_nodes() otherwise IS the peak, which no grow can exceed) —
+    # checking topology() directly skips an O(events) max_nodes() scan.
+    topo = scenario.topology()
+    pool = topo.n_nodes if topo is not None else None
+    floor = max(1, scenario.initial_nodes)
+    count = scenario.initial_nodes
+    out: list[tuple] = []
+    for ev in sorted(scenario.events, key=lambda e: e.step):
+        if ev.kind == GROW:
+            if ev.target_nodes <= count:
+                continue
+            if pool is not None and ev.target_nodes > pool:
+                return None  # object path raises "device pool exhausted"
+            out.append((ev.step, "expand", count, ev.target_nodes,
+                        ev.queue_delay_s))
+            count = ev.target_nodes
+        elif ev.kind == SHRINK:
+            nodes = ev.nodes
+            if nodes:
+                lo = count - len(nodes)
+                if lo >= floor and nodes == tuple(range(lo, count)):
+                    after = lo  # contiguous top range, all in use
+                else:
+                    victims = [n for n in nodes if n < count]
+                    if not victims:
+                        continue
+                    after = count - len(victims)
+                    if (after < floor or min(victims) != after
+                            or len(set(victims)) != len(victims)):
+                        # Not exactly the top range {after..count-1}:
+                        # the prefix invariant would break.
+                        return None
+            else:
+                if not 0 < ev.target_nodes < count:
+                    continue
+                if ev.target_nodes < floor:
+                    return None  # pick_release would split the initial world
+                after = ev.target_nodes
+            out.append((ev.step, "shrink", count, after, ev.queue_delay_s))
+            count = after
+        elif ev.kind in (FAIL, STRAGGLER):
+            for n in ev.nodes:
+                if n >= count:
+                    continue
+                if n != count - 1 or count - 1 < floor:
+                    return None  # mid-range victim breaks the prefix
+                out.append((ev.step, ev.kind, count, count - 1,
+                            ev.queue_delay_s))
+                count -= 1
+        else:
+            return None  # unknown kind: let the object path raise
+    return out
+
+
+def run_scenario_vectorized(
+    scenario: Scenario, engine: Optional[ReconfigEngine] = None,
+    cache: Optional[TransitionCache] = None,
+) -> list[ScenarioRecord]:
+    """Execute a scenario through the vectorized transition engine.
+
+    Produces records **bit-for-bit identical** to
+    :func:`run_scenario_sim` (pinned over the full registry by
+    ``tests/test_vectorized.py``) by compiling the trace to count-state
+    transitions, charging each distinct transition once (closed-form
+    where the shape allows, object-path synthesis otherwise) and
+    stamping cached records per event.  Traces outside the fast path's
+    domain fall back to the object walk wholesale, so this is a safe
+    drop-in for every scenario.
+
+    Pass a shared :class:`TransitionCache` to amortize charging across
+    runs that share a cost context (e.g. Monte-Carlo seed replicas).
+    """
+    engine = engine or scenario.default_engine()
+    plan = _vector_plan(scenario, engine)
+    if plan is None:
+        return run_scenario_sim(scenario, engine)
+    cache = cache if cache is not None else TransitionCache()
+    # Hot loop: hits read the cache dict directly (no method-call
+    # overhead); only misses go through charge_fields for the full
+    # charging + bookkeeping path.
+    charge_fields = cache.charge_fields
+    lookup = cache._fields.get
+    new = ScenarioRecord.__new__
+    out: list[ScenarioRecord] = []
+    append = out.append
+    hits = 0
+    for step, kind, before, after, qd in plan:
+        fields = lookup((kind, before, after, qd))
+        if fields is None:
+            fields = charge_fields(scenario, engine, kind, before, after, qd)
+        else:
+            hits += 1
+        rec = new(ScenarioRecord)
+        d = rec.__dict__
+        d.update(fields)
+        d["step"] = step
+        append(rec)
+    cache.hits += hits
+    return out
 
 
 def scenario_pool(scenario: Scenario, devices=None):

@@ -56,6 +56,7 @@ class ExpansionReport:
     t_queue: float = 0.0
     bytes_stayed: int = 0
     bytes_cross_rack: int = 0
+    bytes_cross_pod: int = 0
 
     def as_row(self) -> dict:
         """Report as a flat dict row (benchmark CSV shape)."""
@@ -76,6 +77,7 @@ class ExpansionReport:
             "bytes_moved": self.bytes_moved,
             "bytes_stayed": self.bytes_stayed,
             "bytes_cross_rack": self.bytes_cross_rack,
+            "bytes_cross_pod": self.bytes_cross_pod,
             "steps": self.steps,
             "groups": self.groups,
         }
@@ -94,12 +96,13 @@ class ShrinkReport:
     bytes_moved: int = 0
     bytes_stayed: int = 0
     bytes_cross_rack: int = 0
+    bytes_cross_pod: int = 0
 
 
 def simulate_expansion(
     plan: SpawnPlan, cm: CostModel, asynchronous: bool = False,
     bytes_total: int = 0, queue_delay_s: float = 0.0, bytes_stayed: int = 0,
-    bytes_cross_rack: int = 0,
+    bytes_cross_rack: int = 0, bytes_cross_pod: int = 0,
 ) -> ExpansionReport:
     """Charge one expansion plan and report its per-phase breakdown.
 
@@ -115,6 +118,7 @@ def simulate_expansion(
         bytes_stayed: stage-3 local-link volume (per-link pricing).
         bytes_cross_rack: rack-crossing portion of ``bytes_total``
             (distance-class pricing; the rest rides the intra-rack link).
+        bytes_cross_pod: pod-crossing slice of ``bytes_cross_rack``.
     Returns:
         An :class:`ExpansionReport` whose every field is a read of the
         charged :class:`~repro.core.Timeline`.
@@ -122,7 +126,8 @@ def simulate_expansion(
     tl = expansion_timeline(plan, cm, bytes_total=bytes_total,
                             queue_delay_s=queue_delay_s,
                             bytes_stayed=bytes_stayed,
-                            bytes_cross_rack=bytes_cross_rack)
+                            bytes_cross_rack=bytes_cross_rack,
+                            bytes_cross_pod=bytes_cross_pod)
     return ExpansionReport(
         strategy=plan.strategy,
         method=plan.method,
@@ -143,6 +148,7 @@ def simulate_expansion(
         t_queue=tl.queued_s,
         bytes_stayed=tl.bytes_stayed,
         bytes_cross_rack=tl.bytes_cross_rack,
+        bytes_cross_pod=tl.bytes_cross_pod,
     )
 
 
@@ -158,6 +164,7 @@ def simulate_shrink(
     bytes_total: int = 0,
     bytes_stayed: int = 0,
     bytes_cross_rack: int = 0,
+    bytes_cross_pod: int = 0,
 ) -> ShrinkReport:
     """Charge one shrink by mechanism (TS / ZS / SS) off its timeline.
 
@@ -176,6 +183,7 @@ def simulate_shrink(
         bytes_total=bytes_total,
         bytes_stayed=bytes_stayed,
         bytes_cross_rack=bytes_cross_rack,
+        bytes_cross_pod=bytes_cross_pod,
     )
     if kind is ShrinkKind.TS:
         detail = {"worlds_terminated": len(doomed_world_sizes or [])}
@@ -195,11 +203,14 @@ def simulate_shrink(
         bytes_moved=tl.bytes_moved,
         bytes_stayed=tl.bytes_stayed,
         bytes_cross_rack=tl.bytes_cross_rack,
+        bytes_cross_pod=tl.bytes_cross_pod,
     )
 
 
 def simulate_redistribution(cm: CostModel, total_bytes: int,
                             stayed_bytes: int = 0,
-                            cross_rack_bytes: int = 0) -> float:
+                            cross_rack_bytes: int = 0,
+                            cross_pod_bytes: int = 0) -> float:
     """Stage-3 wall time for one redistribution (setup + per-class bw)."""
-    return cm.redistribution(total_bytes, stayed_bytes, cross_rack_bytes)
+    return cm.redistribution(total_bytes, stayed_bytes, cross_rack_bytes,
+                             cross_pod_bytes)

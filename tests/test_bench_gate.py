@@ -8,13 +8,24 @@ import pytest
 REPO = os.path.join(os.path.dirname(__file__), os.pardir)
 sys.path.insert(0, os.path.join(REPO, "scripts"))
 
-from check_bench import compare, index_rows, main  # noqa: E402
+from check_bench import check_scale, compare, index_rows, main  # noqa: E402
 
 
-def doc(rows, smoke=True):
+def scale_section(speedup=80.0, mc_wall=5.0):
+    """A passing measured-throughput section (both threshold targets)."""
+    return [
+        {"table": "scale", "events": 1000, "speedup_vs_object": speedup},
+        {"table": "scale", "events": 100000, "speedup_vs_object": speedup},
+        {"table": "scale-mc", "pool_nodes": 10000, "replicas": 1000,
+         "wall_s": mc_wall},
+    ]
+
+
+def doc(rows, smoke=True, scale=None):
     return {"smoke": smoke,
             "rows": [{"name": n, "us_per_call": us, "derived": ""}
-                     for n, us in rows]}
+                     for n, us in rows],
+            "scale": scale_section() if scale is None else scale}
 
 
 class TestComparator:
@@ -63,6 +74,48 @@ class TestComparator:
         assert main([str(base), str(bad)]) == 1
 
 
+class TestScaleThresholds:
+    """The measured scale section is threshold-gated, never drift-compared."""
+
+    def test_passing_section(self):
+        assert check_scale(doc([])) == []
+
+    def test_largest_trace_gates_the_speedup(self):
+        # Only the LARGEST churn trace's speedup is thresholded: the
+        # small traces amortize less fixed cost and may sit below it.
+        section = [
+            {"table": "scale", "events": 1000, "speedup_vs_object": 3.0},
+            {"table": "scale", "events": 100000, "speedup_vs_object": 80.0},
+            {"table": "scale-mc", "wall_s": 5.0},
+        ]
+        assert check_scale(doc([], scale=section)) == []
+
+    def test_low_speedup_fails(self):
+        failures = check_scale(doc([], scale=scale_section(speedup=10.0)))
+        assert len(failures) == 1 and "speedup" in failures[0]
+
+    def test_slow_monte_carlo_fails(self):
+        failures = check_scale(doc([], scale=scale_section(mc_wall=30.0)))
+        assert len(failures) == 1 and "Monte-Carlo" in failures[0]
+
+    def test_missing_section_fails_both_checks(self):
+        failures = check_scale({"rows": []})
+        assert len(failures) == 2
+
+    def test_thresholds_are_tunable(self):
+        d = doc([], scale=scale_section(speedup=10.0, mc_wall=30.0))
+        assert check_scale(d, min_speedup=5.0, max_mc_seconds=60.0) == []
+
+    def test_main_fails_on_scale_regression(self, tmp_path):
+        base = tmp_path / "base.json"
+        cur = tmp_path / "cur.json"
+        base.write_text(json.dumps(doc([("a", 100)])))
+        cur.write_text(json.dumps(doc([("a", 100)],
+                                      scale=scale_section(speedup=10.0))))
+        assert main([str(base), str(cur)]) == 1
+        assert main([str(base), str(cur), "--min-speedup", "5"]) == 0
+
+
 class TestCommittedBaseline:
     """The committed BENCH_baseline.json must stay a valid --smoke --json
     document covering every table family run.py emits."""
@@ -79,8 +132,17 @@ class TestCommittedBaseline:
     def test_covers_every_table_family(self, baseline):
         families = {r["name"].split("/")[0] for r in baseline["rows"]}
         assert {"fig4a", "fig4b", "fig5", "fig6a", "fig6b", "table2",
-                "fig1", "scenario", "hetero", "redist", "overlap",
+                "fig1", "scenario", "hetero", "topo", "redist", "overlap",
                 "policy"} <= families
+
+    def test_topo_rows_carry_four_class_bytes(self, baseline):
+        topo = [r for r in baseline["rows"]
+                if r["name"].startswith("topo/topo-pods/")]
+        assert topo and all("cross_pod=" in r["derived"] for r in topo)
+
+    def test_scale_section_present(self, baseline):
+        tables = [r["table"] for r in baseline.get("scale", [])]
+        assert tables.count("scale") == 3 and tables.count("scale-mc") == 1
 
     def test_hetero_rows_present_with_per_link_bytes(self, baseline):
         hetero = [r for r in baseline["rows"]

@@ -51,7 +51,12 @@ class TestTopologyTree:
         assert t.distance_class(0, 1) == "intra_rack"
         assert t.distance_class(1, 2) == "cross_rack"
         assert set(DISTANCE_CLASSES) == {"intra_node", "intra_rack",
-                                         "cross_rack"}
+                                         "cross_rack", "cross_pod"}
+        # cross_pod only ever appears with pods configured
+        p = Topology(rack_sizes=(1, 1, 1, 1), pod_sizes=(2, 2))
+        assert p.distance_class(0, 1) == "cross_rack"
+        assert p.distance_class(0, 2) == "cross_pod"
+        assert t.distance_class(0, 3) == "cross_rack"
 
     def test_pods(self):
         t = Topology(rack_sizes=(1, 1, 1, 1), pod_sizes=(2, 2))
@@ -243,13 +248,16 @@ class TestBytesByClass:
         # burst 1->5 nodes (2->8 ranks): 2 replicas to rack-mate node 1,
         # 4 across to fresh rack 1; survivors re-validate 2 replicas
         assert burst.bytes_by_class == {
-            "intra_node": 2 * pb, "intra_rack": 2 * pb, "cross_rack": 4 * pb}
+            "intra_node": 2 * pb, "intra_rack": 2 * pb, "cross_rack": 4 * pb,
+            "cross_pod": 0}
         # rack-vacating shrink: survivor replicas stay put
         assert shrink.bytes_by_class == {
-            "intra_node": 2 * pb, "intra_rack": 0, "cross_rack": 0}
+            "intra_node": 2 * pb, "intra_rack": 0, "cross_rack": 0,
+            "cross_pod": 0}
         # rack-LOCAL regrow: both new replicas ride the intra-rack link
         assert regrow.bytes_by_class == {
-            "intra_node": 2 * pb, "intra_rack": 2 * pb, "cross_rack": 0}
+            "intra_node": 2 * pb, "intra_rack": 2 * pb, "cross_rack": 0,
+            "cross_pod": 0}
 
     def test_classics_pay_cross_rack_where_topo_stays_local(self):
         """The table_topology claim: greedy regrowth reopens the vacated
