@@ -13,6 +13,7 @@ Scenarios  — the declarative workload traces, timeline-charged
 Redistribution — stage-3 bytes-moved sweep over model configs
 Overlap    — partial-overlap (fraction x contention) downtime sweep
 Policy sweep — strategy x RMS-policy trace makespan/downtime envelopes
+Serve      — strategy x traffic-trace latency percentiles (elastic decode)
 
 The expensive table functions take their grids as parameters so the
 ``--smoke`` mode of ``run.py`` can shrink them without touching the
@@ -54,9 +55,11 @@ from repro.malleability import (
 )
 from repro.malleability.policies import (
     POLICY_SCENARIO_NAMES,
+    SERVE_SCENARIO_NAMES,
     ClusterState as RmsClusterState,
     churn_trace,
 )
+from repro.serving import run_serve
 
 MN5_CORES = 112
 MN5_NODES = [1, 2, 4, 8, 16, 24, 32]
@@ -357,6 +360,41 @@ def policy_sweep(traces: tuple[str, ...] = POLICY_SCENARIO_NAMES) -> list[dict]:
                 "downtime_s": round(sum(r.downtime_s for r in recs), 6),
                 "queued_s": round(sum(r.queued_s for r in recs), 6),
                 "bytes_moved": sum(r.bytes_moved for r in recs),
+            })
+    return rows
+
+
+# ------------------------------------------------ elastic serving plane --
+def table_serve(traces: tuple[str, ...] = SERVE_SCENARIO_NAMES) -> list[dict]:
+    """Traffic-policy traces through the elastic decode service (§4/§5).
+
+    Each registered serve traffic trace (diurnal load, flash crowd, SLO
+    breach with queued grants) replayed end-to-end — paged KV caches
+    migrated on every resize, requests never dropped — under EVERY
+    registered spawning strategy.  Request latency percentiles are where
+    reconfiguration downtime meets the request stream: the p99 column
+    carries the resize stalls, the cross-rack byte column shows what the
+    flash-crowd burst grow pays off-rack.  All numbers are deterministic
+    simulator output, so they drift-gate like any other table.
+    """
+    rows = []
+    for name in traces:
+        sc = get_scenario(name)
+        for spec in registered_strategies():
+            if spec.homogeneous_only and sc.heterogeneous:
+                continue
+            rep = run_serve(name, strategy=spec.key)
+            rows.append({
+                "scenario": name,
+                "strategy": spec.key,
+                "resizes": len(rep.records),
+                "completed": rep.completed,
+                "p50_latency_s": round(rep.p50_latency_s, 6),
+                "p99_latency_s": round(rep.p99_latency_s, 6),
+                "downtime_s": round(rep.downtime_s, 6),
+                "queued_s": round(rep.queued_s, 6),
+                "bytes_moved": rep.bytes_moved,
+                "bytes_cross_rack": rep.bytes_cross_rack,
             })
     return rows
 

@@ -59,6 +59,7 @@ from paper_tables import (  # noqa: E402
     table_hetero_strategies,
     table_redistribution,
     table_scale,
+    table_serve,
     table_topology,
 )
 
@@ -154,6 +155,15 @@ def collect_rows(smoke: bool = False, timings: dict | None = None) -> list[dict]
             f"downtime_us={r['downtime_s']*1e6:.0f};"
             f"queued_us={r['queued_s']*1e6:.0f};events={r['events']};"
             f"bytes={r['bytes_moved']}")
+
+    for r in timed("serve", table_serve):
+        add(f"serve/{r['scenario']}/{r['strategy']}",
+            r["p50_latency_s"] * 1e6,
+            f"p99_us={r['p99_latency_s']*1e6:.0f};"
+            f"downtime_us={r['downtime_s']*1e6:.0f};"
+            f"queued_us={r['queued_s']*1e6:.0f};"
+            f"resizes={r['resizes']};done={r['completed']};"
+            f"bytes={r['bytes_moved']};cross_rack={r['bytes_cross_rack']}")
 
     return rows
 

@@ -1,39 +1,46 @@
-"""Batched serving demo: prefill + decode with a KV cache.
+"""Elastic decode serving demo: traffic-driven reconfiguration.
 
-Serves a reduced-config model over synthetic prompts, batching requests,
-and demonstrates a TS-shrink of the serving fleet between batches (the
-paper's mechanism applied to inference autoscaling).
+Replays the registered serve traffic traces (diurnal load, flash crowd,
+tail-latency SLO breach) through the elastic decode service
+(:mod:`repro.serving`): the pool of decode workers is grown/shrunk by
+the traffic policy through the ReconfigEngine, in-flight KV caches are
+migrated — never dropped — on every resize, and the migration is priced
+as REDISTRIBUTION bytes.  Each trace runs on BOTH executors (simulator
+and live NodeGroup runtime); the script prints per-phase
+latency/throughput and **exits non-zero if they disagree on any
+number**, like ``examples/malleability_sim.py``.
 
-    PYTHONPATH=src python examples/serve.py [--arch gemma2_9b]
+    PYTHONPATH=src python examples/serve.py [--scenario serve-diurnal]
+    PYTHONPATH=src python examples/serve.py --static [--arch gemma2_9b]
+
+``--static`` keeps the original single-shot demo: prefill + decode with
+a KV cache on the host's devices, TS-shrinking the fleet between
+batches and verifying identical generations.
 """
-import os
-
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
-
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import smoke_config
-from repro.core import Method, Strategy
-from repro.elastic import DevicePool, ElasticRuntime
-from repro.models import Model
-from repro.parallel.sharding import ShardingContext, use_sharding
+import sys
 
 
-def sample_greedy(logits):
-    return jnp.argmax(logits[:, -1], axis=-1)[:, None]
+def static_demo(args) -> int:
+    """The original single-shot decode demo (JAX imported lazily)."""
+    import os
 
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2_9b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen-len", type=int, default=24)
-    args = ap.parse_args()
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.core import Method, Strategy
+    from repro.elastic import DevicePool, ElasticRuntime
+    from repro.models import Model
+    from repro.parallel.sharding import ShardingContext, use_sharding
+
+    def sample_greedy(logits):
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None]
 
     cfg = smoke_config(args.arch).replace(embed_inputs=False)
     model = Model(cfg)
@@ -47,7 +54,7 @@ def main():
     max_len = P + G
     prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
 
-    ctx = ShardingContext(mesh=rt.mesh(("data",)), mode="decode")
+    ShardingContext(mesh=rt.mesh(("data",)), mode="decode")
 
     def serve_batch(params, prompts):
         cache = model.init_cache(B, max_len)
@@ -90,7 +97,34 @@ def main():
     assert bool(jnp.all(gen == gen2)), "generation must be identical after shrink"
     print(f"batch 2 (post-shrink): identical output verified; "
           f"decode {td2:.2f}s")
+    return 0
+
+
+def elastic_demo(args) -> int:
+    """Replay serve traces sim + live; count disagreements."""
+    from repro.launch.serve import run_elastic
+    from repro.malleability.policies import SERVE_SCENARIO_NAMES
+
+    names = (SERVE_SCENARIO_NAMES if args.scenario == "all"
+             else (args.scenario,))
+    return run_elastic(names, "both", args.strategy)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--static", action="store_true",
+                    help="original single-shot decode demo")
+    ap.add_argument("--arch", default="gemma2_9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--scenario", default="all",
+                    help="serve trace name, or 'all'")
+    ap.add_argument("--strategy", default=None,
+                    help="spawn strategy override")
+    args = ap.parse_args()
+    return static_demo(args) if args.static else elastic_demo(args)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

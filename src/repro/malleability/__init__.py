@@ -31,6 +31,8 @@ from .cost_model import (
     replicated_link_model,
 )
 from .policies import (
+    SERVE_SCENARIO_NAMES,
+    SERVE_TRAFFIC,
     ArbitratedJob,
     BackfillPolicy,
     ChurnPolicy,
@@ -42,6 +44,7 @@ from .policies import (
     PriorityArrival,
     RigidArrival,
     RmsPolicy,
+    TrafficPolicy,
     arbitrate_jobs,
     backfill_pressure,
     charge_in_flight_queueing,
@@ -49,7 +52,11 @@ from .policies import (
     monte_carlo_sweep,
     priority_preempt,
     registered_policy_scenarios,
+    registered_serve_scenarios,
     run_multijob_sim,
+    serve_diurnal,
+    serve_flashcrowd,
+    serve_slo,
     two_job_interference,
 )
 from .scenarios import (
@@ -88,6 +95,8 @@ from .simulator import (
 __all__ = [
     "MN5",
     "NASP",
+    "SERVE_SCENARIO_NAMES",
+    "SERVE_TRAFFIC",
     "ArbitratedJob",
     "BackfillPolicy",
     "ChurnPolicy",
@@ -106,6 +115,7 @@ __all__ = [
     "ScenarioEvent",
     "ScenarioRecord",
     "ShrinkReport",
+    "TrafficPolicy",
     "TransitionCache",
     "arbitrate_jobs",
     "backfill_pressure",
@@ -124,6 +134,7 @@ __all__ = [
     "register_scenario",
     "registered_policy_scenarios",
     "registered_scenarios",
+    "registered_serve_scenarios",
     "replicated_bytes_model",
     "replicated_link_model",
     "run_multijob_sim",
@@ -131,6 +142,9 @@ __all__ = [
     "run_scenario_sim",
     "run_scenario_vectorized",
     "scenario_pool",
+    "serve_diurnal",
+    "serve_flashcrowd",
+    "serve_slo",
     "simulate_expansion",
     "simulate_redistribution",
     "simulate_shrink",

@@ -30,6 +30,7 @@ for free.
 """
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
@@ -490,6 +491,110 @@ class ChurnPolicy:
         )
 
 
+@dataclass(frozen=True)
+class TrafficPolicy:
+    """Request-traffic autoscaler: a rate trace + SLO targets in,
+    grow/shrink decisions out.
+
+    The serving-plane policy (ROADMAP item 1): instead of batch RESIZE
+    events, the RMS watches a **request-rate trace** (requests arriving
+    per application step) and sizes the decode pool so the SLO holds.
+    The demand model is Little's law plus a backlog-drain term:
+
+    * each admitted request occupies one decode slot for ``hold_steps``
+      steps, so steady-state demand is ``rate * hold_steps`` slots;
+    * a worker serves ``slots_per_worker / hold_steps`` requests per
+      step; arrivals beyond that accumulate as ``backlog``, and the SLO
+      requires draining it within ``slo_queue_steps`` steps — an extra
+      ``backlog * hold_steps / slo_queue_steps`` slots of demand.
+
+    The slot demand is fitted UP the ``allowed_sizes`` ladder (decode
+    worker counts that shard the service's batch — like trainer world
+    sizes, powers of two here), then clamped by
+    :meth:`ClusterState.clamp_grant`.  Grows fire **immediately** (an
+    SLO breach is paid in tail latency every step it persists), carrying
+    ``grant_delay_s`` as their QUEUE span — the RMS arbitration wait for
+    the grant, charged on the timeline like every other queue delay.
+    Shrinks wait for ``cooldown`` consecutive below-target steps, the
+    standard anti-flapping hysteresis.
+
+    A policy run is a pure function of the rate trace, so its
+    :class:`PolicyTrace` — and the registered serve scenarios built from
+    it — replay bit-identically through sim, live, and trainer
+    executors.  The serving loop (:func:`repro.serving.run_serve`)
+    replays the SAME rate trace for its arrivals, so latency and
+    queueing are emergent from the decisions made here.
+    """
+
+    rates: Tuple[float, ...] = ()     # requests arriving per step
+    slots_per_worker: int = 5         # concurrent decode slots per worker
+    hold_steps: int = 8               # steps one request occupies a slot
+    slo_queue_steps: float = 4.0      # drain backlog within this many steps
+    allowed_sizes: Tuple[int, ...] = (1, 2, 4, 8)
+    cooldown: int = 2                 # below-target steps before a shrink
+    grant_delay_s: float = 0.0        # RMS arbitration wait per grow grant
+    name: str = "traffic"
+
+    def __post_init__(self) -> None:
+        if not self.rates:
+            raise ValueError("traffic policy needs a non-empty rate trace")
+        if min(self.rates) < 0:
+            raise ValueError("request rates cannot be negative")
+        if self.slots_per_worker < 1 or self.hold_steps < 1:
+            raise ValueError("slots_per_worker and hold_steps must be >= 1")
+        if self.slo_queue_steps <= 0:
+            raise ValueError("slo_queue_steps must be positive")
+        if self.cooldown < 1:
+            raise ValueError("cooldown must be >= 1")
+        if not self.allowed_sizes or sorted(self.allowed_sizes) != list(
+                self.allowed_sizes):
+            raise ValueError("allowed_sizes must be ascending and non-empty")
+
+    def demand_workers(self, rate: float, backlog: float) -> int:
+        """Workers needed for one step's rate + backlog (before the ladder)."""
+        slots = (rate * self.hold_steps
+                 + backlog * self.hold_steps / self.slo_queue_steps)
+        return max(1, math.ceil(slots / self.slots_per_worker))
+
+    def generate(self, cluster: ClusterState) -> PolicyTrace:
+        job = cluster.primary_malleable()
+        alloc = cluster.allocations[job.name]
+        backlog = 0.0
+        below = 0
+        events: List[ScenarioEvent] = []
+        for step, rate in enumerate(self.rates):
+            served = alloc * self.slots_per_worker / self.hold_steps
+            backlog = max(0.0, backlog + rate - served)
+            need = self.demand_workers(rate, backlog)
+            fitted = next((s for s in self.allowed_sizes if s >= need),
+                          self.allowed_sizes[-1])
+            target = cluster.clamp_grant(job, fitted)
+            if target > alloc:
+                ev = _resize(step, alloc, target)
+                if self.grant_delay_s > 0.0:
+                    ev = replace(ev, queue_delay_s=self.grant_delay_s)
+                events.append(ev)
+                alloc = target
+                below = 0
+            elif target < alloc:
+                below += 1
+                if below >= self.cooldown:
+                    events.append(_resize(step, alloc, target))
+                    alloc = target
+                    below = 0
+            else:
+                below = 0
+        return PolicyTrace(
+            policy=self.name,
+            cluster_nodes=cluster.total_nodes,
+            initial={job.name: cluster.allocations[job.name]},
+            events={job.name: tuple(events)},
+            steps=len(self.rates) + 2,
+            specs={job.name: job},
+            topology=cluster.topology,
+        )
+
+
 # ======================================================= multi-job arbiter ==
 @dataclass(frozen=True)
 class ArbitratedJob:
@@ -854,3 +959,106 @@ def registered_policy_scenarios() -> tuple[Scenario, ...]:
     from .scenarios import get_scenario
 
     return tuple(get_scenario(n) for n in POLICY_SCENARIO_NAMES)
+
+
+# ================================================ registered serve traces ==
+# Nominal in-flight KV footprint for the registered traces' default
+# engines (check_matrix, the nightly sweep, the trainer replay): a fixed
+# pytree size so every resize charges stage-3 bytes deterministically.
+# The serving loop (repro.serving.run_serve) swaps in the LIVE
+# KVPageTable-backed bytes model instead, pricing the actual resident
+# pages at each resize.
+_SERVE_KV_BYTES = 48 << 20
+
+# The three traffic traces, single-sourced: the TrafficPolicy sizes the
+# pool from them AND repro.serving replays them as request arrivals, so
+# policy decisions and serving-side queueing always see the same load.
+SERVE_TRAFFIC: Dict[str, TrafficPolicy] = {
+    # Diurnal breathing: overnight trickle -> morning ramp -> midday
+    # peak -> evening decay.  2 -> 4 -> 8 -> 4 -> 2 workers.
+    "serve-diurnal": TrafficPolicy(
+        rates=(1.0,) * 6 + (2.0,) * 6 + (4.0,) * 8 + (2.0,) * 6 + (1.0,) * 6),
+    # Flash crowd: an 8x spike out of nowhere.  One burst grow 2 -> 8
+    # (the parallel-spawn story), held past the spike while the backlog
+    # drains, then released.  Runs on a 2-rack pool, so the burst opens
+    # rack 1 and KV migration pays cross-rack bytes.
+    "serve-flashcrowd": TrafficPolicy(
+        rates=(1.0,) * 5 + (8.0,) * 6 + (1.0,) * 10),
+    # Tail-latency SLO breach: a slow climb that crosses the SLO line
+    # twice (staged grows, each waiting grant_delay_s on the RMS
+    # arbiter — a QUEUE span on the timeline), then a deep off-peak
+    # shrink.  Longer cooldown: SLO pools shed capacity reluctantly.
+    "serve-slo": TrafficPolicy(
+        rates=(1.0,) * 4 + (1.5,) * 5 + (3.5,) * 6 + (0.5,) * 6,
+        grant_delay_s=0.5, cooldown=3),
+}
+
+
+def _serve_cluster(topology: Optional[Topology] = None) -> ClusterState:
+    """The 8-node pool every serve trace autoscales over.
+
+    ``min_nodes=2``: the service starts as one two-node world, and a
+    shrink below 2 would have to SPLIT that world — the victim node
+    would be zombified (§4.7: pinned, not returned) and the engine's
+    rank count would diverge from the page table's worker count.  The
+    floor keeps every serve shrink on the clean whole-world TS path.
+    """
+    return ClusterState(
+        total_nodes=8,
+        jobs=(JobSpec("serve", min_nodes=2, max_nodes=8, initial_nodes=2,
+                      param_bytes=_SERVE_KV_BYTES),),
+        topology=topology,
+    )
+
+
+def serve_diurnal(name: str = "serve-diurnal") -> Scenario:
+    """Diurnal decode-pool breathing: 2 -> 4 -> 8 -> 4 -> 2 workers."""
+    trace = SERVE_TRAFFIC["serve-diurnal"].generate(_serve_cluster())
+    return trace.scenario(
+        "serve", name=name,
+        description="decode pool breathing with diurnal request traffic "
+                    "(2 -> 4 -> 8 -> 4 -> 2 workers)",
+    )
+
+
+def serve_flashcrowd(name: str = "serve-flashcrowd") -> Scenario:
+    """Flash crowd on a 2-rack pool: burst grow 2 -> 8, backlog-drain
+    hold, then release — KV migration priced per distance class."""
+    trace = SERVE_TRAFFIC["serve-flashcrowd"].generate(
+        _serve_cluster(topology=Topology(rack_sizes=(4, 4))))
+    return trace.scenario(
+        "serve", name=name,
+        description="8x flash crowd on a 2-rack decode pool: burst grow "
+                    "opens rack 1, KV pages pay cross-rack bandwidth",
+        redist_bw_local=25.0e9,
+        redist_bw_cross=2.5e9,
+        redist_bw_intra_rack=10.0e9,
+    )
+
+
+def serve_slo(name: str = "serve-slo") -> Scenario:
+    """Tail-latency SLO climb: two staged grows (each queued behind the
+    RMS arbiter's grant delay), then a deep off-peak shrink."""
+    trace = SERVE_TRAFFIC["serve-slo"].generate(_serve_cluster())
+    return trace.scenario(
+        "serve", name=name,
+        description="SLO-breach climb 2 -> 4 -> 8 with queued grants, "
+                    "then a deep off-peak shrink",
+    )
+
+
+SERVE_SCENARIO_NAMES = (
+    "serve-diurnal",
+    "serve-flashcrowd",
+    "serve-slo",
+)
+
+for _sc in (serve_diurnal(), serve_flashcrowd(), serve_slo()):
+    register_scenario(_sc)
+
+
+def registered_serve_scenarios() -> tuple[Scenario, ...]:
+    """The traffic-policy serve traces in the scenario registry."""
+    from .scenarios import get_scenario
+
+    return tuple(get_scenario(n) for n in SERVE_SCENARIO_NAMES)

@@ -1,0 +1,449 @@
+"""Serving-plane tests: paged KV-cache parity, continuous-batching
+invariants under random interleavings, and the pinned sim == live ==
+trainer agreement for the registered serve traffic traces.
+
+Three layers, mirroring the training-side gates:
+
+* :class:`KVPageTable` predicted vs measured migration stats — the
+  serving analog of ``tests/test_reshard.py``'s
+  ``transfer_stats == predicted_transfer_stats``;
+* property-based interleavings (arrival / admit+decode / resize in
+  random order) through :meth:`ContinuousBatcher.check_invariants` —
+  the zero-drop invariant is pinned here, not just asserted in prose;
+* the three registered serve traces replayed end to end on both
+  executors (fast) and through the full :class:`ElasticTrainer` loop
+  in a subprocess (slow), with exact per-event parity,
+  ``bytes_cross_rack`` included.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ReconfigEngine
+from repro.malleability import (
+    MN5,
+    get_scenario,
+    record_parity_key,
+    registered_scenarios,
+    run_scenario_live,
+    run_scenario_sim,
+)
+from repro.malleability.policies import SERVE_SCENARIO_NAMES, SERVE_TRAFFIC
+from repro.serving import (
+    ContinuousBatcher,
+    KVBytesModel,
+    KVPageTable,
+    PageSpec,
+    Request,
+    check_serve_agreement,
+    page_bytes_for_arch,
+    run_serve,
+    serve_config,
+    serve_parity_key,
+)
+
+SPEC = PageSpec(page_tokens=16, page_bytes=1024)
+
+
+def make_table(workers=2, pages_per_worker=8, **kw):
+    return KVPageTable(SPEC, range(workers), pages_per_worker, **kw)
+
+
+# ============================================================ page table ==
+class TestPageGeometry:
+    def test_pages_for_rounds_up(self):
+        assert SPEC.pages_for(1) == 1
+        assert SPEC.pages_for(16) == 1
+        assert SPEC.pages_for(17) == 2
+        assert SPEC.pages_for(0) == 1          # every request holds a page
+
+    def test_bad_geometry_rejected(self):
+        with pytest.raises(ValueError):
+            PageSpec(page_tokens=0, page_bytes=1024)
+        with pytest.raises(ValueError):
+            PageSpec(page_tokens=16, page_bytes=0)
+
+    def test_page_bytes_for_arch_is_real_cache_bytes(self):
+        pb = page_bytes_for_arch("xlstm_125m", 16)
+        assert pb > 0
+        # deterministic (lru_cache or not, same inputs -> same bytes)
+        assert pb == page_bytes_for_arch("xlstm_125m", 16)
+
+
+class TestAllocation:
+    def test_allocate_append_free_roundtrip(self):
+        t = make_table()
+        t.allocate(0, 2, worker=1)
+        assert t.request_worker(0) == 1
+        assert t.used_pages(1) == 2 and t.free_pages(1) == 6
+        t.append_page(0)
+        assert len(t.request_pages(0)) == 3
+        assert t.request_bytes(0) == 3 * SPEC.page_bytes
+        assert t.free_request(0) == 3
+        assert t.total_pages() == 0
+        assert t.pages_allocated == t.pages_freed == 3
+
+    def test_allocation_errors(self):
+        t = make_table()
+        t.allocate(0, 1, worker=0)
+        with pytest.raises(ValueError):
+            t.allocate(0, 1, worker=0)          # duplicate rid
+        with pytest.raises(KeyError):
+            t.allocate(1, 1, worker=9)          # unknown worker
+        with pytest.raises(ValueError):
+            t.allocate(1, 0, worker=0)          # no pages
+
+    def test_capacity_overrides(self):
+        t = KVPageTable(SPEC, range(2), 8, capacities={1: 3})
+        assert t.capacity(0) == 8 and t.capacity(1) == 3
+        with pytest.raises(ValueError):
+            KVPageTable(SPEC, range(2), 8, capacities={0: 0})
+
+
+# ===================================== predicted == measured migration ==
+class TestResizeParity:
+    """The reshard-parity twin: ``predicted_resize_stats`` (pure, from
+    the plan) equals ``apply_resize().stats`` (measured from the
+    page→worker diff), byte for byte, for every resize shape."""
+
+    def loaded_table(self, **kw):
+        t = make_table(workers=2, **kw)
+        t.allocate(0, 3, worker=0)
+        t.allocate(1, 2, worker=0)
+        t.allocate(2, 1, worker=1)
+        return t
+
+    def check(self, table, workers_after):
+        predicted = table.predicted_resize_stats(workers_after)
+        result = table.apply_resize(workers_after)
+        assert result.stats == predicted, (predicted, result.stats)
+        stats = result.stats
+        assert stats["bytes_total"] == \
+            stats["bytes_stayed"] + stats["bytes_moved"]
+        assert table.worker_ids() == tuple(sorted(workers_after))
+        return result
+
+    def test_grow_parity_and_fresh_only_moves(self):
+        t = self.loaded_table()
+        res = self.check(t, range(4))
+        assert res.added == (2, 3)
+        for _rid, _src, dst in res.moves:
+            assert dst in (2, 3)               # survivors untouched on grow
+
+    def test_shrink_parity_and_clean_eviction(self):
+        t = self.loaded_table()
+        res = self.check(t, [0])
+        assert res.evicted == (1,)
+        assert t.used_pages(0) == 6            # everything landed on 0
+        assert res.stats["bytes_moved"] == 1 * SPEC.page_bytes
+
+    def test_uneven_capacities_parity(self):
+        t = self.loaded_table(capacities={0: 20, 1: 4})
+        self.check(t, range(4))
+        t2 = self.loaded_table(capacities={0: 20, 1: 4})
+        self.check(t2, [1])
+
+    def test_plan_is_deterministic(self):
+        t = self.loaded_table()
+        assert t.plan_resize(range(4)) == t.plan_resize(range(4))
+
+    def test_slot_limit_caps_fresh_workers(self):
+        t = make_table(workers=1, slot_limit=1)
+        for rid in range(4):
+            t.allocate(rid, 2, worker=0)
+        res = t.apply_resize(range(3))
+        landed = {}
+        for _rid, _src, dst in res.moves:
+            landed[dst] = landed.get(dst, 0) + 1
+        assert all(n <= 1 for w, n in landed.items() if w in res.added)
+
+    def test_empty_target_rejected(self):
+        with pytest.raises(ValueError):
+            self.loaded_table().plan_resize([])
+
+
+# ================================================== engine bytes model ==
+class TestKVBytesModel:
+    def test_noop_and_degenerate_resizes_are_free(self):
+        m = KVBytesModel(make_table())
+        zeros = {"bytes_total": 0, "bytes_stayed": 0, "bytes_moved": 0}
+        assert m.stats(2, 2) == zeros
+        assert m.stats(0, 4) == zeros
+        assert m(2, 2) == zeros
+
+    def test_prefix_contract_enforced(self):
+        t = KVPageTable(SPEC, [0, 2], 8)     # hole in the worker range
+        with pytest.raises(ValueError, match="prefix"):
+            KVBytesModel(t).stats(2, 4)
+        with pytest.raises(ValueError, match="width"):
+            KVBytesModel(make_table(), width=2).stats(3, 4)
+
+    def test_stats_match_table_prediction(self):
+        t = make_table()
+        t.allocate(0, 3, worker=0)
+        t.allocate(1, 2, worker=1)
+        m = KVBytesModel(t)
+        assert m.stats(2, 4) == t.predicted_resize_stats(range(4))
+        assert m.stats(2, 1) == t.predicted_resize_stats(range(1))
+
+    def test_engine_charges_the_table_bytes(self):
+        """A ReconfigEngine with the KV bytes model prices a pool resize
+        from the actual resident pages — the stage-3 contract."""
+        t = make_table()
+        t.allocate(0, 3, worker=0)
+        t.allocate(1, 2, worker=1)
+        engine = ReconfigEngine(cost_model=MN5, bytes_model=KVBytesModel(t))
+        predicted = t.predicted_resize_stats(range(1))
+        stayed, moved = engine.redistribution_stats(2, 1)
+        assert (stayed, moved) == (predicted["bytes_stayed"],
+                                   predicted["bytes_moved"])
+
+
+# ============================================== batching: random walks ==
+SIZES = (1, 2, 3, 4, 6, 8)
+
+
+def drive(batcher, ops):
+    """Replay (op, arg) pairs; check invariants after every operation."""
+    rid = step = 0
+    for op, arg in ops:
+        if op == 0:                                    # arrival
+            batcher.submit(Request(
+                rid=rid, arrival_step=step,
+                prompt_tokens=1 + 3 * arg, gen_tokens=1 + arg))
+            rid += 1
+        elif op == 1:                                  # pool resize
+            batcher.resize(range(SIZES[arg % len(SIZES)]), step)
+        else:                                          # serve one step
+            batcher.admit(step)
+            batcher.decode(step)
+        batcher.check_invariants()
+        step += 1
+    return rid, step
+
+
+def drain(batcher, step, limit=600):
+    for _ in range(limit):
+        if not batcher.in_flight():
+            return True
+        batcher.admit(step)
+        batcher.decode(step)
+        batcher.check_invariants()
+        step += 1
+    return False
+
+
+class TestBatcherProperties:
+    """Random arrival/decode/resize interleavings: nothing is ever
+    dropped or duplicated, and the page ledger balances at drain."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(ops=st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2),
+                  st.integers(min_value=0, max_value=7)),
+        min_size=1, max_size=60))
+    def test_interleavings_never_drop_or_duplicate(self, ops):
+        table = make_table(workers=2, slot_limit=3)
+        b = ContinuousBatcher(table, slots_per_worker=3)
+        submitted, step = drive(b, ops)
+        assert drain(b, step), "batcher failed to drain"
+        assert b.dropped == 0
+        assert set(b.completed) == set(range(submitted))
+        assert table.total_pages() == 0
+        assert table.pages_allocated == table.pages_freed
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2),
+                  st.integers(min_value=0, max_value=7)),
+        min_size=1, max_size=40),
+        n_after=st.sampled_from(SIZES))
+    def test_resize_preserves_in_flight_and_progress(self, ops, n_after):
+        table = make_table(workers=2, slot_limit=3)
+        b = ContinuousBatcher(table, slots_per_worker=3)
+        _, step = drive(b, ops)
+        flight_before = b.in_flight()
+        progress_before = dict(b.progress)
+        b.resize(range(n_after), step)
+        b.check_invariants()
+        assert b.in_flight() == flight_before
+        for rid, done in progress_before.items():
+            assert b.progress.get(rid, done) == done   # nothing restarted
+
+    def test_requeued_request_readmits_where_its_pages_are(self):
+        """A resize survivor sent back to the queue re-admits only on
+        the worker holding its pages — re-admission moves zero bytes."""
+        table = make_table(workers=2, slot_limit=1)
+        b = ContinuousBatcher(table, slots_per_worker=1)
+        for rid in range(2):
+            b.submit(Request(rid, 0, prompt_tokens=8, gen_tokens=6))
+        b.admit(0)
+        assert len(b.active) == 2              # one slot on each worker
+        b.resize([0], 0)                       # both now hold pages on 0
+        b.check_invariants()
+        assert b.requeued >= 1 and b.dropped == 0
+        queued = list(b.queue)
+        assert queued
+        allocated_before = table.pages_allocated
+        b.admit(1)
+        assert table.pages_allocated == allocated_before
+        for rid in queued:
+            if rid in b.active:
+                assert b.active[rid] == table.request_worker(rid) == 0
+
+    def test_head_of_line_blocking_is_fair(self):
+        """When the oldest waiting request cannot be placed, nothing
+        behind it jumps the queue."""
+        table = make_table(workers=1, pages_per_worker=4)
+        b = ContinuousBatcher(table, slots_per_worker=4)
+        b.submit(Request(0, 0, prompt_tokens=64, gen_tokens=1))   # 4 pages
+        b.submit(Request(1, 0, prompt_tokens=64, gen_tokens=1))   # blocked
+        b.submit(Request(2, 0, prompt_tokens=1, gen_tokens=1))    # would fit
+        assert b.admit(0) == [0]
+        assert list(b.queue) == [1, 2]          # 2 did not overtake 1
+
+
+# ================================================== the serve traces ==
+class TestServeTraces:
+    def test_traces_are_registered_scenarios(self):
+        names = {s.name for s in registered_scenarios()}
+        assert set(SERVE_SCENARIO_NAMES) <= names
+        assert set(SERVE_SCENARIO_NAMES) == set(SERVE_TRAFFIC)
+
+    @pytest.mark.parametrize("name", SERVE_SCENARIO_NAMES)
+    def test_scenario_machinery_sim_live_parity(self, name):
+        """As plain scenarios (nominal bytes model) the serve traces
+        already agree per event on both scenario executors."""
+        sc = get_scenario(name)
+        sim = run_scenario_sim(sc)
+        live = run_scenario_live(sc)
+        assert len(sim) >= 2, "serve trace must actually reconfigure"
+        assert [record_parity_key(r) for r in sim] == \
+            [record_parity_key(r) for r in live]
+
+    @pytest.mark.parametrize("name", SERVE_SCENARIO_NAMES)
+    def test_zero_drop_pinned(self, name):
+        """ACCEPTANCE: no serve trace drops an in-flight request across
+        any resize, and every page is returned at drain (run_serve
+        raises on violations; the report re-asserts the tallies)."""
+        rep = run_serve(name)
+        assert rep.dropped == 0
+        assert rep.submitted == rep.completed > 0
+        assert len(rep.records) >= 2
+        assert rep.migrated + rep.requeued > 0   # resizes hit live requests
+        assert rep.bytes_moved > 0               # ...and moved their KV
+        assert len(rep.latencies) == rep.completed
+        assert rep.downtime_s == sum(r.downtime_s for r in rep.records)
+
+    @pytest.mark.parametrize("name", SERVE_SCENARIO_NAMES)
+    def test_sim_equals_live_on_every_number(self, name):
+        sim = run_serve(name, executor="sim")
+        live = run_serve(name, executor="live")
+        assert serve_parity_key(sim) == serve_parity_key(live)
+
+    def test_check_serve_agreement_is_clean(self):
+        assert check_serve_agreement() == 0
+
+    def test_trace_specific_pricing(self):
+        """The knobs that make each trace distinct actually bite."""
+        flash = run_serve("serve-flashcrowd")
+        assert flash.bytes_cross_rack > 0        # burst grow pays off-rack
+        diurnal = run_serve("serve-diurnal")
+        assert diurnal.bytes_cross_rack == 0     # no topology, no split
+        slo = run_serve("serve-slo")
+        assert slo.queued_s > 0                  # delayed grants are queued
+
+    def test_phases_cover_the_run(self):
+        rep = run_serve("serve-diurnal")
+        assert rep.phases[0].start_step == 0
+        for a, b in zip(rep.phases, rep.phases[1:]):
+            assert a.end_step == b.start_step
+        assert sum(p.completed for p in rep.phases) == rep.completed
+        workers = [p.workers for p in rep.phases]
+        assert max(workers) == 8 and workers[0] == workers[-1] == 2
+
+    def test_unknown_trace_rejected(self):
+        with pytest.raises(KeyError):
+            run_serve("no-such-trace")
+        with pytest.raises(KeyError, match="traffic"):
+            run_serve("steady-cycle")            # registered, but not serve
+
+    def test_bad_executor_rejected(self):
+        with pytest.raises(ValueError, match="executor"):
+            run_serve("serve-diurnal", executor="quantum")
+
+    def test_serve_config_tracks_the_policy(self):
+        for name in SERVE_SCENARIO_NAMES:
+            cfg = serve_config(name)
+            pol = SERVE_TRAFFIC[name]
+            assert cfg.slots_per_worker == pol.slots_per_worker
+            assert cfg.gen_tokens == pol.hold_steps - 2
+
+    def test_launch_driver_agrees_and_prints_phases(self, capsys):
+        """The rewired serve entry point replays sim + live and exits 0
+        only when every number matches."""
+        from repro.launch.serve import main, run_elastic
+
+        assert run_elastic(("serve-diurnal",), "both", None) == 0
+        out = capsys.readouterr().out
+        assert "sim == live: OK" in out
+        assert "total: wall" in out
+        assert main(["--scenario", "serve-slo", "--executor", "sim"]) == 0
+        assert "queued" in capsys.readouterr().out
+
+
+# =============================================== trainer loop (slow) ==
+SERVE_TRAINER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.configs import smoke_config
+    from repro.elastic import ElasticTrainer
+    from repro.malleability import get_scenario, run_scenario_sim
+    from repro.models import Model
+
+    model = Model(smoke_config("xlstm_125m"))
+
+    # Node counts along every serve trace are 2/4/8, so batch 8 shards
+    # cleanly on the 8 host devices at each allocation.
+    for name in ("serve-diurnal", "serve-flashcrowd", "serve-slo"):
+        sc = get_scenario(name)
+        sim = run_scenario_sim(sc)
+        tr = ElasticTrainer.from_scenario(model, sc, batch=8, seq=32)
+        tr.run(sc.steps)
+        live = tr.runtime.history
+        assert len(live) == len(sim), (name, len(live), len(sim))
+        for s, l in zip(sim, live):
+            assert l.downtime_s == s.downtime_s, (name, s, l)
+            assert l.est_wall_s == s.est_wall_s, (name, s, l)
+            assert l.queued_s == s.queued_s, (name, s, l)
+            assert (l.bytes_moved, l.bytes_stayed) == (
+                s.bytes_moved, s.bytes_stayed), (name, s, l)
+            assert l.bytes_cross_rack == s.bytes_cross_rack, (name, s, l)
+            assert (l.nodes_before, l.nodes_after) == (
+                s.nodes_before, s.nodes_after), (name, s, l)
+        losses = np.array(tr.losses())
+        assert np.isfinite(losses).all(), name
+        print("SERVE_TRAINER_OK", name, len(live), "reconfigs")
+""")
+
+
+@pytest.mark.slow
+def test_trainer_loop_matches_serve_simulator():
+    """Full ElasticTrainer loop on every serve trace: its runtime
+    history must carry exactly the simulator's per-event downtimes,
+    queue spans, and bytes — ``bytes_cross_rack`` included."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", SERVE_TRAINER_SCRIPT], capture_output=True,
+        text=True, timeout=1800, env=env,
+    )
+    assert proc.returncode == 0, (proc.stderr[-3000:], proc.stdout[-500:])
+    for name in SERVE_SCENARIO_NAMES:
+        assert f"SERVE_TRAINER_OK {name}" in proc.stdout
