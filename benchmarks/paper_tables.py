@@ -14,6 +14,8 @@ Redistribution — stage-3 bytes-moved sweep over model configs
 Overlap    — partial-overlap (fraction x contention) downtime sweep
 Policy sweep — strategy x RMS-policy trace makespan/downtime envelopes
 Serve      — strategy x traffic-trace latency percentiles (elastic decode)
+Scheduler  — closed-loop knob search vs the rigid-cluster baseline,
+             winning knobs replayed under every spawning strategy
 
 The expensive table functions take their grids as parameters so the
 ``--smoke`` mode of ``run.py`` can shrink them without touching the
@@ -24,42 +26,45 @@ from __future__ import annotations
 import itertools
 import time
 
-from repro.core import (
+# Everything below comes off the stable surface (docs/api.md) — the
+# benchmark suite is user code and programs against repro.api only.
+from repro.api import (
+    KNOB_GRID,
+    MN5,
+    NASP,
+    POLICY_SCENARIO_NAMES,
+    SERVE_SCENARIO_NAMES,
+    WORKLOAD_TRACES,
+    ChurnPolicy,
+    ClusterState as RmsClusterState,
+    JobSpec,
     Method,
     ReconfigEngine,
+    SchedulerKnobs,
     ShrinkKind,
     Stage,
     Strategy,
     StrategySpec,
-    plan_diffusive,
-    plan_hypercube,
-    registered_strategies,
-    running_vector,
-    shrink_timeline,
-)
-from repro.malleability import (
-    MN5,
-    NASP,
-    ChurnPolicy,
-    JobSpec,
+    churn_trace,
+    evaluate_schedule,
     fsdp_bytes_model,
     get_scenario,
     monte_carlo_sweep,
+    optimize_schedule,
     param_bytes_for_arch,
+    plan_diffusive,
+    plan_hypercube,
     registered_scenarios,
+    registered_strategies,
     replicated_bytes_model,
     run_scenario_sim,
     run_scenario_vectorized,
+    run_serve,
+    running_vector,
+    shrink_timeline,
     simulate_expansion,
     simulate_shrink,
 )
-from repro.malleability.policies import (
-    POLICY_SCENARIO_NAMES,
-    SERVE_SCENARIO_NAMES,
-    ClusterState as RmsClusterState,
-    churn_trace,
-)
-from repro.serving import run_serve
 
 MN5_CORES = 112
 MN5_NODES = [1, 2, 4, 8, 16, 24, 32]
@@ -399,6 +404,70 @@ def table_serve(traces: tuple[str, ...] = SERVE_SCENARIO_NAMES) -> list[dict]:
     return rows
 
 
+# ------------------------------------------ closed-loop scheduler search --
+# --smoke subset of the knob grid: 8 corners instead of 27 cells (plus
+# fewer random restarts), same search code path.
+SCHED_SMOKE_GRID = tuple(
+    SchedulerKnobs(backfill_threshold=t, preempt_priority=p,
+                   placement_quantum=q)
+    for t in (1, 4) for p in (80, 1000) for q in (1, 2)
+)
+SCHED_SMOKE_RANDOM = 2
+SCHED_FULL_RANDOM = 8
+
+
+def table_scheduler(grid=None, n_random: int = SCHED_FULL_RANDOM,
+                    seed: int = 0) -> list[dict]:
+    """Closed-loop scheduler optimizer vs the rigid-cluster control.
+
+    For every registered SLURM-scale workload trace
+    (:data:`repro.api.WORKLOAD_TRACES`), run the seeded knob search once
+    under the workload's default strategy, then re-evaluate the winning
+    knobs under EVERY registered spawning strategy — one schedule, many
+    mechanisms, so the strategy rows are apples-to-apples.  The
+    ``rigid-baseline`` row is the control a rigid cluster gives you:
+    malleables pinned at peak request, zero reconfiguration cost, queue
+    and idle time paying for it.  ``beats_baseline`` in every strategy
+    row's derived column is the acceptance criterion: the optimized
+    malleable schedule must score better than rigid for every workload
+    under every mechanism.  The ``expand_downtime`` column is where
+    ``dmr-async``'s two-phase overlap shows up against the synchronous
+    strategies on the identical schedule.
+    """
+    rows = []
+    for name, trace in sorted(WORKLOAD_TRACES.items()):
+        result = optimize_schedule(
+            trace, grid=grid if grid is not None else KNOB_GRID,
+            n_random=n_random, seed=seed)
+        knobs = result.best.knobs
+        base = result.baseline
+        rows.append({
+            "workload": name, "strategy": "rigid-baseline",
+            "score": round(base.score, 6),
+            "makespan_s": round(base.makespan_s, 6),
+            "downtime_s": round(base.downtime_s, 6),
+            "expand_downtime_s": round(base.expand_downtime_s, 6),
+            "mean_queue_s": round(base.mean_queue_s, 6),
+            "utilization": round(base.utilization, 4),
+            "reconfigs": base.reconfigs,
+            "beats_baseline": False,
+        })
+        for spec in registered_strategies():
+            out = evaluate_schedule(trace, knobs, strategy=spec.key)
+            rows.append({
+                "workload": name, "strategy": spec.key,
+                "score": round(out.score, 6),
+                "makespan_s": round(out.makespan_s, 6),
+                "downtime_s": round(out.downtime_s, 6),
+                "expand_downtime_s": round(out.expand_downtime_s, 6),
+                "mean_queue_s": round(out.mean_queue_s, 6),
+                "utilization": round(out.utilization, 4),
+                "reconfigs": out.reconfigs,
+                "beats_baseline": out.score < base.score,
+            })
+    return rows
+
+
 # ------------------------------------------- stage-3 redistribution tables --
 REDIST_ARCHS = ("xlstm_125m", "stablelm_3b", "gemma2_9b")
 REDIST_RESIZES = ((1, 4), (1, 8), (4, 8), (8, 4), (8, 1))
@@ -546,7 +615,8 @@ def table_scale(sizes: tuple[int, ...] = SCALE_SIZES,
     )
     t0 = time.perf_counter()
     sweep = monte_carlo_sweep(
-        ChurnPolicy(decisions=SCALE_MC_DECISIONS), mc_replicas, cluster)
+        ChurnPolicy(decisions=SCALE_MC_DECISIONS), mc_replicas,
+        cluster=cluster)
     mc_s = time.perf_counter() - t0
     rows.append({
         "table": "scale-mc",

@@ -46,6 +46,8 @@ from paper_tables import (  # noqa: E402
     MN5_NODES,
     NASP_NODES,
     REDIST_ARCHS,
+    SCHED_SMOKE_GRID,
+    SCHED_SMOKE_RANDOM,
     fig1_hypercube_rounds,
     fig4a_homogeneous_expansion,
     fig4b_homogeneous_shrink,
@@ -59,6 +61,7 @@ from paper_tables import (  # noqa: E402
     table_hetero_strategies,
     table_redistribution,
     table_scale,
+    table_scheduler,
     table_serve,
     table_topology,
 )
@@ -164,6 +167,21 @@ def collect_rows(smoke: bool = False, timings: dict | None = None) -> list[dict]
             f"queued_us={r['queued_s']*1e6:.0f};"
             f"resizes={r['resizes']};done={r['completed']};"
             f"bytes={r['bytes_moved']};cross_rack={r['bytes_cross_rack']}")
+
+    # --smoke shrinks the knob search (8-corner grid, 2 restarts); the
+    # workloads themselves always run in full — their closed-loop
+    # coverage is the point of the table.
+    sched = (lambda: table_scheduler(grid=SCHED_SMOKE_GRID,
+                                     n_random=SCHED_SMOKE_RANDOM)
+             ) if smoke else table_scheduler
+    for r in timed("sched", sched):
+        add(f"sched/{r['workload']}/{r['strategy']}",
+            r["makespan_s"] * 1e6,
+            f"score={r['score']};beats_rigid={r['beats_baseline']};"
+            f"downtime_us={r['downtime_s']*1e6:.0f};"
+            f"expand_downtime_us={r['expand_downtime_s']*1e6:.0f};"
+            f"queue_s={r['mean_queue_s']};util={r['utilization']};"
+            f"reconfigs={r['reconfigs']}")
 
     return rows
 

@@ -20,13 +20,22 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import numpy as np
 
-from repro.configs import smoke_config
-from repro.core import Method, Strategy
-from repro.data import SyntheticTokens, make_batch_on_mesh
-from repro.elastic import DevicePool, ElasticRuntime, reshard_tree, transfer_stats
-from repro.models import Model
-from repro.parallel.sharding import ShardingContext, param_sharding
-from repro.train.steps import build_init_fn, build_train_step
+from repro.api import (
+    DevicePool,
+    ElasticRuntime,
+    Method,
+    Model,
+    ShardingContext,
+    Strategy,
+    SyntheticTokens,
+    build_init_fn,
+    build_train_step,
+    make_batch_on_mesh,
+    param_sharding,
+    reshard_tree,
+    smoke_config,
+    transfer_stats,
+)
 
 
 def make_step(model, ctx, shardings):
@@ -37,8 +46,7 @@ def make_step(model, ctx, shardings):
 
 def resharded(state, model, ctx):
     """Stage 3 (data redistribution): move state onto the new mesh."""
-    from repro.parallel.sharding import param_sharding
-    from repro.train.steps import TrainState, train_state_shardings
+    from repro.api import train_state_shardings
 
     _, shardings = train_state_shardings(model, ctx)
     new_state = jax.tree.map(
@@ -64,7 +72,7 @@ def main():
         return ShardingContext(mesh=rt.mesh(("data",)), mode="train")
 
     ctx = ctx_now()
-    from repro.train.steps import train_state_shardings
+    from repro.api import train_state_shardings
 
     _, shardings = train_state_shardings(model, ctx)
     init_fn, _ = build_init_fn(model, ctx)

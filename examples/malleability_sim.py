@@ -18,20 +18,18 @@ per-link bytes number disagrees.
 import argparse
 import sys
 
-from repro.core import (
+from repro.api import (
+    MN5,
+    NASP,
     Method,
     ReconfigEngine,
     ShrinkKind,
     Strategy,
-    plan_hypercube,
-    registered_strategies,
-)
-from repro.malleability import (
-    MN5,
-    NASP,
     get_scenario,
+    plan_hypercube,
     record_parity_key,
     registered_scenarios,
+    registered_strategies,
     run_scenario_live,
     run_scenario_sim,
     simulate_expansion,

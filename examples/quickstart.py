@@ -7,12 +7,16 @@ import time
 
 import jax
 
-from repro.configs import smoke_config
-from repro.data import SyntheticTokens, make_batch_on_mesh
-from repro.launch.mesh import make_host_mesh
-from repro.models import Model
-from repro.parallel.sharding import ShardingContext
-from repro.train.steps import build_init_fn, build_train_step
+from repro.api import (
+    Model,
+    ShardingContext,
+    SyntheticTokens,
+    build_init_fn,
+    build_train_step,
+    make_batch_on_mesh,
+    make_host_mesh,
+    smoke_config,
+)
 
 
 def main():

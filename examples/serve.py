@@ -33,11 +33,16 @@ def static_demo(args) -> int:
     import jax
     import jax.numpy as jnp
 
-    from repro.configs import smoke_config
-    from repro.core import Method, Strategy
-    from repro.elastic import DevicePool, ElasticRuntime
-    from repro.models import Model
-    from repro.parallel.sharding import ShardingContext, use_sharding
+    from repro.api import (
+        DevicePool,
+        ElasticRuntime,
+        Method,
+        Model,
+        ShardingContext,
+        Strategy,
+        smoke_config,
+        use_sharding,
+    )
 
     def sample_greedy(logits):
         return jnp.argmax(logits[:, -1], axis=-1)[:, None]
@@ -102,8 +107,7 @@ def static_demo(args) -> int:
 
 def elastic_demo(args) -> int:
     """Replay serve traces sim + live; count disagreements."""
-    from repro.launch.serve import run_elastic
-    from repro.malleability.policies import SERVE_SCENARIO_NAMES
+    from repro.api import SERVE_SCENARIO_NAMES, run_elastic
 
     names = (SERVE_SCENARIO_NAMES if args.scenario == "all"
              else (args.scenario,))

@@ -1,0 +1,143 @@
+"""Public-API snapshot gate: the stable surface cannot shrink silently.
+
+``repro.api.__all__`` is THE compatibility contract (``docs/api.md``).
+This gate compares the live surface against the committed
+``API_SNAPSHOT.txt`` (one sorted name per line) and fails (exit 1) when:
+
+* a snapshot name is missing from ``repro.api.__all__`` — a public name
+  was deleted or renamed without the one-release shim the deprecation
+  policy requires;
+* any name in ``__all__`` does not actually resolve via
+  ``getattr(repro.api, name)`` — an export that raises on first touch
+  is a broken promise whether or not the snapshot lists it (lazy
+  JAX-backed names are exempted from resolution on hosts without jax;
+  their *listing* is still checked).
+
+Names present in ``__all__`` but not in the snapshot are reported as
+informational — growing the surface is fine; run ``--update`` and
+commit the refreshed snapshot so the addition is reviewed.
+
+Usage:
+    # gate (CI)
+    PYTHONPATH=src python scripts/check_api.py
+
+    # refresh the committed snapshot after deliberately changing the
+    # surface (then commit API_SNAPSHOT.txt with the change)
+    PYTHONPATH=src python scripts/check_api.py --update
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+DEFAULT_SNAPSHOT = "API_SNAPSHOT.txt"
+
+
+def _snapshot_path(path: str) -> str:
+    if os.path.isabs(path):
+        return path
+    # Resolve against the repo root, not the CWD: running the script
+    # from elsewhere must hit the committed snapshot, not a stray copy.
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return os.path.join(repo, path)
+
+
+def _jax_available() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def live_surface():
+    """Return ``(names, lazy_names)`` from the live ``repro.api``."""
+    from repro import api
+
+    return sorted(api.__all__), frozenset(api._LAZY_EXPORTS)
+
+
+def check(path: str) -> int:
+    from repro import api
+
+    names, lazy = live_surface()
+    failures: list[str] = []
+    infos: list[str] = []
+
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        failures.append(f"DUPLICATE  __all__ repeats: {', '.join(dupes)}")
+
+    try:
+        with open(path) as f:
+            snapshot = [ln.strip() for ln in f if ln.strip()
+                        and not ln.lstrip().startswith("#")]
+    except FileNotFoundError:
+        print(f"check_api: snapshot {path} missing — run --update and "
+              "commit it", file=sys.stderr)
+        return 1
+
+    current = set(names)
+    for name in snapshot:
+        if name not in current:
+            failures.append(
+                f"REMOVED    {name!r} is in {os.path.basename(path)} but "
+                "not in repro.api.__all__ (deprecation policy: shim for "
+                "one release, then --update)")
+    for name in names:
+        if name not in snapshot:
+            infos.append(f"NEW        {name!r} not yet in snapshot "
+                         "(run --update and commit)")
+
+    resolve = names if _jax_available() else [n for n in names
+                                              if n not in lazy]
+    skipped = len(names) - len(resolve)
+    for name in resolve:
+        try:
+            getattr(api, name)
+        except Exception as exc:
+            failures.append(f"BROKEN     repro.api.{name} raises "
+                            f"{type(exc).__name__}: {exc}")
+
+    for line in infos:
+        print(line)
+    for line in failures:
+        print(line, file=sys.stderr)
+    if failures:
+        print(f"check_api: FAILED — {len(failures)} problems "
+              f"({len(snapshot)} snapshot names, {len(names)} live names)",
+              file=sys.stderr)
+        return 1
+    note = f", {skipped} jax-backed names listing-checked only" if skipped \
+        else ""
+    print(f"check_api: {len(names)} public names OK against "
+          f"{os.path.basename(path)} ({len(resolve)} resolved{note})")
+    return 0
+
+
+def update(path: str) -> int:
+    names, _ = live_surface()
+    with open(path, "w") as f:
+        f.write("# repro.api public surface — regenerate with\n"
+                "#   PYTHONPATH=src python scripts/check_api.py --update\n")
+        for name in names:
+            f.write(name + "\n")
+    print(f"check_api: wrote {len(names)} names to {path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("snapshot", nargs="?", default=DEFAULT_SNAPSHOT,
+                    help=f"committed snapshot (default {DEFAULT_SNAPSHOT})")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the snapshot from the live surface "
+                         "instead of comparing")
+    args = ap.parse_args(argv)
+    path = _snapshot_path(args.snapshot)
+    return update(path) if args.update else check(path)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,13 @@ import argparse
 import sys
 import traceback
 
+# Strategies the registry must always carry: losing one of these to an
+# import-order or registration regression would silently shrink the
+# matrix instead of failing it.  "dmr-async" in particular must replay
+# every registered scenario (the two-phase expansion path).
+REQUIRED_STRATEGIES = ("sequential", "per_node", "single", "hypercube",
+                       "diffusive", "topo", "dmr-async")
+
 
 def run_matrix(verbose: bool = False) -> int:
     from repro.core import registered_strategies
@@ -35,6 +42,11 @@ def run_matrix(verbose: bool = False) -> int:
     strategies = registered_strategies()
     scenarios = registered_scenarios()
     failures: list[str] = []
+    registered = {s.key for s in strategies}
+    for key in REQUIRED_STRATEGIES:
+        if key not in registered:
+            failures.append(
+                f"MISSING  required strategy {key!r} is not registered")
     exercised_strategy: dict[str, int] = {s.key: 0 for s in strategies}
     exercised_scenario: dict[str, int] = {sc.name: 0 for sc in scenarios}
     pairs = skipped = 0

@@ -1,0 +1,34 @@
+"""repro — reproduction of "Parallel Spawning Strategies for
+Dynamic-Aware MPI Applications", grown into an elastic scheduling,
+training, and serving stack.
+
+The stable public surface lives in :mod:`repro.api` (see
+``docs/api.md``); this package re-exports it lazily, so both spellings
+work and ``import repro`` stays free of heavyweight imports:
+
+    from repro.api import ReconfigEngine      # the documented path
+    import repro; repro.ReconfigEngine        # same object
+
+Subpackage imports (``repro.core``, ``repro.malleability``, ...) are
+untouched — internal code keeps importing the implementation modules
+directly.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+
+def __getattr__(name: str):
+    # import_module, NOT ``from repro import api``: a fromlist import
+    # resolves "api" through this very __getattr__ and recurses.
+    api = import_module("repro.api")
+    if name == "api":
+        return api
+    if name in api.__all__:
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__() -> list[str]:
+    api = import_module("repro.api")
+    return sorted(set(globals()) | set(api.__all__) | {"api"})

@@ -1,0 +1,302 @@
+"""repro.api — THE stable, documented import surface.
+
+Seven PRs of organic growth scattered entry points across subpackages
+(``repro.core``, ``repro.malleability``, ``repro.elastic.rms`` shims,
+``repro.serving``).  This module is the one import path user code —
+``examples/``, ``benchmarks/``, and tests — programs against:
+
+* everything in ``__all__`` is covered by the deprecation policy in
+  ``docs/api.md``: removing or renaming a name requires a shim for one
+  release, and ``scripts/check_api.py`` gates CI on the committed
+  ``API_SNAPSHOT.txt``;
+* device-free layers (the engine/strategy core, scenarios, policies,
+  the scheduler optimizer, the serving plane) import eagerly;
+  JAX-backed layers (the elastic runtime, models, training, launch
+  helpers) resolve lazily on first attribute access, so
+  ``import repro.api`` stays cheap on machines without an accelerator.
+
+Naming note: :class:`ClusterState` here is the RMS-side ledger
+(:mod:`repro.malleability.policies` — one shared pool, per-job
+allocations).  The engine-internal world ledger of the same name stays
+at :class:`repro.core.ClusterState` and is not part of this surface.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+# ---- engine / strategy core (device-free) ----------------------------------
+from repro.core import (
+    DISTANCE_CLASSES,
+    DMR_KEY,
+    TOPO_KEY,
+    Method,
+    ReconfigEngine,
+    ReconfigOutcome,
+    ReconfigPlan,
+    ShrinkKind,
+    SpawnPlan,
+    Stage,
+    Strategy,
+    StrategySpec,
+    Timeline,
+    TimelineEvent,
+    Topology,
+    get_strategy,
+    plan_diffusive,
+    plan_dmr,
+    plan_hypercube,
+    plan_sequential,
+    plan_topo,
+    register_strategy,
+    registered_strategies,
+    running_vector,
+    shrink_timeline,
+    strategy_key,
+)
+
+# ---- cost models, scenarios, executors (device-free) -----------------------
+from repro.malleability import (
+    MN5,
+    NASP,
+    CostModel,
+    ExpansionReport,
+    Scenario,
+    ScenarioEvent,
+    ScenarioRecord,
+    ShrinkReport,
+    TransitionCache,
+    fsdp_bytes_model,
+    get_scenario,
+    param_bytes_for_arch,
+    record_parity_key,
+    register_scenario,
+    registered_scenarios,
+    replicated_bytes_model,
+    replicated_link_model,
+    resolve_engine,
+    run_scenario_live,
+    run_scenario_sim,
+    run_scenario_vectorized,
+    scenario_pool,
+    simulate_expansion,
+    simulate_redistribution,
+    simulate_shrink,
+)
+
+# ---- RMS policies + the multi-job arbiter (device-free) --------------------
+from repro.malleability import (
+    SERVE_SCENARIO_NAMES,
+    SERVE_TRAFFIC,
+    ArbitratedJob,
+    BackfillPolicy,
+    ChurnPolicy,
+    JobSpec,
+    MonteCarloSweep,
+    MultiJobOutcome,
+    PolicyTrace,
+    PreemptionPolicy,
+    PriorityArrival,
+    RigidArrival,
+    RmsPolicy,
+    TrafficPolicy,
+    arbitrate_jobs,
+    charge_in_flight_queueing,
+    churn_trace,
+    monte_carlo_sweep,
+    registered_policy_scenarios,
+    registered_serve_scenarios,
+    run_multijob_sim,
+)
+from repro.malleability.policies import POLICY_SCENARIO_NAMES, ClusterState
+
+# ---- the closed scheduling loop (device-free) ------------------------------
+from repro.malleability import (
+    KNOB_GRID,
+    WORKLOAD_SCENARIO_NAMES,
+    WORKLOAD_TRACES,
+    OptimizerResult,
+    ScheduleObjective,
+    ScheduleOutcome,
+    SchedulerKnobs,
+    WorkloadTrace,
+    evaluate_schedule,
+    generate_workload,
+    optimize_schedule,
+    registered_workload_scenarios,
+    rigid_baseline,
+)
+
+# ---- elastic serving plane (device-free) -----------------------------------
+from repro.serving import (
+    EXECUTORS,
+    ContinuousBatcher,
+    KVBytesModel,
+    KVPageTable,
+    PageSpec,
+    Request,
+    ServeConfig,
+    ServePhase,
+    ServeReport,
+    check_serve_agreement,
+    run_serve,
+    serve_config,
+    serve_parity_key,
+)
+
+# ---- JAX-backed layers: resolved lazily on first access --------------------
+# name -> providing module.  Kept out of the eager imports so
+# `import repro.api` works (fast) anywhere the device-free simulator
+# runs; touching one of these names imports jax.
+_LAZY_EXPORTS: dict[str, str] = {
+    # elastic runtime
+    "DevicePool": "repro.elastic",
+    "ElasticRuntime": "repro.elastic",
+    "ElasticTrainer": "repro.elastic.trainer",
+    "reshard_tree": "repro.elastic",
+    "transfer_stats": "repro.elastic",
+    # RMS event source (package import pulls the jax-backed runtime)
+    "Event": "repro.elastic.rms",
+    "EventKind": "repro.elastic.rms",
+    "SimulatedRMS": "repro.elastic.rms",
+    # model / data / config
+    "Model": "repro.models",
+    "arch_config": "repro.configs",
+    "smoke_config": "repro.configs",
+    "SyntheticTokens": "repro.data",
+    "make_batch_on_mesh": "repro.data",
+    # sharding + training
+    "ShardingContext": "repro.parallel.sharding",
+    "param_sharding": "repro.parallel.sharding",
+    "use_sharding": "repro.parallel.sharding",
+    "TrainState": "repro.train.steps",
+    "build_init_fn": "repro.train.steps",
+    "build_train_step": "repro.train.steps",
+    "train_state_shardings": "repro.train.steps",
+    # launchers
+    "make_host_mesh": "repro.launch.mesh",
+    "run_elastic": "repro.launch.serve",
+}
+
+
+def __getattr__(name: str):
+    module = _LAZY_EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    value = getattr(import_module(module), name)
+    globals()[name] = value     # cache: subsequent lookups are plain
+    return value
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(_LAZY_EXPORTS))
+
+
+__all__ = [
+    # engine / strategy core
+    "DISTANCE_CLASSES",
+    "DMR_KEY",
+    "TOPO_KEY",
+    "Method",
+    "ReconfigEngine",
+    "ReconfigOutcome",
+    "ReconfigPlan",
+    "ShrinkKind",
+    "SpawnPlan",
+    "Stage",
+    "Strategy",
+    "StrategySpec",
+    "Timeline",
+    "TimelineEvent",
+    "Topology",
+    "get_strategy",
+    "plan_diffusive",
+    "plan_dmr",
+    "plan_hypercube",
+    "plan_sequential",
+    "plan_topo",
+    "register_strategy",
+    "registered_strategies",
+    "running_vector",
+    "shrink_timeline",
+    "strategy_key",
+    # cost models, scenarios, executors
+    "MN5",
+    "NASP",
+    "CostModel",
+    "ExpansionReport",
+    "Scenario",
+    "ScenarioEvent",
+    "ScenarioRecord",
+    "ShrinkReport",
+    "TransitionCache",
+    "fsdp_bytes_model",
+    "get_scenario",
+    "param_bytes_for_arch",
+    "record_parity_key",
+    "register_scenario",
+    "registered_scenarios",
+    "replicated_bytes_model",
+    "replicated_link_model",
+    "resolve_engine",
+    "run_scenario_live",
+    "run_scenario_sim",
+    "run_scenario_vectorized",
+    "scenario_pool",
+    "simulate_expansion",
+    "simulate_redistribution",
+    "simulate_shrink",
+    # policies + arbiter
+    "POLICY_SCENARIO_NAMES",
+    "SERVE_SCENARIO_NAMES",
+    "SERVE_TRAFFIC",
+    "ArbitratedJob",
+    "BackfillPolicy",
+    "ChurnPolicy",
+    "ClusterState",
+    "JobSpec",
+    "MonteCarloSweep",
+    "MultiJobOutcome",
+    "PolicyTrace",
+    "PreemptionPolicy",
+    "PriorityArrival",
+    "RigidArrival",
+    "RmsPolicy",
+    "TrafficPolicy",
+    "arbitrate_jobs",
+    "charge_in_flight_queueing",
+    "churn_trace",
+    "monte_carlo_sweep",
+    "registered_policy_scenarios",
+    "registered_serve_scenarios",
+    "run_multijob_sim",
+    # scheduler optimizer
+    "KNOB_GRID",
+    "WORKLOAD_SCENARIO_NAMES",
+    "WORKLOAD_TRACES",
+    "OptimizerResult",
+    "ScheduleObjective",
+    "ScheduleOutcome",
+    "SchedulerKnobs",
+    "WorkloadTrace",
+    "evaluate_schedule",
+    "generate_workload",
+    "optimize_schedule",
+    "registered_workload_scenarios",
+    "rigid_baseline",
+    # serving plane
+    "EXECUTORS",
+    "ContinuousBatcher",
+    "KVBytesModel",
+    "KVPageTable",
+    "PageSpec",
+    "Request",
+    "ServeConfig",
+    "ServePhase",
+    "ServeReport",
+    "check_serve_agreement",
+    "run_serve",
+    "serve_config",
+    "serve_parity_key",
+    # JAX-backed (lazy)
+    *sorted(_LAZY_EXPORTS),
+]

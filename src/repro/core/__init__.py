@@ -11,6 +11,7 @@ Faithful implementations of:
   * MaM-style manager facade      (§3)               -> :mod:`.manager`
   * Cluster topology + distance classes              -> :mod:`.topology`
   * Topology-aware spawning strategy ("topo")        -> :mod:`.topo`
+  * DMR-style async two-phase strategy ("dmr-async") -> :mod:`.dmr`
 """
 from .connect import (
     ConnectRound,
@@ -63,9 +64,10 @@ from .vectorized import (
     redistribution_charge,
     ts_shrink_charges,
 )
-# Importing .topo registers the "topo" strategy in the engine registry
-# (it is an ordinary third-party-style registration).
+# Importing .topo / .dmr registers the "topo" and "dmr-async" strategies
+# in the engine registry (ordinary third-party-style registrations).
 from .topo import TOPO_KEY, place_rack_local, plan_topo, vacate_racks
+from .dmr import DMR_KEY, plan_dmr
 from .types import (
     SOURCE_GID,
     GroupSpec,
@@ -83,6 +85,7 @@ from .types import (
 
 __all__ = [
     "DISTANCE_CLASSES",
+    "DMR_KEY",
     "SOURCE_GID",
     "TOPO_KEY",
     "Charge",
@@ -129,6 +132,7 @@ __all__ = [
     "nodes_at_step",
     "place_rack_local",
     "plan_diffusive",
+    "plan_dmr",
     "plan_hypercube",
     "plan_initial_world_shrink",
     "plan_sequential",

@@ -279,6 +279,11 @@ class StrategySpec:
     parallel: bool = False        # pays sync/connect/reorder phases (§4.3-4.5)
     homogeneous_only: bool = False
     topology_aware: bool = False  # placement honours the engine's Topology
+    two_phase: bool = False       # DMR-style async grant acceptance: the
+    #                               spawn/sync/connect legs of an expansion
+    #                               fully overlap compute (phase 1), only the
+    #                               commit (reorder/final/redistribution)
+    #                               stays on the critical path
     description: str = ""
 
 
@@ -1138,7 +1143,7 @@ class ReconfigEngine:
             kind="expand",
             method=m,
             strategy=spawn.strategy,
-            asynchronous=self.asynchronous,
+            asynchronous=self.asynchronous or spec.two_phase,
             ns=ns,
             nt=nt,
             spawn=spawn,
@@ -1230,6 +1235,12 @@ class ReconfigEngine:
         )
         if plan.kind == "expand":
             assert plan.spawn is not None
+            spec = _STRATEGY_REGISTRY.get(strategy_key(plan.strategy))
+            if spec is not None and spec.two_phase:
+                # Two-phase (DMR-style) expansion: the grant-acceptance
+                # legs hide under compute entirely, subject to the same
+                # contention degradation every overlapped event pays.
+                cm = cm.with_overlap(spawn=1.0, sync=1.0, connect=1.0)
             return expansion_timeline(
                 plan.spawn, cm, bytes_total=bytes_total,
                 queue_delay_s=plan.queue_delay_s, bytes_stayed=bytes_stayed,

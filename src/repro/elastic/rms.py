@@ -28,28 +28,50 @@ sim/live machinery consumes policy output unchanged:
 from __future__ import annotations
 
 import enum
+import warnings
 from dataclasses import dataclass, field
-from typing import Iterator
+from typing import TYPE_CHECKING, Iterator
 
-# Re-exported policy subsystem (the RMS grew from a scripted event source
-# into a policy engine; the implementation lives with the other
-# device-free malleability code so benchmarks can import it jax-free).
-from repro.malleability.policies import (
-    ArbitratedJob,
-    BackfillPolicy,
-    ChurnPolicy,
-    ClusterState,
-    JobSpec,
-    MultiJobOutcome,
-    PolicyTrace,
-    PreemptionPolicy,
-    PriorityArrival,
-    RigidArrival,
-    RmsPolicy,
-    arbitrate_jobs,
-    registered_policy_scenarios,
-    run_multijob_sim,
-)
+if TYPE_CHECKING:  # annotations only; the runtime names are shimmed below
+    from repro.malleability.policies import ClusterState, RmsPolicy
+
+# The policy subsystem used to be re-exported from here; the stable
+# import path is now repro.api (satellite of the repro.api redesign).
+# Each name resolves through a thin PEP 562 shim that emits ONE
+# DeprecationWarning, then caches the real object into this module's
+# globals so later lookups are free and silent.
+_DEPRECATED_POLICY_EXPORTS = frozenset({
+    "ArbitratedJob",
+    "BackfillPolicy",
+    "ChurnPolicy",
+    "ClusterState",
+    "JobSpec",
+    "MultiJobOutcome",
+    "PolicyTrace",
+    "PreemptionPolicy",
+    "PriorityArrival",
+    "RigidArrival",
+    "RmsPolicy",
+    "arbitrate_jobs",
+    "registered_policy_scenarios",
+    "run_multijob_sim",
+})
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_POLICY_EXPORTS:
+        warnings.warn(
+            f"importing {name!r} from repro.elastic.rms is deprecated; "
+            f"use repro.api.{name} (the stable surface) or "
+            f"repro.malleability.policies.{name}",
+            DeprecationWarning, stacklevel=2)
+        from repro.malleability import policies
+
+        value = getattr(policies, name)
+        globals()[name] = value     # warn exactly once per name
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "ArbitratedJob",

@@ -18,7 +18,11 @@ Three submodules:
   every timeline-derived number, bytes included;
 * :mod:`.policies` — the RMS policy engine (backfill / preemption /
   churn + the multi-job arbiter) whose generated traces land in the
-  same registry (re-exported by :mod:`repro.elastic.rms`).
+  same registry (re-exported by :mod:`repro.elastic.rms`);
+* :mod:`.optimizer` — the closed scheduling loop: SLURM-scale
+  :class:`WorkloadTrace` generation, the weighted
+  :class:`ScheduleObjective`, and the seeded knob search
+  (:func:`optimize_schedule`) against the rigid-cluster baseline.
 
 See ``docs/cost-model.md`` and ``docs/scenarios.md`` for guides.
 """
@@ -29,6 +33,21 @@ from .cost_model import (
     fsdp_bytes_model,
     replicated_bytes_model,
     replicated_link_model,
+)
+from .optimizer import (
+    KNOB_GRID,
+    WORKLOAD_SCENARIO_NAMES,
+    WORKLOAD_TRACES,
+    OptimizerResult,
+    ScheduleObjective,
+    ScheduleOutcome,
+    SchedulerKnobs,
+    WorkloadTrace,
+    evaluate_schedule,
+    generate_workload,
+    optimize_schedule,
+    registered_workload_scenarios,
+    rigid_baseline,
 )
 from .policies import (
     SERVE_SCENARIO_NAMES,
@@ -74,6 +93,7 @@ from .scenarios import (
     record_parity_key,
     register_scenario,
     registered_scenarios,
+    resolve_engine,
     run_scenario_live,
     run_scenario_sim,
     run_scenario_vectorized,
@@ -93,10 +113,13 @@ from .simulator import (
 )
 
 __all__ = [
+    "KNOB_GRID",
     "MN5",
     "NASP",
     "SERVE_SCENARIO_NAMES",
     "SERVE_TRAFFIC",
+    "WORKLOAD_SCENARIO_NAMES",
+    "WORKLOAD_TRACES",
     "ArbitratedJob",
     "BackfillPolicy",
     "ChurnPolicy",
@@ -105,6 +128,7 @@ __all__ = [
     "JobSpec",
     "MonteCarloSweep",
     "MultiJobOutcome",
+    "OptimizerResult",
     "PolicyTrace",
     "PreemptionPolicy",
     "PriorityArrival",
@@ -114,20 +138,27 @@ __all__ = [
     "Scenario",
     "ScenarioEvent",
     "ScenarioRecord",
+    "ScheduleObjective",
+    "ScheduleOutcome",
+    "SchedulerKnobs",
     "ShrinkReport",
     "TrafficPolicy",
     "TransitionCache",
+    "WorkloadTrace",
     "arbitrate_jobs",
     "backfill_pressure",
     "burst_arrival",
     "charge_in_flight_queueing",
     "churn_trace",
     "dispatch_event",
+    "evaluate_schedule",
     "fsdp_bytes_model",
+    "generate_workload",
     "get_scenario",
     "heterogeneous_pool",
     "monte_carlo_sweep",
     "node_failures",
+    "optimize_schedule",
     "param_bytes_for_arch",
     "priority_preempt",
     "record_parity_key",
@@ -135,8 +166,11 @@ __all__ = [
     "registered_policy_scenarios",
     "registered_scenarios",
     "registered_serve_scenarios",
+    "registered_workload_scenarios",
     "replicated_bytes_model",
     "replicated_link_model",
+    "resolve_engine",
+    "rigid_baseline",
     "run_multijob_sim",
     "run_scenario_live",
     "run_scenario_sim",

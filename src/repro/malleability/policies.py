@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import math
 import random
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
 
@@ -779,6 +780,8 @@ def run_multijob_sim(
     *,
     contention: float = 1.25,
     vectorized: bool = True,
+    strategy=None,
+    cost_model=None,
 ):
     """Arbitrate and simulate a multi-job workload on one pool.
 
@@ -790,10 +793,17 @@ def run_multijob_sim(
     .run_scenario_vectorized` — bit-for-bit the same records, charged
     through the memoizing transition engine; caches are per trace (each
     job carries its own cost context and contention override).
+    ``strategy=`` / ``cost_model=`` are the normalized keyword overrides
+    shared with every ``run_scenario_*`` executor
+    (:func:`~repro.malleability.scenarios.resolve_engine`), applied to
+    each arbitrated job's engine.
     """
     outcome = arbitrate_jobs(jobs, pool_nodes, contention=contention)
     runner = run_scenario_vectorized if vectorized else run_scenario_sim
-    records = {name: runner(sc) for name, sc in outcome.scenarios.items()}
+    records = {
+        name: runner(sc, strategy=strategy, cost_model=cost_model)
+        for name, sc in outcome.scenarios.items()
+    }
     return records, outcome
 
 
@@ -827,22 +837,37 @@ class MonteCarloSweep:
 
 
 def monte_carlo_sweep(
-    policy, n_replicas: int, cluster: Optional[ClusterState] = None
+    policy, n_replicas: int, *args,
+    cluster: Optional[ClusterState] = None, seed: int = 0,
 ) -> MonteCarloSweep:
     """Seeded Monte-Carlo sweep of a policy's cost distribution.
 
-    Runs ``n_replicas`` replicas of ``policy`` — seeds ``0 .. n-1`` via
-    ``dataclasses.replace(policy, seed=s)``, so the policy must carry a
-    ``seed`` field (e.g. :class:`ChurnPolicy`) — against ``cluster``
-    (default: the 8-node single-malleable-job pool the registered churn
-    trace uses).  Every replica's trace runs through
-    :func:`~repro.malleability.scenarios.run_scenario_vectorized` with
-    ONE shared :class:`~repro.malleability.scenarios.TransitionCache`:
-    the replicas differ only in their event sequences, never in cost
-    context, so transitions seen by any replica price the rest for
-    free.  This is what makes 1000-replica sweeps over 10k-node pods
-    finish in seconds.
+    Runs ``n_replicas`` replicas of ``policy`` — seeds ``seed ..
+    seed + n - 1`` via ``dataclasses.replace(policy, seed=s)``, so the
+    policy must carry a ``seed`` field (e.g. :class:`ChurnPolicy`) —
+    against ``cluster`` (default: the 8-node single-malleable-job pool
+    the registered churn trace uses).  Every replica's trace runs
+    through :func:`~repro.malleability.scenarios.run_scenario_vectorized`
+    with ONE shared :class:`~repro.malleability.scenarios
+    .TransitionCache`: the replicas differ only in their event
+    sequences, never in cost context, so transitions seen by any
+    replica price the rest for free.  This is what makes 1000-replica
+    sweeps over 10k-node pods finish in seconds.
+
+    ``cluster`` and ``seed`` are keyword-only (the normalized executor
+    signature); a positional third argument is still accepted as
+    ``cluster`` for one release, with a :class:`DeprecationWarning`.
     """
+    if args:
+        if len(args) > 1 or cluster is not None:
+            raise TypeError(
+                "monte_carlo_sweep takes at most one positional cluster "
+                "(deprecated); pass cluster= and seed= by keyword")
+        warnings.warn(
+            "passing cluster positionally to monte_carlo_sweep is "
+            "deprecated; use monte_carlo_sweep(policy, n, cluster=...)",
+            DeprecationWarning, stacklevel=2)
+        cluster = args[0]
     if cluster is None:
         cluster = ClusterState(
             total_nodes=8,
@@ -853,7 +878,7 @@ def monte_carlo_sweep(
     makespans: List[float] = []
     downtimes: List[float] = []
     reconfigs = 0
-    for s in range(n_replicas):
+    for s in range(seed, seed + n_replicas):
         trace = replace(policy, seed=s).generate(cluster)
         sc = trace.scenario(job, name=f"{policy.name}-mc-{s}")
         recs = run_scenario_vectorized(sc, cache=cache)

@@ -891,11 +891,47 @@ class RuntimeAdapter:
         return self._convert(rec)
 
 
+def resolve_engine(
+    scenario: Scenario,
+    engine: Optional[ReconfigEngine] = None,
+    *,
+    strategy=None,
+    cost_model=None,
+) -> ReconfigEngine:
+    """THE executor-shared engine resolution (the normalized keywords).
+
+    Every ``run_scenario_*`` executor accepts the same keyword-only
+    ``strategy=`` / ``cost_model=`` overrides and resolves them here:
+    no ``engine`` builds the scenario's default (with the strategy
+    override applied); an explicit ``engine`` is re-targeted with
+    ``dataclasses.replace``, so overrides compose identically whichever
+    executor — or :func:`repro.malleability.policies.run_multijob_sim` —
+    forwarded them.
+    """
+    if engine is None:
+        engine = scenario.default_engine(strategy=strategy)
+    elif strategy is not None:
+        engine = replace(engine, strategy=strategy)
+    if cost_model is not None:
+        engine = replace(engine, cost_model=cost_model)
+    return engine
+
+
 def run_scenario_sim(
-    scenario: Scenario, engine: Optional[ReconfigEngine] = None
+    scenario: Scenario,
+    engine: Optional[ReconfigEngine] = None,
+    *,
+    strategy=None,
+    cost_model=None,
 ) -> list[ScenarioRecord]:
-    """Execute a scenario on the timeline-charging simulator backend."""
-    engine = engine or scenario.default_engine()
+    """Execute a scenario on the timeline-charging simulator backend.
+
+    ``strategy=`` / ``cost_model=`` are the normalized keyword overrides
+    (see :func:`resolve_engine`); passing ``engine`` positionally keeps
+    working.
+    """
+    engine = resolve_engine(scenario, engine, strategy=strategy,
+                            cost_model=cost_model)
     cluster = _SimCluster(scenario=scenario, engine=engine)
     records: list[ScenarioRecord] = []
     for ev in sorted(scenario.events, key=lambda e: e.step):
@@ -1090,6 +1126,9 @@ def _vector_plan(scenario: Scenario,
 def run_scenario_vectorized(
     scenario: Scenario, engine: Optional[ReconfigEngine] = None,
     cache: Optional[TransitionCache] = None,
+    *,
+    strategy=None,
+    cost_model=None,
 ) -> list[ScenarioRecord]:
     """Execute a scenario through the vectorized transition engine.
 
@@ -1104,8 +1143,11 @@ def run_scenario_vectorized(
 
     Pass a shared :class:`TransitionCache` to amortize charging across
     runs that share a cost context (e.g. Monte-Carlo seed replicas).
+    ``strategy=`` / ``cost_model=`` are the normalized keyword overrides
+    (see :func:`resolve_engine`).
     """
-    engine = engine or scenario.default_engine()
+    engine = resolve_engine(scenario, engine, strategy=strategy,
+                            cost_model=cost_model)
     plan = _vector_plan(scenario, engine)
     if plan is None:
         return run_scenario_sim(scenario, engine)
@@ -1201,6 +1243,9 @@ def run_scenario_live(
     scenario: Scenario,
     pool=None,
     engine: Optional[ReconfigEngine] = None,
+    *,
+    strategy=None,
+    cost_model=None,
 ) -> list[ScenarioRecord]:
     """Execute a scenario against the live NodeGroup runtime.
 
@@ -1208,11 +1253,14 @@ def run_scenario_live(
     engine/backend path the :class:`ElasticTrainer` uses, without JAX
     compilation, so tests can assert sim/live timeline agreement cheaply.
     Heterogeneous traces run too: the pool is partitioned with the
-    scenario's uneven ``core_pool`` width vector.
+    scenario's uneven ``core_pool`` width vector.  ``strategy=`` /
+    ``cost_model=`` are the normalized keyword overrides (see
+    :func:`resolve_engine`).
     """
     from repro.elastic.runtime import ElasticRuntime
 
-    engine = engine or scenario.default_engine()
+    engine = resolve_engine(scenario, engine, strategy=strategy,
+                            cost_model=cost_model)
     if pool is None:
         pool = scenario_pool(scenario)
     else:

@@ -5,11 +5,11 @@ import pytest
 
 from repro.core import Strategy
 from repro.elastic import DevicePool, ElasticRuntime
-from repro.elastic.rms import (
+from repro.elastic.rms import SimulatedRMS
+from repro.malleability.policies import (
     BackfillPolicy,
     ClusterState,
     JobSpec,
-    SimulatedRMS,
 )
 
 

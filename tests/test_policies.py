@@ -338,9 +338,18 @@ class TestPolicySweep:
         assert want <= got
 
     def test_makespan_decomposes_into_downtime_plus_queue(self):
+        from repro.core import get_strategy
+
         for r in policy_sweep():
-            assert r["makespan_s"] == pytest.approx(
-                r["downtime_s"] + r["queued_s"])
+            if get_strategy(r["strategy"]).two_phase:
+                # Two-phase strategies (dmr-async) hide the spawn legs
+                # under compute: wall keeps charging them, downtime
+                # doesn't, so the identity relaxes to an inequality.
+                assert (r["downtime_s"] + r["queued_s"]
+                        <= r["makespan_s"] + 1e-9)
+            else:
+                assert r["makespan_s"] == pytest.approx(
+                    r["downtime_s"] + r["queued_s"])
             assert r["events"] >= 2
 
 

@@ -288,7 +288,7 @@ class TestMonteCarloSweep:
         cluster = RmsClusterState(
             total_nodes=8, jobs=(JobSpec("train", min_nodes=1, max_nodes=8),))
         policy = ChurnPolicy(decisions=15)
-        sweep = monte_carlo_sweep(policy, 4, cluster)
+        sweep = monte_carlo_sweep(policy, 4, cluster=cluster)
         for s in (0, 3):
             trace = replace(policy, seed=s).generate(cluster)
             recs = run_scenario_sim(trace.scenario("train", name=f"mc-{s}"))
@@ -307,7 +307,8 @@ class TestMonteCarloSweep:
             total_nodes=10_000,
             jobs=(JobSpec("train", min_nodes=1, max_nodes=10_000),))
         t0 = time.perf_counter()
-        sweep = monte_carlo_sweep(ChurnPolicy(decisions=25), 1000, cluster)
+        sweep = monte_carlo_sweep(
+            ChurnPolicy(decisions=25), 1000, cluster=cluster)
         wall = time.perf_counter() - t0
         assert sweep.reconfigs == 25_000
         assert len(sweep.makespans) == 1000
