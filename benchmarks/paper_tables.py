@@ -13,6 +13,7 @@ Scenarios  — the declarative workload traces, timeline-charged
 Redistribution — stage-3 bytes-moved sweep over model configs
 Overlap    — partial-overlap (fraction x contention) downtime sweep
 Policy sweep — strategy x RMS-policy trace makespan/downtime envelopes
+Faults     — checkpoint/restart traces (ckpt bytes, restored bytes)
 Serve      — strategy x traffic-trace latency percentiles (elastic decode)
 Scheduler  — closed-loop knob search vs the rigid-cluster baseline,
              winning knobs replayed under every spawning strategy
@@ -29,6 +30,7 @@ import time
 # Everything below comes off the stable surface (docs/api.md) — the
 # benchmark suite is user code and programs against repro.api only.
 from repro.api import (
+    FAULT_SCENARIO_NAMES,
     KNOB_GRID,
     MN5,
     NASP,
@@ -364,6 +366,44 @@ def policy_sweep(traces: tuple[str, ...] = POLICY_SCENARIO_NAMES) -> list[dict]:
                 "makespan_s": round(sum(r.est_wall_s for r in recs), 6),
                 "downtime_s": round(sum(r.downtime_s for r in recs), 6),
                 "queued_s": round(sum(r.queued_s for r in recs), 6),
+                "bytes_moved": sum(r.bytes_moved for r in recs),
+            })
+    return rows
+
+
+# ---------------------------------------------- fault-tolerance traces --
+def table_faults(traces: tuple[str, ...] = FAULT_SCENARIO_NAMES) -> list[dict]:
+    """Checkpoint/restart traces under EVERY registered spawning strategy.
+
+    The three fault scenarios exercise the full-stop path next to the
+    malleable one: ``ckpt-cycle`` prices periodic CHECKPOINT snapshots,
+    ``node-fail-wave`` charges the doomed ranks' restored shards on every
+    failure wave (RESTORE rides the recovery shrink), and
+    ``restart-vs-shrink`` puts a rigid SS restart and a malleable TS
+    shrink of the same allocation drop side by side.  The byte columns
+    are the story: checkpointed/restored bytes are strategy-independent
+    (the snapshot is priced by the checkpoint link, not the spawn
+    mechanism), while the makespan spread across strategies is exactly
+    the respawn cost the restart path re-pays and the shrink path never
+    does.
+    """
+    rows = []
+    for name in traces:
+        sc = get_scenario(name)
+        for spec in registered_strategies():
+            if spec.homogeneous_only and sc.heterogeneous:
+                continue
+            recs = run_scenario_sim(
+                sc, engine=sc.default_engine(strategy=spec.key))
+            rows.append({
+                "scenario": name,
+                "strategy": spec.key,
+                "events": len(recs),
+                "makespan_s": round(sum(r.est_wall_s for r in recs), 6),
+                "downtime_s": round(sum(r.downtime_s for r in recs), 6),
+                "restored_s": round(sum(r.restored_s for r in recs), 6),
+                "bytes_checkpointed": sum(r.bytes_checkpointed for r in recs),
+                "bytes_restored": sum(r.bytes_restored for r in recs),
                 "bytes_moved": sum(r.bytes_moved for r in recs),
             })
     return rows

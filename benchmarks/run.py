@@ -58,6 +58,7 @@ from paper_tables import (  # noqa: E402
     policy_sweep,
     scenario_traces,
     table2_trace,
+    table_faults,
     table_hetero_strategies,
     table_redistribution,
     table_scale,
@@ -157,6 +158,14 @@ def collect_rows(smoke: bool = False, timings: dict | None = None) -> list[dict]
             r["makespan_s"] * 1e6,
             f"downtime_us={r['downtime_s']*1e6:.0f};"
             f"queued_us={r['queued_s']*1e6:.0f};events={r['events']};"
+            f"bytes={r['bytes_moved']}")
+
+    for r in timed("faults", table_faults):
+        add(f"faults/{r['scenario']}/{r['strategy']}",
+            r["makespan_s"] * 1e6,
+            f"downtime_us={r['downtime_s']*1e6:.0f};"
+            f"restored_us={r['restored_s']*1e6:.0f};events={r['events']};"
+            f"ckpt={r['bytes_checkpointed']};restored={r['bytes_restored']};"
             f"bytes={r['bytes_moved']}")
 
     for r in timed("serve", table_serve):

@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs health checks (the CI `docs` job).
 
-Two checks, selectable by flag (default: both):
+Three checks, selectable by flag (default: all):
 
 * ``--links``  — every intra-repo markdown link (``[text](path)`` with a
   relative, non-http target) in ``*.md`` files must resolve to an
@@ -10,6 +10,10 @@ Two checks, selectable by flag (default: both):
   ``python -m pydoc``-importable (imported via ``pydoc.safeimport``, the
   machinery behind pydoc), so the documented API surface can always be
   rendered.
+* ``--registry`` — docs–registry completeness: every registered
+  scenario name must appear in ``docs/scenarios.md`` and every
+  registered strategy key in ``docs/strategies.md``, so registering
+  something without documenting it fails CI.
 
 Exits non-zero listing every failure.
 """
@@ -72,18 +76,42 @@ def check_imports() -> list[str]:
     return errors
 
 
+def check_registry() -> list[str]:
+    """Registered scenarios/strategies must appear in their guide."""
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core import registered_strategies
+    from repro.malleability import registered_scenarios
+
+    errors = []
+    for doc, names in (
+        ("docs/scenarios.md",
+         [sc.name for sc in registered_scenarios()]),
+        ("docs/strategies.md",
+         [spec.key for spec in registered_strategies()]),
+    ):
+        text = (REPO / doc).read_text()
+        for name in names:
+            if f"`{name}`" not in text:
+                errors.append(f"{doc}: registered name `{name}` "
+                              "is not documented")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--links", action="store_true")
     ap.add_argument("--imports", action="store_true")
+    ap.add_argument("--registry", action="store_true")
     args = ap.parse_args()
-    run_all = not (args.links or args.imports)
+    run_all = not (args.links or args.imports or args.registry)
 
     errors = []
     if args.links or run_all:
         errors += check_links()
     if args.imports or run_all:
         errors += check_imports()
+    if args.registry or run_all:
+        errors += check_registry()
     for e in errors:
         print(e, file=sys.stderr)
     if not errors:
@@ -92,6 +120,8 @@ def main() -> int:
             checked.append(f"{len(iter_markdown())} markdown files")
         if args.imports or run_all:
             checked.append(f"{len(repro_modules())} modules")
+        if args.registry or run_all:
+            checked.append("registry coverage")
         print("docs OK:", ", ".join(checked))
     return 1 if errors else 0
 

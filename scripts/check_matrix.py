@@ -34,6 +34,12 @@ import traceback
 REQUIRED_STRATEGIES = ("sequential", "per_node", "single", "hypercube",
                        "diffusive", "topo", "dmr-async")
 
+# Scenarios the registry must always carry, for the same reason.  The
+# fault family (checkpoint/restart) is listed explicitly because the
+# full-stop path has no other always-on sweep: losing its registration
+# would drop CHECKPOINT/RESTORE charging from the matrix silently.
+REQUIRED_SCENARIOS = ("ckpt-cycle", "node-fail-wave", "restart-vs-shrink")
+
 
 def run_matrix(verbose: bool = False) -> int:
     from repro.core import registered_strategies
@@ -47,6 +53,11 @@ def run_matrix(verbose: bool = False) -> int:
         if key not in registered:
             failures.append(
                 f"MISSING  required strategy {key!r} is not registered")
+    registered_names = {sc.name for sc in scenarios}
+    for name in REQUIRED_SCENARIOS:
+        if name not in registered_names:
+            failures.append(
+                f"MISSING  required scenario {name!r} is not registered")
     exercised_strategy: dict[str, int] = {s.key: 0 for s in strategies}
     exercised_scenario: dict[str, int] = {sc.name: 0 for sc in scenarios}
     pairs = skipped = 0

@@ -29,6 +29,7 @@ from repro.core import (
     DISTANCE_CLASSES,
     DMR_KEY,
     TOPO_KEY,
+    CheckpointSpec,
     Method,
     ReconfigEngine,
     ReconfigOutcome,
@@ -41,6 +42,7 @@ from repro.core import (
     Timeline,
     TimelineEvent,
     Topology,
+    checkpoint_timeline,
     get_strategy,
     plan_diffusive,
     plan_dmr,
@@ -49,6 +51,7 @@ from repro.core import (
     plan_topo,
     register_strategy,
     registered_strategies,
+    restart_timeline,
     running_vector,
     shrink_timeline,
     strategy_key,
@@ -56,6 +59,7 @@ from repro.core import (
 
 # ---- cost models, scenarios, executors (device-free) -----------------------
 from repro.malleability import (
+    FAULT_SCENARIO_NAMES,
     MN5,
     NASP,
     CostModel,
@@ -70,6 +74,7 @@ from repro.malleability import (
     param_bytes_for_arch,
     record_parity_key,
     register_scenario,
+    registered_fault_scenarios,
     registered_scenarios,
     replicated_bytes_model,
     replicated_link_model,
@@ -89,6 +94,7 @@ from repro.malleability import (
     SERVE_TRAFFIC,
     ArbitratedJob,
     BackfillPolicy,
+    CheckpointIntervalPolicy,
     ChurnPolicy,
     JobSpec,
     MonteCarloSweep,
@@ -148,6 +154,8 @@ from repro.serving import (
 # `import repro.api` works (fast) anywhere the device-free simulator
 # runs; touching one of these names imports jax.
 _LAZY_EXPORTS: dict[str, str] = {
+    # checkpoint store (imports jax for device_get / restore resharding)
+    "CheckpointManager": "repro.checkpoint",
     # elastic runtime
     "DevicePool": "repro.elastic",
     "ElasticRuntime": "repro.elastic",
@@ -196,6 +204,7 @@ __all__ = [
     "DISTANCE_CLASSES",
     "DMR_KEY",
     "TOPO_KEY",
+    "CheckpointSpec",
     "Method",
     "ReconfigEngine",
     "ReconfigOutcome",
@@ -208,6 +217,7 @@ __all__ = [
     "Timeline",
     "TimelineEvent",
     "Topology",
+    "checkpoint_timeline",
     "get_strategy",
     "plan_diffusive",
     "plan_dmr",
@@ -216,10 +226,12 @@ __all__ = [
     "plan_topo",
     "register_strategy",
     "registered_strategies",
+    "restart_timeline",
     "running_vector",
     "shrink_timeline",
     "strategy_key",
     # cost models, scenarios, executors
+    "FAULT_SCENARIO_NAMES",
     "MN5",
     "NASP",
     "CostModel",
@@ -234,6 +246,7 @@ __all__ = [
     "param_bytes_for_arch",
     "record_parity_key",
     "register_scenario",
+    "registered_fault_scenarios",
     "registered_scenarios",
     "replicated_bytes_model",
     "replicated_link_model",
@@ -251,6 +264,7 @@ __all__ = [
     "SERVE_TRAFFIC",
     "ArbitratedJob",
     "BackfillPolicy",
+    "CheckpointIntervalPolicy",
     "ChurnPolicy",
     "ClusterState",
     "JobSpec",

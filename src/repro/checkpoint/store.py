@@ -30,20 +30,35 @@ def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
 
 
 def save_tree(tree: Any, directory: str, step: int) -> str:
-    """Synchronous save; returns the checkpoint path."""
+    """Synchronous save; returns the checkpoint path.
+
+    Crash-safe: leaves stream into a ``.tmp`` staging directory that is
+    published over ``path`` only once every leaf and the manifest have
+    landed.  A failed leaf write removes the staging directory instead
+    of orphaning it (``latest_step`` ignores ``.tmp`` names, but the
+    garbage would accumulate), and re-saving an existing step replaces
+    the old snapshot whole — ``os.replace`` cannot clobber a non-empty
+    directory on its own.
+    """
     path = os.path.join(directory, f"step_{step:09d}")
     tmp = path + ".tmp"
     os.makedirs(tmp, exist_ok=True)
-    manifest = {"step": step, "leaves": []}
-    for i, (key, leaf) in enumerate(_leaf_paths(tree)):
-        arr = np.asarray(jax.device_get(leaf))
-        fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
-        manifest["leaves"].append({"key": key, "file": fname, "dtype": str(arr.dtype),
-                                   "shape": list(arr.shape)})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    os.replace(tmp, path)  # atomic publish
+    try:
+        manifest = {"step": step, "leaves": []}
+        for i, (key, leaf) in enumerate(_leaf_paths(tree)):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append({"key": key, "file": fname, "dtype": str(arr.dtype),
+                                       "shape": list(arr.shape)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     return path
 
 

@@ -22,6 +22,7 @@ from .connect import (
 )
 from .diffusive import plan_diffusive
 from .engine import (
+    CheckpointSpec,
     ExecutionBackend,
     ReconfigEngine,
     ReconfigOutcome,
@@ -32,10 +33,12 @@ from .engine import (
     Timeline,
     TimelineEvent,
     as_core_vector,
+    checkpoint_timeline,
     expansion_timeline,
     get_strategy,
     register_strategy,
     registered_strategies,
+    restart_timeline,
     running_vector,
     shrink_timeline,
     strategy_key,
@@ -59,9 +62,12 @@ from .vectorized import (
     ChargeStats,
     EventArrays,
     charge_stats,
+    checkpoint_charge,
     hypercube_expand_charges,
     queue_charge,
     redistribution_charge,
+    restart_charges,
+    restore_charge,
     ts_shrink_charges,
 )
 # Importing .topo / .dmr registers the "topo" and "dmr-async" strategies
@@ -90,6 +96,7 @@ __all__ = [
     "TOPO_KEY",
     "Charge",
     "ChargeStats",
+    "CheckpointSpec",
     "ClusterState",
     "Topology",
     "ConnectRound",
@@ -123,6 +130,8 @@ __all__ = [
     "binary_connection_schedule",
     "build_sync_graph",
     "charge_stats",
+    "checkpoint_charge",
+    "checkpoint_timeline",
     "expansion_timeline",
     "extend_graph_with_connection",
     "get_strategy",
@@ -146,6 +155,9 @@ __all__ = [
     "registered_strategies",
     "reorder_key",
     "required_ports",
+    "restart_charges",
+    "restart_timeline",
+    "restore_charge",
     "running_vector",
     "shrink_timeline",
     "simulate_merges",

@@ -4,8 +4,9 @@ The paper describes ONE cooperative pipeline (spawn rounds → tree sync →
 binary connect → reorder → final intercomm, plus TS/ZS/SS shrinks); this
 module is its single implementation point:
 
-* a **strategy registry** — the five spawning strategies (SEQUENTIAL,
-  SEQUENTIAL_PER_NODE, SINGLE, PARALLEL_HYPERCUBE, PARALLEL_DIFFUSIVE)
+* a **strategy registry** — the built-in spawning strategies (SEQUENTIAL,
+  SEQUENTIAL_PER_NODE, SINGLE, PARALLEL_HYPERCUBE, PARALLEL_DIFFUSIVE,
+  plus the topology-aware ``topo`` and two-phase ``dmr-async`` specs)
   register themselves here, and third-party strategies can too, so the
   simulator, the elastic runtime, the trainer, and the benchmarks all
   dispatch through one table instead of hand-stitching strategy×method
@@ -25,7 +26,9 @@ module is its single implementation point:
 Stages map onto the paper: SPAWN (§4.1/§4.2), SYNC (§4.3), CONNECT
 (§4.4), REORDER (§4.5 Eq. 9), FINAL (the sources↔children intercomm),
 REDISTRIBUTION (stage 3), TERMINATE/ZOMBIFY/RESPAWN/TEARDOWN (§4.6-4.7
-TS/ZS/SS shrink mechanisms).
+TS/ZS/SS shrink mechanisms), and CHECKPOINT/RESTORE (the full-stop
+checkpoint/restart baseline malleability is measured against, plus
+failure recovery from the last checkpoint).
 """
 from __future__ import annotations
 
@@ -66,6 +69,10 @@ class Stage(enum.Enum):
     ZOMBIFY = "zombify"          # ZS: ranks sleep, nodes stay pinned
     RESPAWN = "respawn"          # SS: the replacement world comes up
     TEARDOWN = "teardown"        # SS: old world finalize + dealloc
+    # Fault-tolerance stages (appended last: the vectorized layer's int8
+    # stage codes follow declaration order, so earlier codes are stable).
+    CHECKPOINT = "checkpoint"    # snapshot streamed to the checkpoint store
+    RESTORE = "restore"          # snapshot read back from the store
 
 
 @dataclass(frozen=True)
@@ -85,6 +92,10 @@ class TimelineEvent:
     ``bytes_cross_pod`` the slice of that portion additionally crossing
     pods (0 unless the topology defines pods), so
     :attr:`bytes_by_class` recovers the full distance-class split.
+    ``bytes_checkpointed`` is the snapshot volume streamed to the
+    checkpoint store (non-zero only on CHECKPOINT events); RESTORE
+    events carry the bytes read back in ``bytes_moved``/``bytes_stayed``
+    (store traffic, excluded from the timeline's stage-3 byte sums).
     """
 
     stage: Stage
@@ -96,6 +107,7 @@ class TimelineEvent:
     bytes_stayed: int = 0
     bytes_cross_rack: int = 0
     bytes_cross_pod: int = 0
+    bytes_checkpointed: int = 0
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
@@ -149,23 +161,48 @@ class Timeline:
 
     @property
     def bytes_moved(self) -> int:
-        """Total stage-3 cross-link bytes charged across all events."""
-        return sum(e.bytes_moved for e in self.events)
+        """Total stage-3 cross-link bytes charged across all events.
+
+        RESTORE events are excluded from all four stage-3 sums: their
+        bytes come off the checkpoint store, not a peer rank, and are
+        reported separately as :attr:`bytes_restored`.
+        """
+        return sum(e.bytes_moved for e in self.events
+                   if e.stage is not Stage.RESTORE)
 
     @property
     def bytes_stayed(self) -> int:
         """Total stage-3 local-link bytes charged across all events."""
-        return sum(e.bytes_stayed for e in self.events)
+        return sum(e.bytes_stayed for e in self.events
+                   if e.stage is not Stage.RESTORE)
 
     @property
     def bytes_cross_rack(self) -> int:
         """Total stage-3 rack-crossing bytes charged across all events."""
-        return sum(e.bytes_cross_rack for e in self.events)
+        return sum(e.bytes_cross_rack for e in self.events
+                   if e.stage is not Stage.RESTORE)
 
     @property
     def bytes_cross_pod(self) -> int:
         """Total stage-3 pod-crossing bytes charged across all events."""
-        return sum(e.bytes_cross_pod for e in self.events)
+        return sum(e.bytes_cross_pod for e in self.events
+                   if e.stage is not Stage.RESTORE)
+
+    @property
+    def bytes_checkpointed(self) -> int:
+        """Total snapshot bytes streamed to the checkpoint store."""
+        return sum(e.bytes_checkpointed for e in self.events)
+
+    @property
+    def bytes_restored(self) -> int:
+        """Total bytes read back from the store (RESTORE events)."""
+        return sum(e.bytes_stayed + e.bytes_moved for e in self.events
+                   if e.stage is Stage.RESTORE)
+
+    @property
+    def restored_s(self) -> float:
+        """Seconds spent reading state back from the checkpoint store."""
+        return self.span(Stage.RESTORE)
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
@@ -217,6 +254,7 @@ class Timeline:
                 "bytes_stayed": e.bytes_stayed,
                 "bytes_cross_rack": e.bytes_cross_rack,
                 "bytes_cross_pod": e.bytes_cross_pod,
+                "bytes_checkpointed": e.bytes_checkpointed,
             }
             for e in self.events
         ]
@@ -233,13 +271,14 @@ class _TimelineBuilder:
     def add(self, stage: Stage, duration: float, label: str = "",
             overlap_fraction: float = 0.0, bytes_moved: int = 0,
             bytes_stayed: int = 0, bytes_cross_rack: int = 0,
-            bytes_cross_pod: int = 0) -> None:
+            bytes_cross_pod: int = 0, bytes_checkpointed: int = 0) -> None:
         if duration <= 0.0:
             return
         self._events.append(
             TimelineEvent(stage, self._t, self._t + duration, label,
                           overlap_fraction, bytes_moved, bytes_stayed,
-                          bytes_cross_rack, bytes_cross_pod)
+                          bytes_cross_rack, bytes_cross_pod,
+                          bytes_checkpointed)
         )
         self._t += duration
 
@@ -247,7 +286,7 @@ class _TimelineBuilder:
         for e in events:
             self.add(e.stage, e.duration, e.label, e.overlap_fraction,
                      e.bytes_moved, e.bytes_stayed, e.bytes_cross_rack,
-                     e.bytes_cross_pod)
+                     e.bytes_cross_pod, e.bytes_checkpointed)
 
     def build(self) -> Timeline:
         return Timeline(events=tuple(self._events), contention=self._contention)
@@ -516,6 +555,23 @@ class RedistributionSpec:
 
 
 @dataclass(frozen=True)
+class CheckpointSpec:
+    """Checkpoint-store traffic of one reconfiguration.
+
+    ``bytes_checkpointed`` is the snapshot streamed TO the store
+    (charged as a CHECKPOINT event, hidden under compute by
+    ``cm.ckpt_overlap`` when the job runs ASYNC); ``bytes_restored`` is
+    read BACK from it (a RESTORE event — always on the critical path:
+    the app is down until its state is back).  Restore bytes are charged
+    on the cross link without a distance-class split: the store is a
+    shared filesystem outside the rack tree.
+    """
+
+    bytes_checkpointed: int = 0
+    bytes_restored: int = 0
+
+
+@dataclass(frozen=True)
 class ReconfigPlan:
     """Full output of the process-management stage.
 
@@ -524,7 +580,8 @@ class ReconfigPlan:
     be executed by any backend without consulting cluster state again.
     """
 
-    kind: str                      # "expand" | "shrink" | "noop"
+    kind: str                      # "expand" | "shrink" | "checkpoint"
+    #                              # | "restart" | "noop"
     method: Method
     strategy: StrategyLike
     asynchronous: bool
@@ -543,6 +600,9 @@ class ReconfigPlan:
     # greedily, which is what makes placement a priced, first-class
     # decision; empty means "no explicit placement" (greedy fallback).
     node_ids: tuple[int, ...] = ()
+    # Checkpoint-store traffic: set on "checkpoint"/"restart" plans and
+    # on failure shrinks that recover from the last checkpoint.
+    checkpoint: Optional[CheckpointSpec] = None
 
 
 @dataclass(frozen=True)
@@ -591,6 +651,21 @@ class ReconfigOutcome:
     def queued_s(self) -> float:
         """RMS arbitration wait charged on the timeline (QUEUE spans)."""
         return self.timeline.queued_s
+
+    @property
+    def bytes_checkpointed(self) -> int:
+        """Snapshot bytes streamed to the checkpoint store."""
+        return self.timeline.bytes_checkpointed
+
+    @property
+    def bytes_restored(self) -> int:
+        """Bytes read back from the store (RESTORE events)."""
+        return self.timeline.bytes_restored
+
+    @property
+    def restored_s(self) -> float:
+        """Seconds spent in RESTORE events."""
+        return self.timeline.restored_s
 
 
 class ExecutionBackend(Protocol):
@@ -813,6 +888,34 @@ def _redistribution_event(tb: _TimelineBuilder, cm: "CostModel",
            bytes_cross_rack=xrack, bytes_cross_pod=xpod)
 
 
+def _checkpoint_event(tb: _TimelineBuilder, cm: "CostModel",
+                      snapshot_bytes: int) -> None:
+    """Append the store-write event (no bytes, no event)."""
+    if snapshot_bytes <= 0:
+        return
+    tb.add(Stage.CHECKPOINT, cm.checkpoint(snapshot_bytes),
+           label=f"checkpoint {snapshot_bytes} B",
+           overlap_fraction=cm.ckpt_overlap,
+           bytes_checkpointed=snapshot_bytes)
+
+
+def _restore_event(tb: _TimelineBuilder, cm: "CostModel",
+                   restore_bytes: int) -> None:
+    """Append the store-read event (no bytes, no event).
+
+    The bytes ride the event's ``bytes_moved`` slot but the store sits
+    outside the rack tree, so no distance-class split is attempted and
+    the Timeline reports them as ``bytes_restored``, not stage-3 moved
+    bytes.  Restores never overlap compute: the app is down until its
+    state is back.
+    """
+    if restore_bytes <= 0:
+        return
+    tb.add(Stage.RESTORE, cm.restore(restore_bytes),
+           label=f"restore {restore_bytes} B from checkpoint",
+           bytes_moved=restore_bytes)
+
+
 def shrink_timeline(
     kind: ShrinkKind,
     cm: "CostModel",
@@ -826,6 +929,7 @@ def shrink_timeline(
     bytes_stayed: int = 0,
     bytes_cross_rack: int = 0,
     bytes_cross_pod: int = 0,
+    restore_bytes: int = 0,
 ) -> Timeline:
     """Charge one shrink by mechanism (§4.6-4.7).
 
@@ -841,6 +945,10 @@ def shrink_timeline(
     ``queue_delay_s`` > 0 prepends a QUEUE event (RMS arbitration wait,
     e.g. a preemption arriving while another reconfiguration is in
     flight) that counts toward ``total`` but never toward downtime.
+    ``restore_bytes`` > 0 appends a trailing RESTORE event: the shrink
+    is a node *failure* and the survivors re-read the lost shards from
+    the last checkpoint instead of receiving them from the (dead) doomed
+    ranks.
     """
     tb = _TimelineBuilder(contention=cm.overlap_contention)
     if queue_delay_s > 0.0:
@@ -870,6 +978,63 @@ def shrink_timeline(
             )
     _redistribution_event(tb, cm, bytes_total, bytes_stayed, bytes_cross_rack,
                           bytes_cross_pod)
+    _restore_event(tb, cm, restore_bytes)
+    return tb.build()
+
+
+def checkpoint_timeline(
+    cm: "CostModel", *, snapshot_bytes: int, queue_delay_s: float = 0.0
+) -> Timeline:
+    """Charge one standalone checkpoint: a single CHECKPOINT event.
+
+    The write streams to the store at ``cm.bw_ckpt`` after the
+    ``cm.alpha_ckpt`` setup; ``cm.ckpt_overlap`` of it hides under
+    compute when the job runs ASYNC (the snapshot is a host copy, the
+    write happens behind the step loop).
+    """
+    tb = _TimelineBuilder(contention=cm.overlap_contention)
+    if queue_delay_s > 0.0:
+        tb.add(Stage.QUEUE, queue_delay_s, label="queued behind in-flight reconfig")
+    _checkpoint_event(tb, cm, snapshot_bytes)
+    return tb.build()
+
+
+def restart_timeline(
+    cm: "CostModel",
+    *,
+    ns: int,
+    nt: int,
+    nodes: int,
+    snapshot_bytes: int,
+    restore_bytes: int,
+    queue_delay_s: float = 0.0,
+) -> Timeline:
+    """Charge one full-stop checkpoint/restart — the rigid baseline.
+
+    The application checkpoints, stops entirely, is respawned at the
+    target size, and reads its state back:
+
+    * CHECKPOINT — ``snapshot_bytes`` streamed to the store (only this
+      leg can hide under compute, by ``cm.ckpt_overlap``);
+    * RESPAWN — one SS full-stop respawn charge
+      (:meth:`CostModel.ss_respawn`: spawn the NT-sized world over
+      ``nodes`` nodes + tear the NS-sized old world down + the world
+      split — teardown is *inside* the formula, so no separate TEARDOWN
+      event is charged);
+    * RESTORE — ``restore_bytes`` read back from the store onto the new
+      world, always on the critical path.
+
+    This is what malleable shrinks are measured against: same start and
+    end allocation, but the whole state makes a store round-trip and
+    every rank restarts.
+    """
+    tb = _TimelineBuilder(contention=cm.overlap_contention)
+    if queue_delay_s > 0.0:
+        tb.add(Stage.QUEUE, queue_delay_s, label="queued behind in-flight reconfig")
+    _checkpoint_event(tb, cm, snapshot_bytes)
+    tb.add(Stage.RESPAWN, cm.ss_respawn(nt, max(1, nodes), ns),
+           label=f"full-stop respawn {ns} -> {nt} ranks")
+    _restore_event(tb, cm, restore_bytes)
     return tb.build()
 
 
@@ -908,6 +1073,13 @@ class ReconfigEngine:
     # fsdp_bytes_model / replicated_link_model).  When None the scalar
     # ``bytes_per_rank`` fallback is charged instead.
     bytes_model: Optional[Callable[[int, int], Union[int, dict]]] = None
+    # Fault tolerance: when True, failure shrinks (``plan_shrink(...,
+    # failed=True)``) append a RESTORE event — the survivors re-read the
+    # lost shards from the last checkpoint (the dead ranks cannot ship
+    # them) — priced through :meth:`restore_bytes_on_fail`.  False keeps
+    # failures priced exactly like voluntary shrinks (the historical
+    # behaviour, bit for bit).
+    restore_on_fail: bool = False
 
     def __post_init__(self) -> None:
         if self.cost_model is None:
@@ -1000,6 +1172,32 @@ class ReconfigEngine:
     def redistribution_bytes(self, ns: int, nt: int) -> int:
         """Stage-3 cross-link (moved) bytes for an ``ns -> nt`` resize."""
         return self.redistribution_stats(ns, nt)[1]
+
+    def checkpoint_bytes(self, ns: int) -> int:
+        """Snapshot size of the job's full state at ``ns`` ranks.
+
+        A bytes model exposing a ``total_bytes`` attribute (the analytic
+        models in :mod:`repro.malleability.cost_model` and
+        :class:`repro.elastic.reshard.PytreeBytesModel` all do) is asked
+        for the pytree total; otherwise the scalar fallback charges
+        ``bytes_per_rank`` per rank — every rank snapshots its share.
+        """
+        if self.bytes_model is not None:
+            total_fn = getattr(self.bytes_model, "total_bytes", None)
+            if callable(total_fn):
+                return max(0, int(total_fn(ns)))
+        return max(0, self.bytes_per_rank * max(0, ns))
+
+    def restore_bytes_on_fail(self, ns: int, nt: int) -> int:
+        """Bytes re-read from the last checkpoint after losing ranks.
+
+        Survivors keep their own shards; only the doomed ranks' share of
+        the snapshot — ``(ns - nt) / ns`` of it, exact integer floor —
+        must come back from the store.
+        """
+        if ns <= 0 or nt >= ns:
+            return 0
+        return self.checkpoint_bytes(ns) * (ns - nt) // ns
 
     def _expand_cross_bytes(
         self, spawn: SpawnPlan, node_ids: Sequence[int], moved: int
@@ -1161,6 +1359,7 @@ class ReconfigEngine:
         release_cores: Optional[dict] = None,
         *,
         queue_delay_s: float = 0.0,
+        failed: bool = False,
     ) -> ReconfigPlan:
         """Plan a shrink against live cluster bookkeeping.
 
@@ -1170,6 +1369,12 @@ class ReconfigEngine:
             release_cores: core counts to release instead, or None.
             queue_delay_s: RMS arbitration wait charged as a leading
                 QUEUE timeline event (see :func:`shrink_timeline`).
+            failed: the released nodes died rather than being returned
+                voluntarily.  With :attr:`restore_on_fail` set, the plan
+                carries a :class:`CheckpointSpec` whose
+                ``bytes_restored`` (:meth:`restore_bytes_on_fail`) is
+                charged as a trailing RESTORE event — recovery from the
+                last checkpoint.
         Returns:
             A :class:`ReconfigPlan` with the shrink actions, doomed
             world sizes (captured so the timeline can be charged later
@@ -1189,6 +1394,10 @@ class ReconfigEngine:
         nt = max(0, ns - sum(doomed_sizes) - zombified)
         stayed, moved = self.redistribution_stats(ns, nt)
         xrack, xpod = self._shrink_cross_bytes(state, shrink, moved)
+        ckpt = None
+        if failed and self.restore_on_fail:
+            ckpt = CheckpointSpec(
+                bytes_restored=self.restore_bytes_on_fail(ns, nt))
         return ReconfigPlan(
             kind="shrink",
             method=self.method,
@@ -1209,6 +1418,57 @@ class ReconfigEngine:
                 bytes_cross_pod=xpod,
             ),
             queue_delay_s=max(0.0, queue_delay_s),
+            checkpoint=ckpt,
+        )
+
+    def plan_checkpoint(
+        self, ns: int, *, queue_delay_s: float = 0.0
+    ) -> ReconfigPlan:
+        """Plan a standalone checkpoint of the full state at ``ns`` ranks.
+
+        No allocation change (``nt == ns``); the timeline is a single
+        CHECKPOINT event sized by :meth:`checkpoint_bytes`.
+        """
+        return ReconfigPlan(
+            kind="checkpoint",
+            method=self.method,
+            strategy=self.strategy,
+            asynchronous=self.asynchronous,
+            ns=ns,
+            nt=ns,
+            checkpoint=CheckpointSpec(
+                bytes_checkpointed=self.checkpoint_bytes(ns)),
+            queue_delay_s=max(0.0, queue_delay_s),
+        )
+
+    def plan_restart(
+        self,
+        ns: int,
+        nt: int,
+        *,
+        queue_delay_s: float = 0.0,
+        node_ids: Sequence[int] = (),
+    ) -> ReconfigPlan:
+        """Plan a full-stop checkpoint/restart to ``nt`` ranks.
+
+        The rigid baseline: checkpoint everything, stop, respawn the
+        NT-sized world (SS), read everything back.  ``node_ids`` is the
+        target placement (the new world's nodes, in acquisition order);
+        the respawn call fans out over ``len(node_ids)`` nodes (``nt``
+        single-rank nodes when empty).
+        """
+        total = self.checkpoint_bytes(ns)
+        return ReconfigPlan(
+            kind="restart",
+            method=self.method,
+            strategy=self.strategy,
+            asynchronous=self.asynchronous,
+            ns=ns,
+            nt=nt,
+            checkpoint=CheckpointSpec(
+                bytes_checkpointed=total, bytes_restored=total),
+            queue_delay_s=max(0.0, queue_delay_s),
+            node_ids=tuple(node_ids),
         )
 
     # ------------------------------------------------------------- timeline --
@@ -1261,6 +1521,26 @@ class ReconfigEngine:
                 bytes_stayed=bytes_stayed,
                 bytes_cross_rack=bytes_cross_rack,
                 bytes_cross_pod=bytes_cross_pod,
+                restore_bytes=(
+                    plan.checkpoint.bytes_restored if plan.checkpoint else 0
+                ),
+            )
+        if plan.kind == "checkpoint":
+            ck = plan.checkpoint or CheckpointSpec()
+            return checkpoint_timeline(
+                cm, snapshot_bytes=ck.bytes_checkpointed,
+                queue_delay_s=plan.queue_delay_s,
+            )
+        if plan.kind == "restart":
+            ck = plan.checkpoint or CheckpointSpec()
+            return restart_timeline(
+                cm,
+                ns=plan.ns,
+                nt=plan.nt,
+                nodes=len(plan.node_ids) or max(1, plan.nt),
+                snapshot_bytes=ck.bytes_checkpointed,
+                restore_bytes=ck.bytes_restored,
+                queue_delay_s=plan.queue_delay_s,
             )
         return Timeline()
 
@@ -1283,4 +1563,11 @@ class ReconfigEngine:
                 backend.apply_expand(plan)
             elif plan.kind == "shrink":
                 backend.apply_shrink(plan)
+            elif plan.kind == "restart":
+                # Optional on the protocol: only substrates that can do
+                # a full stop + respawn implement it ("checkpoint" plans
+                # change no allocation, so they never reach a backend).
+                apply_restart = getattr(backend, "apply_restart", None)
+                if apply_restart is not None:
+                    apply_restart(plan)
         return ReconfigOutcome(plan=plan, timeline=tl)

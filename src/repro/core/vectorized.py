@@ -48,10 +48,12 @@ from .topology import split_bytes_by_class
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.malleability.cost_model import CostModel
 
-# Stage <-> int8 code, in enum declaration order (stable across runs).
+# Stage <-> int8 code, in enum declaration order (stable across runs;
+# CHECKPOINT/RESTORE were appended last, so earlier codes are unchanged).
 STAGE_ORDER: tuple[Stage, ...] = tuple(Stage)
 STAGE_CODE: dict[Stage, int] = {s: i for i, s in enumerate(STAGE_ORDER)}
 _QUEUE_CODE = STAGE_CODE[Stage.QUEUE]
+_RESTORE_CODE = STAGE_CODE[Stage.RESTORE]
 
 # One row per charged event.  This is the on-disk/in-memory shape of a
 # timeline; labels ride separately (object-view garnish, never math).
@@ -65,6 +67,7 @@ EVENT_DTYPE = np.dtype(
         ("bytes_stayed", np.int64),
         ("bytes_cross_rack", np.int64),
         ("bytes_cross_pod", np.int64),
+        ("bytes_checkpointed", np.int64),
     ]
 )
 
@@ -94,6 +97,7 @@ class Charge:
     bytes_cross_rack: int = 0
     bytes_cross_pod: int = 0
     label: str = ""
+    bytes_checkpointed: int = 0
 
 
 @dataclass(frozen=True)
@@ -107,6 +111,9 @@ class ChargeStats:
     bytes_stayed: int
     bytes_cross_rack: int
     bytes_cross_pod: int
+    bytes_checkpointed: int = 0
+    bytes_restored: int = 0
+    restored_s: float = 0.0
 
 
 def charge_stats(
@@ -124,6 +131,8 @@ def charge_stats(
     queued = 0.0
     hidden_sum = 0.0
     moved = stayed = xrack = xpod = 0
+    checkpointed = restored = 0
+    restored_s = 0.0
     factor = max(0.0, 2.0 - max(contention, 1.0))
     for c in charges:
         if c.duration <= 0.0:
@@ -136,16 +145,24 @@ def charge_stats(
         else:
             f = min(max(c.overlap_fraction, 0.0), 1.0)
             hidden_sum += d_eff * min(f * factor, f)
-        moved += c.bytes_moved
-        stayed += c.bytes_stayed
-        xrack += c.bytes_cross_rack
-        xpod += c.bytes_cross_pod
+        if c.stage is Stage.RESTORE:
+            # Store traffic, not stage-3 movement (Timeline's exclusion).
+            restored += c.bytes_stayed + c.bytes_moved
+            restored_s += d_eff
+        else:
+            moved += c.bytes_moved
+            stayed += c.bytes_stayed
+            xrack += c.bytes_cross_rack
+            xpod += c.bytes_cross_pod
+        checkpointed += c.bytes_checkpointed
     downtime = t - queued
     if asynchronous:
         downtime = downtime - hidden_sum
     return ChargeStats(total=t, downtime=downtime, queued=queued,
                        bytes_moved=moved, bytes_stayed=stayed,
-                       bytes_cross_rack=xrack, bytes_cross_pod=xpod)
+                       bytes_cross_rack=xrack, bytes_cross_pod=xpod,
+                       bytes_checkpointed=checkpointed,
+                       bytes_restored=restored, restored_s=restored_s)
 
 
 @dataclass(frozen=True)
@@ -174,7 +191,8 @@ class EventArrays:
         for i, e in enumerate(tl.events):
             data[i] = (STAGE_CODE[e.stage], e.start, e.end,
                        e.overlap_fraction, e.bytes_moved, e.bytes_stayed,
-                       e.bytes_cross_rack, e.bytes_cross_pod)
+                       e.bytes_cross_rack, e.bytes_cross_pod,
+                       e.bytes_checkpointed)
         return cls(data=data, contention=tl.contention,
                    labels=tuple(e.label for e in tl.events))
 
@@ -202,6 +220,7 @@ class EventArrays:
         data["bytes_stayed"] = [c.bytes_stayed for c in kept]
         data["bytes_cross_rack"] = [c.bytes_cross_rack for c in kept]
         data["bytes_cross_pod"] = [c.bytes_cross_pod for c in kept]
+        data["bytes_checkpointed"] = [c.bytes_checkpointed for c in kept]
         return cls(data=data, contention=contention,
                    labels=tuple(c.label for c in kept))
 
@@ -236,20 +255,40 @@ class EventArrays:
         return self.span(Stage.QUEUE)
 
     @property
+    def _stage3_mask(self) -> np.ndarray:
+        """Events whose bytes are stage-3 movement (RESTORE excluded)."""
+        return self.data["stage"] != _RESTORE_CODE
+
+    @property
     def bytes_moved(self) -> int:
-        return int(self.data["bytes_moved"].sum())
+        return int(self.data["bytes_moved"][self._stage3_mask].sum())
 
     @property
     def bytes_stayed(self) -> int:
-        return int(self.data["bytes_stayed"].sum())
+        return int(self.data["bytes_stayed"][self._stage3_mask].sum())
 
     @property
     def bytes_cross_rack(self) -> int:
-        return int(self.data["bytes_cross_rack"].sum())
+        return int(self.data["bytes_cross_rack"][self._stage3_mask].sum())
 
     @property
     def bytes_cross_pod(self) -> int:
-        return int(self.data["bytes_cross_pod"].sum())
+        return int(self.data["bytes_cross_pod"][self._stage3_mask].sum())
+
+    @property
+    def bytes_checkpointed(self) -> int:
+        return int(self.data["bytes_checkpointed"].sum())
+
+    @property
+    def bytes_restored(self) -> int:
+        """Bytes read back from the store (RESTORE events only)."""
+        mask = self.data["stage"] == _RESTORE_CODE
+        return int(self.data["bytes_stayed"][mask].sum()
+                   + self.data["bytes_moved"][mask].sum())
+
+    @property
+    def restored_s(self) -> float:
+        return self.span(Stage.RESTORE)
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
@@ -283,6 +322,7 @@ class EventArrays:
                 bytes_stayed=int(row["bytes_stayed"]),
                 bytes_cross_rack=int(row["bytes_cross_rack"]),
                 bytes_cross_pod=int(row["bytes_cross_pod"]),
+                bytes_checkpointed=int(row["bytes_checkpointed"]),
             )
             for i, row in enumerate(self.data)
         )
@@ -416,3 +456,40 @@ def queue_charge(queue_delay_s: float) -> list[Charge]:
         return []
     return [Charge(Stage.QUEUE, queue_delay_s,
                    label="queued behind in-flight reconfig")]
+
+
+def checkpoint_charge(cm: "CostModel", snapshot_bytes: int) -> list[Charge]:
+    """Store-write charge with the engine's exact gating (may be empty)."""
+    if snapshot_bytes <= 0:
+        return []
+    return [Charge(Stage.CHECKPOINT, cm.checkpoint(snapshot_bytes),
+                   overlap_fraction=cm.ckpt_overlap,
+                   bytes_checkpointed=snapshot_bytes,
+                   label=f"checkpoint {snapshot_bytes} B")]
+
+
+def restore_charge(cm: "CostModel", restore_bytes: int) -> list[Charge]:
+    """Store-read charge; bytes count as restored, never stage-3 moved."""
+    if restore_bytes <= 0:
+        return []
+    return [Charge(Stage.RESTORE, cm.restore(restore_bytes),
+                   bytes_moved=restore_bytes,
+                   label=f"restore {restore_bytes} B from checkpoint")]
+
+
+def restart_charges(
+    cm: "CostModel", ns: int, nt: int, nodes: int,
+    snapshot_bytes: int, restore_bytes: int,
+) -> list[Charge]:
+    """Closed-form full-stop checkpoint/restart event sequence.
+
+    Emits exactly what :func:`repro.core.engine.restart_timeline`
+    charges: checkpoint, one SS respawn (teardown is inside
+    ``ss_respawn``), restore.
+    """
+    return [
+        *checkpoint_charge(cm, snapshot_bytes),
+        Charge(Stage.RESPAWN, cm.ss_respawn(nt, max(1, nodes), ns),
+               label=f"full-stop respawn {ns} -> {nt} ranks"),
+        *restore_charge(cm, restore_bytes),
+    ]

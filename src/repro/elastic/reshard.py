@@ -206,6 +206,20 @@ class PytreeBytesModel:
     def __call__(self, ns: int, nt: int) -> int:
         return self.stats(ns, nt)["bytes_moved"]
 
+    def total_bytes(self, ranks: int) -> int:
+        """Full parameter-pytree bytes — the checkpoint snapshot size.
+
+        Rank-count independent for a replicated-or-sharded pytree (the
+        union of shards IS the pytree); the engine's
+        :meth:`~repro.core.ReconfigEngine.checkpoint_bytes` calls this
+        to size CHECKPOINT/RESTORE events.
+        """
+        shapes, _ = self._abstract()
+        return int(sum(
+            int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+            for s in jax.tree.leaves(shapes)
+        ))
+
     def stats(self, ns: int, nt: int) -> dict:
         """Full per-link prediction ``{"bytes_total", "bytes_stayed",
         "bytes_moved"}`` for an ``ns -> nt`` resize — the engine consults

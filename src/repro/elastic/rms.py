@@ -99,6 +99,8 @@ class EventKind(enum.Enum):
     SHRINK = "shrink"        # RMS reclaims nodes
     FAIL = "fail"            # a node died: forced TS shrink + recovery
     STRAGGLER = "straggler"  # a node is slow: voluntarily TS-shrink it out
+    CHECKPOINT = "checkpoint"  # snapshot full state in place (no resize)
+    RESTART = "restart"      # rigid full stop: checkpoint, respawn, restore
     NOOP = "noop"
 
 
@@ -107,7 +109,7 @@ class Event:
     step: int
     kind: EventKind
     nodes: tuple[int, ...] = ()     # affected node ids (SHRINK/FAIL/STRAGGLER)
-    target_nodes: int = 0           # new total node count (GROW)
+    target_nodes: int = 0           # new total node count (GROW/RESTART)
     queue_delay_s: float = 0.0      # RMS arbitration wait (QUEUE stage)
 
 

@@ -51,7 +51,8 @@ class ReconfigRecord:
     """
 
     kind: str                  # expand | shrink | fail | straggler
-    mechanism: str             # strategy or TS/ZS/SS
+    #                          # | checkpoint | restart
+    mechanism: str             # strategy or TS/ZS/SS (ckpt for checkpoints)
     nodes_before: int
     nodes_after: int
     est_wall_s: float          # timeline total (simulated reconfiguration cost)
@@ -65,6 +66,9 @@ class ReconfigRecord:
     bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
     bytes_cross_rack: int = 0  # rack-crossing portion of bytes_moved
     bytes_cross_pod: int = 0   # pod-crossing slice of bytes_cross_rack
+    bytes_checkpointed: int = 0  # snapshot bytes streamed to the store
+    bytes_restored: int = 0    # bytes read back from the store (RESTORE)
+    restored_s: float = 0.0    # RESTORE span charged on the timeline
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
@@ -303,6 +307,9 @@ class ElasticRuntime:
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
             bytes_cross_pod=outcome.bytes_cross_pod,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+            bytes_restored=outcome.bytes_restored,
+            restored_s=outcome.restored_s,
         )
         self.history.append(rec)
         return rec
@@ -334,10 +341,16 @@ class ElasticRuntime:
 
     def shrink_nodes(self, victims: list[int], kind: str = "shrink", *,
                      queue_delay_s: float = 0.0) -> ReconfigRecord:
-        """TS-shrink specific node ids out of the job (see :meth:`shrink`)."""
+        """TS-shrink specific node ids out of the job (see :meth:`shrink`).
+
+        A ``kind="fail"`` shrink on an engine with ``restore_on_fail``
+        additionally charges recovery of the lost shards from the last
+        checkpoint (a trailing RESTORE event).
+        """
         before = self.n_nodes
         plan = self.engine.plan_shrink(self.state, release_nodes=victims,
-                                       queue_delay_s=queue_delay_s)
+                                       queue_delay_s=queue_delay_s,
+                                       failed=(kind == "fail"))
         outcome = self.engine.execute(plan, backend=self)
         assert plan.shrink is not None
         rec = ReconfigRecord(
@@ -354,6 +367,95 @@ class ElasticRuntime:
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
             bytes_cross_pod=outcome.bytes_cross_pod,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+            bytes_restored=outcome.bytes_restored,
+            restored_s=outcome.restored_s,
+        )
+        self.history.append(rec)
+        return rec
+
+    # ---------------------------------------------------------- fault tolerance --
+    def checkpoint(self, *, queue_delay_s: float = 0.0) -> ReconfigRecord:
+        """Charge one full-state checkpoint (no allocation change).
+
+        The snapshot size comes from the engine's bytes model
+        (:meth:`~repro.core.ReconfigEngine.checkpoint_bytes`); callers
+        that actually persist state (the trainer's
+        :class:`~repro.checkpoint.CheckpointManager`) do so alongside
+        this record.
+        """
+        before = self.n_nodes
+        plan = self.engine.plan_checkpoint(self.ranks_in_use(),
+                                           queue_delay_s=queue_delay_s)
+        outcome = self.engine.execute(plan, backend=self)
+        rec = ReconfigRecord(
+            kind="checkpoint",
+            mechanism="ckpt",
+            nodes_before=before,
+            nodes_after=self.n_nodes,
+            est_wall_s=outcome.total_s,
+            downtime_s=outcome.downtime_s,
+            queued_s=outcome.queued_s,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+        )
+        self.history.append(rec)
+        return rec
+
+    def apply_restart(self, plan: ReconfigPlan) -> None:
+        """Full stop + respawn: every world exits, the new one comes up.
+
+        All nodes return to the pool first; the replacement world is
+        then acquired in ``plan.node_ids`` order, one node-confined
+        group per node (the same shape an initial allocation has, so
+        subsequent TS shrinks work unchanged).
+        """
+        for wid in list(self.state.worlds):
+            w = self.state.worlds.pop(wid)
+            self.groups.pop(wid, None)
+            for node in w.nodes:
+                self.pool.release(node)
+        for node in plan.node_ids:
+            devs = self.pool.acquire(node)
+            w = self.state.add_world([node], [len(devs)])
+            self.groups[w.wid] = NodeGroup(gid=w.wid, node=node, devices=devs)
+
+    def restart(self, target_nodes: int, *,
+                queue_delay_s: float = 0.0) -> ReconfigRecord:
+        """Full-stop checkpoint/restart to ``target_nodes`` nodes.
+
+        The rigid baseline head-to-head against malleable resizing:
+        checkpoint the whole state, stop every world, respawn at the
+        target size (SS), restore from the store.  The new allocation
+        takes the lowest-id ``target_nodes`` nodes of the whole pool
+        (everything is momentarily free) — deterministic in both
+        executors.
+        """
+        before = self.n_nodes
+        if target_nodes <= 0:
+            raise ValueError("restart() requires target_nodes >= 1")
+        candidates = sorted(set(self.state.nodes_in_use()) | set(self.pool.free))
+        if target_nodes > len(candidates):
+            raise RuntimeError(
+                f"device pool exhausted: restart to {target_nodes} nodes "
+                f"exceeds the {len(candidates)} nodes available"
+            )
+        new_nodes = candidates[:target_nodes]
+        ns = self.ranks_in_use()
+        nt = sum(self.pool.width(n) for n in new_nodes)
+        plan = self.engine.plan_restart(ns, nt, queue_delay_s=queue_delay_s,
+                                        node_ids=new_nodes)
+        outcome = self.engine.execute(plan, backend=self)
+        rec = ReconfigRecord(
+            kind="restart",
+            mechanism="ss",
+            nodes_before=before,
+            nodes_after=self.n_nodes,
+            est_wall_s=outcome.total_s,
+            downtime_s=outcome.downtime_s,
+            queued_s=outcome.queued_s,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+            bytes_restored=outcome.bytes_restored,
+            restored_s=outcome.restored_s,
         )
         self.history.append(rec)
         return rec

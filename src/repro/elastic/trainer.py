@@ -4,7 +4,9 @@ Wraps a Model + ElasticRuntime + SimulatedRMS into one training loop:
 every step it drains due RMS events, reconfigures (expand via the
 parallel spawn plan, shrink/fail/straggler via TS), reshards the live
 TrainState onto the rebuilt mesh (stage 3), re-jits, and continues.
-Periodic mesh-independent checkpoints cover the SS-restart path.
+Mesh-independent checkpoints — periodic, or CHECKPOINT-event-driven —
+cover the full-stop path: a RESTART event rebuilds the world at the
+target size and reads the params back from the latest snapshot.
 """
 from __future__ import annotations
 
@@ -54,6 +56,7 @@ class ElasticTrainer:
     def __post_init__(self):
         self._ctx = self._make_ctx()
         self._step_fn = None
+        self._restore_pending = False
         self._state: Optional[TrainState] = None
         self._data = SyntheticTokens(self.model.cfg, self.batch, self.seq, self.seed)
         self._ckpt = (
@@ -143,6 +146,40 @@ class ElasticTrainer:
         self.transfer_log.append(stats)
         self._rejit()
 
+    def _restore_from_store(self, step: int, charged_bytes: int = 0):
+        """SS-restart stage 3: params come back from the latest snapshot.
+
+        Checkpoints are mesh-independent (host ``.npy`` leaves + a
+        manifest), so a snapshot written under the old mesh restores
+        under the rebuilt one's shardings.  Optimizer state and the step
+        counter reshard live — mirroring what the saves persist.  With
+        no store (or an empty one) the live state reshards instead: the
+        charged cost story is identical, only the data source differs.
+        """
+        if self._ckpt is None or self._state is None:
+            self._reshard_state(step=step, charged_bytes=charged_bytes)
+            return
+        _, shardings = train_state_shardings(self.model, self._ctx)
+        spec_tree = jax.tree.map(lambda s: s.spec, shardings.params)
+        tree, ck_step = self._ckpt.restore_latest(
+            {"params": self._state.params}, mesh=self._ctx.mesh,
+            spec_tree={"params": spec_tree},
+        )
+        if tree is None:
+            self._reshard_state(step=step, charged_bytes=charged_bytes)
+            return
+        old_params = self._state.params
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), self._state, shardings,
+        )
+        self._state = state._replace(params=tree["params"])
+        stats = dict(transfer_stats(old_params, self._state.params))
+        stats["step"] = step
+        stats["charged_bytes_moved"] = charged_bytes
+        stats["restored_from_step"] = ck_step
+        self.transfer_log.append(stats)
+        self._rejit()
+
     # -------------------------------------------------------------------- events --
     def _handle(self, ev: Event):
         """One RMS event through the SAME dispatch the scenario executors
@@ -154,6 +191,15 @@ class ElasticTrainer:
             nodes=ev.nodes, target_nodes=ev.target_nodes,
             queue_delay_s=ev.queue_delay_s,
         ))
+        if ev.kind is EventKind.CHECKPOINT:
+            # Persist the real snapshot next to the charged record, so a
+            # later RESTART (or failure recovery) has bytes to read back.
+            if self._ckpt is not None and self._state is not None:
+                self._ckpt.save({"params": self._state.params},
+                                len(self.history))
+            return False  # no allocation change: keep the mesh and jit
+        if ev.kind is EventKind.RESTART and applied:
+            self._restore_pending = True
         return bool(applied)
 
     # ---------------------------------------------------------------------- run --
@@ -172,7 +218,11 @@ class ElasticTrainer:
                     r.bytes_moved
                     for r in self.runtime.history[records_before:]
                 )
-                self._reshard_state(step=step_no, charged_bytes=charged)
+                if self._restore_pending:
+                    self._restore_pending = False
+                    self._restore_from_store(step_no, charged_bytes=charged)
+                else:
+                    self._reshard_state(step=step_no, charged_bytes=charged)
             batch = make_batch_on_mesh(
                 self._data.sample(step_no), self.model.cfg, self._ctx
             )

@@ -54,6 +54,7 @@ from .policies import (
     SERVE_TRAFFIC,
     ArbitratedJob,
     BackfillPolicy,
+    CheckpointIntervalPolicy,
     ChurnPolicy,
     JobSpec,
     MonteCarloSweep,
@@ -79,21 +80,26 @@ from .policies import (
     two_job_interference,
 )
 from .scenarios import (
+    FAULT_SCENARIO_NAMES,
     RuntimeAdapter,
     Scenario,
     ScenarioEvent,
     ScenarioRecord,
     TransitionCache,
     burst_arrival,
+    ckpt_cycle,
     dispatch_event,
     get_scenario,
     heterogeneous_pool,
+    node_fail_wave,
     node_failures,
     param_bytes_for_arch,
     record_parity_key,
     register_scenario,
+    registered_fault_scenarios,
     registered_scenarios,
     resolve_engine,
+    restart_vs_shrink,
     run_scenario_live,
     run_scenario_sim,
     run_scenario_vectorized,
@@ -113,6 +119,7 @@ from .simulator import (
 )
 
 __all__ = [
+    "FAULT_SCENARIO_NAMES",
     "KNOB_GRID",
     "MN5",
     "NASP",
@@ -122,6 +129,7 @@ __all__ = [
     "WORKLOAD_TRACES",
     "ArbitratedJob",
     "BackfillPolicy",
+    "CheckpointIntervalPolicy",
     "ChurnPolicy",
     "CostModel",
     "ExpansionReport",
@@ -150,6 +158,7 @@ __all__ = [
     "burst_arrival",
     "charge_in_flight_queueing",
     "churn_trace",
+    "ckpt_cycle",
     "dispatch_event",
     "evaluate_schedule",
     "fsdp_bytes_model",
@@ -157,12 +166,14 @@ __all__ = [
     "get_scenario",
     "heterogeneous_pool",
     "monte_carlo_sweep",
+    "node_fail_wave",
     "node_failures",
     "optimize_schedule",
     "param_bytes_for_arch",
     "priority_preempt",
     "record_parity_key",
     "register_scenario",
+    "registered_fault_scenarios",
     "registered_policy_scenarios",
     "registered_scenarios",
     "registered_serve_scenarios",
@@ -170,6 +181,7 @@ __all__ = [
     "replicated_bytes_model",
     "replicated_link_model",
     "resolve_engine",
+    "restart_vs_shrink",
     "rigid_baseline",
     "run_multijob_sim",
     "run_scenario_live",

@@ -77,6 +77,21 @@ class CostModel:
     redist_bw_cross_rack: float | None = None
     redist_bw_cross_pod: float | None = None
 
+    # -- checkpoint / restore ---------------------------------------------------
+    # The full-stop alternative the malleable paths beat: a CHECKPOINT
+    # stage writes the job's snapshot to the store, a RESTORE stage reads
+    # it back.  Writes stream to a shared store at ``ckpt_bw`` (falls
+    # back to the aggregate ``redist_bw``) after a per-snapshot setup
+    # ``ckpt_alpha`` (falls back to ``redist_alpha``); restores are
+    # priced through :meth:`redistribution` — per distance class, like
+    # any stage-3 transfer.  ``ckpt_overlap`` is the async-checkpoint
+    # fraction: snapshots are host copies written behind compute, so the
+    # default 1.0 hides the whole write when the job runs ASYNC (restores
+    # never hide — the app is down until its state is back).
+    ckpt_bw: float | None = None
+    ckpt_alpha: float | None = None
+    ckpt_overlap: float = 1.0
+
     # -- partial overlap (stage x compute) -------------------------------------------
     # Fraction of each stage that can proceed under application compute when
     # the job runs ASYNC.  The defaults reproduce MaM's binary model (the
@@ -273,6 +288,40 @@ class CostModel:
             total += pod / self.bw_cross_pod
         return total
 
+    @cached_property
+    def bw_ckpt(self) -> float:
+        """Resolved checkpoint-store bandwidth (aggregate unless split)."""
+        return self.redist_bw if self.ckpt_bw is None else self.ckpt_bw
+
+    @cached_property
+    def alpha_ckpt(self) -> float:
+        """Resolved per-snapshot setup charge."""
+        return self.redist_alpha if self.ckpt_alpha is None else self.ckpt_alpha
+
+    def checkpoint(self, snapshot_bytes: int) -> float:
+        """CHECKPOINT wall time: stream one snapshot to the store.
+
+        Zero bytes means no event at all (no setup charge), mirroring
+        :meth:`redistribution_by_class`.
+        """
+        if snapshot_bytes <= 0:
+            return 0.0
+        return self.alpha_ckpt + snapshot_bytes / self.bw_ckpt
+
+    def restore(self, moved_bytes: int, stayed_bytes: int = 0,
+                cross_rack_bytes: int = 0, cross_pod_bytes: int = 0) -> float:
+        """RESTORE wall time: read a snapshot back from the store.
+
+        Restores are stage-3 transfers in reverse — shards stream from
+        the store onto the surviving (or respawned) ranks — so they are
+        priced through :meth:`redistribution`, per distance class.  The
+        default call charges everything on the cross link (the store is
+        a shared filesystem outside the rack tree); callers that resolve
+        store locality can pass the class split.
+        """
+        return self.redistribution(moved_bytes, stayed_bytes,
+                                   cross_rack_bytes, cross_pod_bytes)
+
     def redistribution(self, moved_bytes: int, stayed_bytes: int = 0,
                        cross_rack_bytes: int = 0,
                        cross_pod_bytes: int = 0) -> float:
@@ -398,6 +447,10 @@ class CostModel:
                 None if self.gamma_pod is None else self.gamma_pod * factor
             ),
             redist_alpha=self.redist_alpha * factor,
+            ckpt_bw=(None if self.ckpt_bw is None else self.ckpt_bw / factor),
+            ckpt_alpha=(
+                None if self.ckpt_alpha is None else self.ckpt_alpha * factor
+            ),
         )
 
 
@@ -429,6 +482,8 @@ def replicated_bytes_model(param_bytes: int):
             return 0
         return param_bytes * (nt - ns)
 
+    # Checkpoint snapshot size: one full replica, regardless of rank count.
+    bytes_moved.total_bytes = lambda ranks: max(0, param_bytes)  # type: ignore[attr-defined]
     return bytes_moved
 
 
@@ -450,6 +505,8 @@ def fsdp_bytes_model(param_bytes: int):
             return 0
         return param_bytes
 
+    # Checkpoint snapshot size: the shards cover the pytree exactly once.
+    bytes_moved.total_bytes = lambda ranks: max(0, param_bytes)  # type: ignore[attr-defined]
     return bytes_moved
 
 
@@ -484,6 +541,8 @@ def replicated_link_model(param_bytes: int):
             }
         return {"bytes_stayed": param_bytes * nt, "bytes_moved": 0}
 
+    # Checkpoint snapshot size: one full replica, regardless of rank count.
+    transfer.total_bytes = lambda ranks: max(0, param_bytes)  # type: ignore[attr-defined]
     return transfer
 
 

@@ -38,12 +38,16 @@ from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple, runtime
 
 from repro.core import Topology
 
+from .cost_model import MN5, CostModel
 from .scenarios import (
+    CHECKPOINT,
     GROW,
+    RESTART,
     SHRINK,
     Scenario,
     ScenarioEvent,
     TransitionCache,
+    param_bytes_for_arch,
     register_scenario,
     run_scenario_sim,
     run_scenario_vectorized,
@@ -291,6 +295,30 @@ def charge_in_flight_queueing(scenario: Scenario) -> Scenario:
     return replace(scenario, events=tuple(out))
 
 
+def _predicted_wall(template: Scenario, event: ScenarioEvent,
+                    cost_model: Optional[CostModel] = None,
+                    prelude: Tuple[ScenarioEvent, ...] = ()) -> float:
+    """Charged wall of ONE candidate event via a throwaway sim run.
+
+    The decision engine behind mechanism choices: the candidate is
+    charged by the same engine both executors use, so "which path is
+    cheaper" is answered with the numbers the timeline would actually
+    show, not a side formula that could drift.  ``prelude`` events set
+    up the cluster state the candidate fires from (e.g. a grow, so the
+    job holds node-confined worlds like a real trace would); only the
+    LAST record — the candidate's — is returned.
+    """
+    events = tuple(prelude) + (replace(event, queue_delay_s=0.0),)
+    trial = replace(
+        template,
+        name=template.name + "__decide",
+        events=events,
+        steps=max(e.step for e in events) + 2,
+    )
+    recs = run_scenario_sim(trial, cost_model=cost_model)
+    return recs[-1].est_wall_s
+
+
 # ================================================================= policies ==
 @dataclass(frozen=True)
 class RigidArrival:
@@ -380,12 +408,63 @@ class PreemptionPolicy:
     behind the in-flight event's charged wall
     (:func:`charge_in_flight_queueing`), so both executors see the grow
     drain first and the preemption pay its QUEUE span.
+
+    ``mechanism`` picks HOW the victim gives nodes back: ``"shrink"``
+    (the default — malleable TS shrink, the historical trace bit for
+    bit), ``"restart"`` (rigid full-stop checkpoint/restart at the
+    smaller size — what a non-malleable job would do), or ``"auto"``
+    (charge both candidates through the engine and emit whichever
+    predicts the smaller ``est_wall`` — the dynamic-awareness decision
+    rule).  ``decision_cost_model`` overrides the cost model the
+    ``"auto"`` comparison charges with (e.g. the actual cluster's
+    measured constants), without touching the trace's replay pricing.
     """
 
     arrivals: Tuple[PriorityArrival, ...] = ()
     horizon: int = 24
     start_step: int = 2
     name: str = "preemption"
+    mechanism: str = "shrink"        # shrink | restart | auto
+    decision_cost_model: Optional[CostModel] = None
+
+    def _preempt_event(self, job: JobSpec, step: int, alloc: int,
+                       target: int) -> ScenarioEvent:
+        """The reclaim event for one forced ``alloc -> target`` resize."""
+        if self.mechanism == "shrink":
+            return _resize(step, alloc, target)
+        restart_ev = ScenarioEvent(step=step, kind=RESTART,
+                                   target_nodes=target)
+        if self.mechanism == "restart":
+            return restart_ev
+        if self.mechanism != "auto":
+            raise ValueError(
+                f"{self.name}: unknown mechanism {self.mechanism!r}; "
+                "expected 'shrink', 'restart' or 'auto'")
+        # The trial replays the job's actual shape at decision time: it
+        # grew into ``alloc`` node-confined worlds, so the shrink
+        # candidate prices as a real TS teardown, not a zombification
+        # of one big initial world.
+        template = Scenario(
+            name=f"{self.name}:{job.name}",
+            description="preemption mechanism decision trial",
+            initial_nodes=1,
+            events=(),
+            steps=step + 2,
+            arch=job.arch,
+            param_bytes=job.param_bytes,
+        )
+        prelude = (
+            (ScenarioEvent(step=max(0, step - 1), kind=GROW,
+                           target_nodes=alloc),)
+            if alloc > 1 else ()
+        )
+        shrink_ev = _resize(step, alloc, target)
+        cm = self.decision_cost_model
+        t_shrink = _predicted_wall(template, shrink_ev, cost_model=cm,
+                                   prelude=prelude)
+        t_restart = _predicted_wall(template, restart_ev, cost_model=cm,
+                                    prelude=prelude)
+        return shrink_ev if t_shrink <= t_restart else restart_ev
 
     def generate(self, cluster: ClusterState) -> PolicyTrace:
         job = cluster.primary_malleable()
@@ -418,7 +497,7 @@ class PreemptionPolicy:
                 used += grant
                 target = cluster.clamp_grant(job, cluster.total_nodes - used)
                 if target < alloc:
-                    events.append(_resize(step, alloc, target))
+                    events.append(self._preempt_event(job, step, alloc, target))
                     alloc = target
         trace = PolicyTrace(
             policy=self.name,
@@ -487,6 +566,59 @@ class ChurnPolicy:
             initial={job.name: cluster.allocations[job.name]},
             events={job.name: tuple(events)},
             steps=step + 2,
+            specs={job.name: job},
+            topology=cluster.topology,
+        )
+
+
+@dataclass(frozen=True)
+class CheckpointIntervalPolicy:
+    """Young/Daly checkpoint cadence: ``T_opt = sqrt(2 * C * MTBF)``.
+
+    The adaptive fault-tolerance policy: instead of resizing, it decides
+    WHEN to snapshot.  The checkpoint cost ``C`` is priced by the SAME
+    cost model that charges the timeline (``cm.checkpoint`` over the
+    job's pytree), so a bigger model or a slower store link directly
+    stretches the interval, and a shorter MTBF tightens it — the
+    classic first-order optimum balancing snapshot overhead against
+    expected rework.  The generated trace is a pure CHECKPOINT cadence
+    the existing sim/live machinery replays unchanged.
+    """
+
+    mtbf_s: float = 3600.0           # mean time between failures
+    step_time_s: float = 1.0         # seconds of compute per app step
+    horizon: int = 40
+    start_step: int = 2
+    cost_model: Optional[CostModel] = None   # pricing for C (default MN5)
+    name: str = "ckpt-interval"
+
+    def interval_steps(self, job: JobSpec) -> int:
+        """Young/Daly optimum, floored at one step.
+
+        A zero-byte pytree prices ``C = 0`` and degenerates to
+        checkpointing every step — harmless, but callers sizing real
+        jobs should give the spec an ``arch`` or ``param_bytes``.
+        """
+        cm = self.cost_model if self.cost_model is not None else MN5
+        pb = job.param_bytes or (
+            param_bytes_for_arch(job.arch) if job.arch else 0)
+        cost = cm.checkpoint(pb)
+        t_opt = math.sqrt(2.0 * cost * self.mtbf_s)
+        return max(1, round(t_opt / self.step_time_s))
+
+    def generate(self, cluster: ClusterState) -> PolicyTrace:
+        job = cluster.primary_malleable()
+        every = self.interval_steps(job)
+        events = tuple(
+            ScenarioEvent(step=s, kind=CHECKPOINT)
+            for s in range(self.start_step + every, self.horizon, every)
+        )
+        return PolicyTrace(
+            policy=self.name,
+            cluster_nodes=cluster.total_nodes,
+            initial={job.name: cluster.allocations[job.name]},
+            events={job.name: events},
+            steps=self.horizon + 2,
             specs={job.name: job},
             topology=cluster.topology,
         )

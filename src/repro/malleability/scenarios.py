@@ -1,7 +1,8 @@
 """Declarative workload scenarios shared by every consumer layer.
 
 A :class:`Scenario` is a pure-data trace of RMS events (grow / shrink /
-fail / straggler) against a node pool.  The SAME object drives:
+fail / straggler / checkpoint / restart) against a node pool.  The SAME
+object drives:
 
 * the **simulator** — :func:`run_scenario_sim` walks the trace against a
   device-free :class:`ClusterState`, planning each reconfiguration
@@ -56,6 +57,8 @@ GROW = "grow"
 SHRINK = "shrink"
 FAIL = "fail"
 STRAGGLER = "straggler"
+CHECKPOINT = "checkpoint"
+RESTART = "restart"
 
 
 @dataclass(frozen=True)
@@ -74,11 +77,18 @@ class ScenarioEvent:
     engine's placement decision (highest-id nodes for the classics,
     whole racks first for topology-aware strategies), identically in
     both executors.
+
+    A CHECKPOINT snapshots the full state in place (no allocation
+    change); a RESTART is the rigid full-stop baseline — checkpoint,
+    stop every world, respawn at ``target_nodes`` (the current count
+    when 0), restore from the store.
     """
 
     step: int
     kind: str                       # grow | shrink | fail | straggler
-    target_nodes: int = 0           # GROW: new total; SHRINK: shrink-to total
+    #                                 | checkpoint | restart
+    target_nodes: int = 0           # GROW: new total; SHRINK: shrink-to
+    #                                 total; RESTART: post-restart total
     nodes: tuple[int, ...] = ()     # SHRINK/FAIL/STRAGGLER: victim node ids
     queue_delay_s: float = 0.0      # RMS arbitration wait before stage 2
 
@@ -153,6 +163,10 @@ class Scenario:
     #                                  spawns pay +gamma_rack and pod-crossing
     #                                  ones +gamma_rack+gamma_pod on top of
     #                                  the flat latency; 0 keeps spawn flat
+    restore_on_fail: bool = False    # FAIL recovery re-reads the dead nodes'
+    #                                  shard of the last checkpoint: the
+    #                                  recovery shrink carries a trailing
+    #                                  RESTORE event (bytes_restored)
 
     @property
     def heterogeneous(self) -> bool:
@@ -217,6 +231,10 @@ class Scenario:
         for ev in sorted(self.events, key=lambda e: e.step):
             if ev.kind == GROW:
                 count = max(count, ev.target_nodes)
+            elif ev.kind == RESTART:
+                count = ev.target_nodes or count
+            elif ev.kind == CHECKPOINT:
+                pass  # snapshot in place: no allocation change
             else:
                 count = max(1, count - len(ev.nodes))
             peak = max(peak, count)
@@ -288,6 +306,7 @@ class Scenario:
             cost_model=self.cost_model(),
             bytes_model=bytes_model,
             topology=self.topology(),
+            restore_on_fail=self.restore_on_fail,
         )
 
     def with_cores_per_node(self, cpn: int) -> "Scenario":
@@ -600,6 +619,116 @@ def topology_pods(name: str = "topo-pods") -> Scenario:
     )
 
 
+def ckpt_cycle(
+    name: str = "ckpt-cycle",
+    nodes: int = 4,
+    checkpoints: int = 3,
+    period: int = 3,
+    param_bytes: int = 1 << 30,
+) -> Scenario:
+    """Periodic full-state checkpoints riding a steady grow/shrink trace.
+
+    The fault-tolerance cadence of a long malleable run: grow once,
+    snapshot the pytree every ``period`` steps (a CHECKPOINT event
+    prices the stream through the cost model's checkpoint link, hidden
+    behind compute per its ``ckpt_overlap``), then TS-shrink back.
+    Node counts (1, ``nodes``, ``nodes/2``) divide a batch of 8, so the
+    full ElasticTrainer loop replays the trace and actually persists
+    each snapshot through its :class:`~repro.checkpoint.CheckpointManager`.
+    """
+    events = [ScenarioEvent(step=2, kind=GROW, target_nodes=nodes)]
+    step = 2 + period
+    for _ in range(checkpoints):
+        events.append(ScenarioEvent(step=step, kind=CHECKPOINT))
+        step += period
+    events.append(ScenarioEvent(
+        step=step, kind=SHRINK, nodes=tuple(range(nodes // 2, nodes))))
+    return Scenario(
+        name=name,
+        description=f"{checkpoints}x periodic checkpoint at {nodes} nodes, "
+                    "then TS shrink",
+        initial_nodes=1,
+        events=tuple(events),
+        steps=step + period,
+        param_bytes=param_bytes,
+    )
+
+
+def node_fail_wave(
+    name: str = "node-fail-wave",
+    nodes: int = 8,
+    failure_waves: tuple[tuple[int, ...], ...] = ((4, 5, 6, 7), (2, 3)),
+    param_bytes: int = 1 << 30,
+) -> Scenario:
+    """Correlated failure waves recovered from the last checkpoint.
+
+    :func:`node_failures` with the fault-tolerance story attached: a
+    checkpoint lands before the first wave, and ``restore_on_fail``
+    makes every recovery shrink re-read the dead nodes' shard of that
+    snapshot — a trailing RESTORE event priced per distance class, so
+    ``est_wall`` now includes recovery I/O, not just the TS teardown.
+    The waves settle at 8 -> 4 -> 2 nodes (live-trainable widths).
+    """
+    events = [ScenarioEvent(step=2, kind=GROW, target_nodes=nodes),
+              ScenarioEvent(step=4, kind=CHECKPOINT)]
+    for i, wave in enumerate(failure_waves):
+        events.append(ScenarioEvent(step=6 + 4 * i, kind=FAIL, nodes=tuple(wave)))
+    return Scenario(
+        name=name,
+        description=f"grow to {nodes}, checkpoint, then "
+                    f"{len(failure_waves)} failure waves restoring lost shards",
+        initial_nodes=1,
+        events=tuple(events),
+        steps=6 + 4 * len(failure_waves) + 2,
+        param_bytes=param_bytes,
+        restore_on_fail=True,
+    )
+
+
+def restart_vs_shrink(
+    name: str = "restart-vs-shrink",
+    nodes: int = 4,
+    param_bytes: int = 1 << 30,
+) -> Scenario:
+    """The same resize twice: full-stop restart, then malleable shrink.
+
+    The paper's head-to-head in one trace: the job gives back half its
+    nodes first as a rigid checkpoint/stop/respawn/restore cycle
+    (RESTART), regrows, then does the identical resize as a malleable
+    TS shrink.  Comparing the two records' ``est_wall_s`` shows what
+    dynamic-awareness buys — the restart pays the full snapshot back
+    through the checkpoint link while the shrink moves nothing (the
+    replicated model keeps survivor state in place) — under every
+    registered strategy, since both mechanisms are strategy-independent.
+    Node counts (1, 4, 2) divide a batch of 8 for the live trainer.
+    """
+    return Scenario(
+        name=name,
+        description=f"the same {nodes}->{nodes // 2} resize as full-stop "
+                    "restart, then as malleable TS shrink",
+        initial_nodes=1,
+        events=(
+            ScenarioEvent(step=2, kind=GROW, target_nodes=nodes),
+            ScenarioEvent(step=5, kind=RESTART, target_nodes=nodes // 2),
+            ScenarioEvent(step=8, kind=GROW, target_nodes=nodes),
+            ScenarioEvent(step=11, kind=SHRINK,
+                          nodes=tuple(range(nodes // 2, nodes))),
+        ),
+        steps=14,
+        param_bytes=param_bytes,
+    )
+
+
+# The fault-tolerance family: every scenario whose trace exercises the
+# checkpoint/restore path (benchmarks' ``table_faults`` iterates this).
+FAULT_SCENARIO_NAMES = ("ckpt-cycle", "node-fail-wave", "restart-vs-shrink")
+
+
+def registered_fault_scenarios() -> tuple[Scenario, ...]:
+    """The registered fault-tolerance scenarios, in table order."""
+    return tuple(get_scenario(n) for n in FAULT_SCENARIO_NAMES)
+
+
 for _sc in (
     steady_cycle(),
     burst_arrival(),
@@ -624,6 +753,12 @@ for _sc in (
     topology_nasp(),
     topology_redist(),
     topology_pods(),
+    # Fault-tolerance family: checkpoint cadence, checkpoint-backed
+    # failure recovery, and the rigid restart-vs-malleable-shrink
+    # head-to-head (see FAULT_SCENARIO_NAMES).
+    ckpt_cycle(),
+    node_fail_wave(),
+    restart_vs_shrink(),
 ):
     register_scenario(_sc)
 
@@ -635,7 +770,8 @@ class ScenarioRecord:
 
     step: int
     kind: str                  # expand | shrink | fail | straggler
-    mechanism: str             # strategy value or TS/ZS/SS value
+    #                            | checkpoint | restart
+    mechanism: str             # strategy value, TS/ZS/SS value, or ckpt
     nodes_before: int
     nodes_after: int
     est_wall_s: float          # timeline total
@@ -645,6 +781,9 @@ class ScenarioRecord:
     bytes_stayed: int = 0      # stage-3 local-link bytes charged on the timeline
     bytes_cross_rack: int = 0  # rack-crossing portion of bytes_moved
     bytes_cross_pod: int = 0   # pod-crossing slice of bytes_cross_rack
+    bytes_checkpointed: int = 0  # snapshot bytes streamed to the store
+    bytes_restored: int = 0    # bytes read back from the store (RESTORE)
+    restored_s: float = 0.0    # RESTORE span charged on the timeline
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
@@ -665,7 +804,8 @@ def record_parity_key(rec) -> tuple:
     return (rec.step, rec.kind, rec.mechanism, rec.nodes_before,
             rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved,
             rec.queued_s, rec.bytes_stayed, rec.bytes_cross_rack,
-            rec.bytes_cross_pod)
+            rec.bytes_cross_pod, rec.bytes_checkpointed, rec.bytes_restored,
+            rec.restored_s)
 
 
 @dataclass
@@ -753,6 +893,9 @@ class _SimCluster:
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
             bytes_cross_pod=outcome.bytes_cross_pod,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+            bytes_restored=outcome.bytes_restored,
+            restored_s=outcome.restored_s,
         )
 
     def _cores_arg(self, nodes: list[int]):
@@ -770,7 +913,8 @@ class _SimCluster:
                      queue_delay_s: float = 0.0) -> ScenarioRecord:
         before = self.n_nodes
         plan = self.engine.plan_shrink(self.state, release_nodes=victims,
-                                       queue_delay_s=queue_delay_s)
+                                       queue_delay_s=queue_delay_s,
+                                       failed=(kind == FAIL))
         outcome = self.engine.execute(plan)
         assert plan.shrink is not None
         apply_shrink(self.state, plan.shrink)
@@ -783,6 +927,64 @@ class _SimCluster:
             bytes_stayed=outcome.bytes_stayed,
             bytes_cross_rack=outcome.bytes_cross_rack,
             bytes_cross_pod=outcome.bytes_cross_pod,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+            bytes_restored=outcome.bytes_restored,
+            restored_s=outcome.restored_s,
+        )
+
+    def checkpoint(self, queue_delay_s: float = 0.0) -> ScenarioRecord:
+        """Charge one full-state checkpoint (no allocation change),
+        mirroring :meth:`repro.elastic.ElasticRuntime.checkpoint`."""
+        before = self.n_nodes
+        plan = self.engine.plan_checkpoint(self.ranks_in_use(),
+                                           queue_delay_s=queue_delay_s)
+        outcome = self.engine.execute(plan)
+        return ScenarioRecord(
+            step=-1, kind="checkpoint", mechanism="ckpt",
+            nodes_before=before, nodes_after=self.n_nodes,
+            est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
+            queued_s=outcome.queued_s,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+        )
+
+    def restart(self, target_nodes: int,
+                queue_delay_s: float = 0.0) -> ScenarioRecord:
+        """Full-stop checkpoint/restart, mirroring
+        :meth:`repro.elastic.ElasticRuntime.restart` exactly: same
+        lowest-id-prefix placement over the momentarily-all-free pool,
+        same error messages, same record fields."""
+        before = self.n_nodes
+        if target_nodes <= 0:
+            raise ValueError("restart() requires target_nodes >= 1")
+        candidates = sorted(set(self.state.nodes_in_use()) | self._free)
+        if target_nodes > len(candidates):
+            raise RuntimeError(
+                f"device pool exhausted: restart to {target_nodes} nodes "
+                f"exceeds the {len(candidates)} nodes available"
+            )
+        new_nodes = candidates[:target_nodes]
+        ns = self.ranks_in_use()
+        nt = sum(self._width(n) for n in new_nodes)
+        plan = self.engine.plan_restart(ns, nt, queue_delay_s=queue_delay_s,
+                                        node_ids=new_nodes)
+        outcome = self.engine.execute(plan)
+        # Full stop: every world dies and its nodes free up, then one
+        # node-confined world per target node comes back — the same
+        # rebuild ElasticRuntime.apply_restart performs.
+        for wid in list(self.state.worlds):
+            w = self.state.worlds.pop(wid)
+            self._free.update(w.nodes)
+        for node in new_nodes:
+            self._free.discard(node)
+            self.state.add_world([node], [self._width(node)])
+        return ScenarioRecord(
+            step=-1, kind="restart", mechanism="ss",
+            nodes_before=before, nodes_after=self.n_nodes,
+            est_wall_s=outcome.total_s, downtime_s=outcome.downtime_s,
+            queued_s=outcome.queued_s,
+            bytes_checkpointed=outcome.bytes_checkpointed,
+            bytes_restored=outcome.bytes_restored,
+            restored_s=outcome.restored_s,
         )
 
 
@@ -793,7 +995,8 @@ def dispatch_event(
     """THE event-to-action mapping, shared by every executor.
 
     ``cluster`` is anything with ``n_nodes``, ``state``, ``expand``,
-    ``shrink_nodes`` and ``pick_release`` — the device-free sim cluster,
+    ``shrink_nodes``, ``pick_release``, ``checkpoint`` and ``restart``
+    — the device-free sim cluster,
     or a live runtime behind :class:`RuntimeAdapter` (used by both
     :func:`run_scenario_live` and :class:`repro.elastic.ElasticTrainer`).
 
@@ -832,6 +1035,11 @@ def dispatch_event(
             if n in cluster.state.nodes_in_use():
                 yield cluster.shrink_nodes([n], kind=kind,
                                            queue_delay_s=queue_delay_s)
+    elif kind == CHECKPOINT:
+        yield cluster.checkpoint(queue_delay_s=queue_delay_s)
+    elif kind == RESTART:
+        yield cluster.restart(target_nodes or cluster.n_nodes,
+                              queue_delay_s=queue_delay_s)
     else:
         raise ValueError(f"unknown scenario event kind {kind!r}")
 
@@ -867,6 +1075,9 @@ class RuntimeAdapter:
             bytes_stayed=rec.bytes_stayed,
             bytes_cross_rack=rec.bytes_cross_rack,
             bytes_cross_pod=rec.bytes_cross_pod,
+            bytes_checkpointed=rec.bytes_checkpointed,
+            bytes_restored=rec.bytes_restored,
+            restored_s=rec.restored_s,
         )
 
     def expand(self, target_nodes: int,
@@ -889,6 +1100,15 @@ class RuntimeAdapter:
         else:
             rec = self._rt.shrink_nodes(victims, queue_delay_s=queue_delay_s)
         return self._convert(rec)
+
+    def checkpoint(self, queue_delay_s: float = 0.0) -> ScenarioRecord:
+        return self._convert(
+            self._rt.checkpoint(queue_delay_s=queue_delay_s))
+
+    def restart(self, target_nodes: int,
+                queue_delay_s: float = 0.0) -> ScenarioRecord:
+        return self._convert(
+            self._rt.restart(target_nodes, queue_delay_s=queue_delay_s))
 
 
 def resolve_engine(
@@ -968,7 +1188,7 @@ class TransitionCache:
         The hot stamping loop binds a copy of it onto a bare
         ``ScenarioRecord.__new__`` instance and overwrites ``step`` —
         bypassing both ``dataclasses.replace`` and the frozen
-        dataclass ``__init__`` (twelve ``object.__setattr__`` calls),
+        dataclass ``__init__`` (fifteen ``object.__setattr__`` calls),
         which together dominated the 100k-event profile.
         """
         key = (kind, before, after, queue_delay_s)
@@ -1067,6 +1287,10 @@ def _vector_plan(scenario: Scenario,
     that make ``(kind, before, after, qd)`` determine the record.
     """
     if scenario.core_pool or engine.topology is not None:
+        return None
+    if engine.restore_on_fail:
+        # FAIL recovery charges a trailing RESTORE leg the closed-form
+        # chargers do not model; walk the object path.
         return None
     # Only a declared rack tree can cap the pool below the trace's peak
     # (pool_nodes() otherwise IS the peak, which no grow can exceed) —

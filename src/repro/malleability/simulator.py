@@ -97,6 +97,8 @@ class ShrinkReport:
     bytes_stayed: int = 0
     bytes_cross_rack: int = 0
     bytes_cross_pod: int = 0
+    bytes_restored: int = 0   # shards re-read from the last checkpoint
+    restored_s: float = 0.0   # RESTORE span charged on the timeline
 
 
 def simulate_expansion(
@@ -165,6 +167,7 @@ def simulate_shrink(
     bytes_stayed: int = 0,
     bytes_cross_rack: int = 0,
     bytes_cross_pod: int = 0,
+    restore_bytes: int = 0,
 ) -> ShrinkReport:
     """Charge one shrink by mechanism (TS / ZS / SS) off its timeline.
 
@@ -172,6 +175,8 @@ def simulate_shrink(
     link) additionally charges the survivors' absorption of the doomed
     ranks' shards as a REDISTRIBUTION event; ``bytes_cross_rack`` is the
     rack-crossing portion of ``bytes_total`` (distance-class pricing).
+    ``restore_bytes`` > 0 charges recovering that much of the last
+    checkpoint as a trailing RESTORE event (failure recovery).
     """
     tl = shrink_timeline(
         kind,
@@ -184,6 +189,7 @@ def simulate_shrink(
         bytes_stayed=bytes_stayed,
         bytes_cross_rack=bytes_cross_rack,
         bytes_cross_pod=bytes_cross_pod,
+        restore_bytes=restore_bytes,
     )
     if kind is ShrinkKind.TS:
         detail = {"worlds_terminated": len(doomed_world_sizes or [])}
@@ -204,6 +210,8 @@ def simulate_shrink(
         bytes_stayed=tl.bytes_stayed,
         bytes_cross_rack=tl.bytes_cross_rack,
         bytes_cross_pod=tl.bytes_cross_pod,
+        bytes_restored=tl.bytes_restored,
+        restored_s=tl.restored_s,
     )
 
 

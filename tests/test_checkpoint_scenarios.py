@@ -1,0 +1,209 @@
+"""Checkpoint/restart as a priced reconfiguration path.
+
+Pins the fault family end to end: sim == live == vectorized parity on
+every record field (checkpointed/restored bytes included), the
+restart-vs-shrink decision numbers under every registered strategy, the
+failure-recovery RESTORE accounting, the PreemptionPolicy mechanism
+knob, the Young/Daly checkpoint-interval policy, and the EventArrays
+round-trip of the two new stages.
+"""
+import math
+from dataclasses import replace
+
+import pytest
+
+from repro.core import (
+    CheckpointSpec,
+    Stage,
+    checkpoint_timeline,
+    registered_strategies,
+    restart_timeline,
+)
+from repro.core.vectorized import EventArrays
+from repro.malleability import (
+    MN5,
+    CheckpointIntervalPolicy,
+    PreemptionPolicy,
+    PriorityArrival,
+    record_parity_key,
+    registered_fault_scenarios,
+    run_scenario_live,
+    run_scenario_sim,
+    run_scenario_vectorized,
+)
+from repro.malleability.policies import ClusterState, JobSpec
+
+GIB = 1 << 30
+
+
+# ===================================================== executor parity ==
+class TestFaultScenarioParity:
+    @pytest.mark.parametrize(
+        "name", [sc.name for sc in registered_fault_scenarios()]
+    )
+    def test_sim_live_vectorized_agree_exactly(self, name):
+        sc = next(
+            s for s in registered_fault_scenarios() if s.name == name
+        )
+        sim = [record_parity_key(r) for r in run_scenario_sim(sc)]
+        live = [record_parity_key(r) for r in run_scenario_live(sc)]
+        vec = [record_parity_key(r) for r in run_scenario_vectorized(sc)]
+        assert sim == live == vec
+        assert sim  # the trace actually reconfigured
+
+    def test_ckpt_cycle_charges_snapshots(self):
+        sc = next(s for s in registered_fault_scenarios()
+                  if s.name == "ckpt-cycle")
+        recs = run_scenario_sim(sc)
+        ckpts = [r for r in recs if r.kind == "checkpoint"]
+        assert len(ckpts) == 3
+        for r in ckpts:
+            assert r.mechanism == "ckpt"
+            assert r.bytes_checkpointed == GIB
+            assert r.nodes_before == r.nodes_after  # no allocation change
+            assert r.est_wall_s > 0
+        # non-checkpoint events snapshot nothing
+        assert all(r.bytes_checkpointed == 0 for r in recs
+                   if r.kind != "checkpoint")
+
+    def test_node_fail_wave_restores_doomed_share(self):
+        sc = next(s for s in registered_fault_scenarios()
+                  if s.name == "node-fail-wave")
+        recs = run_scenario_sim(sc)
+        fails = [r for r in recs if r.kind == "fail"]
+        assert fails
+        for r in fails:
+            ns, nt = r.nodes_before, r.nodes_after
+            assert r.bytes_restored == GIB * (ns - nt) // ns
+            assert r.restored_s > 0
+        # grows/checkpoints restore nothing
+        assert all(r.bytes_restored == 0 for r in recs
+                   if r.kind not in ("fail",))
+
+
+# ============================================= the decision numbers ==
+class TestRestartVsShrink:
+    @pytest.mark.parametrize(
+        "key", [spec.key for spec in registered_strategies()]
+    )
+    def test_malleable_shrink_beats_full_stop_under_every_strategy(
+        self, key
+    ):
+        sc = next(s for s in registered_fault_scenarios()
+                  if s.name == "restart-vs-shrink")
+        recs = run_scenario_sim(
+            sc, engine=sc.default_engine(strategy=key))
+        restarts = [r for r in recs if r.kind == "restart"]
+        shrinks = [r for r in recs if r.kind == "shrink"]
+        assert len(restarts) == 1 and len(shrinks) == 1
+        restart, shrink = restarts[0], shrinks[0]
+        # the same 4 -> 2 allocation drop, both ways
+        assert (restart.nodes_before, restart.nodes_after) == (4, 2)
+        assert (shrink.nodes_before, shrink.nodes_after) == (4, 2)
+        assert shrink.est_wall_s < restart.est_wall_s
+        # the restart pays the full round trip: snapshot out + read back
+        assert restart.mechanism == "ss"
+        assert restart.bytes_checkpointed == GIB
+        assert restart.bytes_restored == GIB
+        assert shrink.bytes_checkpointed == shrink.bytes_restored == 0
+
+
+# ================================================== policy layer ==
+def _policy_kinds(policy):
+    cluster = ClusterState(
+        total_nodes=8,
+        jobs=(JobSpec("train", min_nodes=1, max_nodes=8,
+                      param_bytes=GIB),),
+    )
+    sc = policy.generate(cluster).scenario("train")
+    return [ev.kind for ev in sc.events], sc
+
+
+class TestPreemptionMechanism:
+    ARRIVALS = (PriorityArrival(step=6, nodes=4, duration=6,
+                                priority=100),)
+
+    def test_default_mechanism_is_bit_identical_shrink(self):
+        base, _ = _policy_kinds(PreemptionPolicy(arrivals=self.ARRIVALS))
+        explicit, _ = _policy_kinds(
+            PreemptionPolicy(arrivals=self.ARRIVALS, mechanism="shrink"))
+        assert base == explicit
+        assert "restart" not in base and "shrink" in base
+
+    def test_restart_mechanism_emits_restart_events(self):
+        kinds, sc = _policy_kinds(
+            PreemptionPolicy(arrivals=self.ARRIVALS, mechanism="restart"))
+        assert "restart" in kinds
+        recs = run_scenario_sim(sc)
+        restart = next(r for r in recs if r.kind == "restart")
+        assert restart.bytes_checkpointed > 0
+        assert restart.bytes_restored > 0
+
+    def test_auto_picks_shrink_under_calibrated_profiles(self):
+        default, _ = _policy_kinds(
+            PreemptionPolicy(arrivals=self.ARRIVALS))
+        auto, _ = _policy_kinds(
+            PreemptionPolicy(arrivals=self.ARRIVALS, mechanism="auto",
+                             decision_cost_model=MN5))
+        assert auto == default  # TS wins by orders of magnitude
+
+    def test_auto_flips_to_restart_when_termination_is_expensive(self):
+        slow_term = replace(MN5, t_term_base=50.0)
+        kinds, _ = _policy_kinds(
+            PreemptionPolicy(arrivals=self.ARRIVALS, mechanism="auto",
+                             decision_cost_model=slow_term))
+        assert "restart" in kinds and "shrink" not in kinds
+
+    def test_unknown_mechanism_raises(self):
+        with pytest.raises(ValueError, match="mechanism"):
+            _policy_kinds(
+                PreemptionPolicy(arrivals=self.ARRIVALS,
+                                 mechanism="reboot"))
+
+
+class TestCheckpointIntervalPolicy:
+    def test_young_daly_interval(self):
+        pol = CheckpointIntervalPolicy(mtbf_s=3600.0, step_time_s=1.0)
+        job = JobSpec("train", min_nodes=1, max_nodes=8,
+                      param_bytes=GIB)
+        cost = (pol.cost_model or MN5).checkpoint(GIB)
+        expected = max(1, round(math.sqrt(2.0 * cost * 3600.0)))
+        assert pol.interval_steps(job) == expected
+
+    def test_generates_pure_checkpoint_cadence(self):
+        cluster = ClusterState(
+            total_nodes=4,
+            jobs=(JobSpec("train", min_nodes=1, max_nodes=4,
+                          param_bytes=GIB),),
+        )
+        pol = CheckpointIntervalPolicy(mtbf_s=0.001, step_time_s=1.0,
+                                       horizon=12)
+        sc = pol.generate(cluster).scenario("train")
+        kinds = {ev.kind for ev in sc.events}
+        assert kinds == {"checkpoint"}
+        recs = run_scenario_sim(sc)
+        assert recs and all(r.bytes_checkpointed == GIB for r in recs)
+
+
+# ======================================== vectorized stage round-trip ==
+class TestVectorizedNewStages:
+    def test_checkpoint_timeline_round_trips(self):
+        tl = checkpoint_timeline(MN5, snapshot_bytes=GIB)
+        back = EventArrays.from_timeline(tl).to_timeline()
+        assert back == tl
+        assert back.bytes_checkpointed == GIB
+        assert back.span(Stage.CHECKPOINT) == tl.total
+
+    def test_restart_timeline_round_trips(self):
+        spec = CheckpointSpec(bytes_checkpointed=GIB, bytes_restored=GIB)
+        assert spec.bytes_checkpointed == spec.bytes_restored == GIB
+        tl = restart_timeline(
+            MN5, ns=4, nt=2, nodes=1,
+            snapshot_bytes=GIB, restore_bytes=GIB)
+        ea = EventArrays.from_timeline(tl)
+        back = ea.to_timeline()
+        assert back == tl
+        assert back.bytes_restored == GIB
+        assert back.restored_s == tl.span(Stage.RESTORE) > 0
+        # RESTORE bytes stay out of the stage-3 sums
+        assert back.bytes_moved == tl.bytes_moved
