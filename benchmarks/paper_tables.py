@@ -38,6 +38,7 @@ from repro.api import (
     SERVE_SCENARIO_NAMES,
     WORKLOAD_TRACES,
     ChurnPolicy,
+    ThroughputModel,
     ClusterState as RmsClusterState,
     JobSpec,
     Method,
@@ -61,6 +62,7 @@ from repro.api import (
     replicated_bytes_model,
     run_scenario_sim,
     run_scenario_vectorized,
+    time_to_result,
     run_serve,
     running_vector,
     shrink_timeline,
@@ -505,6 +507,106 @@ def table_scheduler(grid=None, n_random: int = SCHED_FULL_RANDOM,
                 "reconfigs": out.reconfigs,
                 "beats_baseline": out.score < base.score,
             })
+    return rows
+
+
+# ---------------------------------------------- throughput-coupled cost --
+#: Frozen device-free constants for the throughput rows: a 250M-param
+#: fp32 model (``flops_per_token = 6 x params``, ``param_bytes =
+#: 4 x params``) at the default train_4k shape.  Big enough that the
+#: allocation's width moves the modeled step time, small enough that
+#: reconfiguration cost still matters — the regime where the makespan
+#: and time-to-result objectives genuinely disagree.
+THRPT_MODEL = ThroughputModel(flops_per_token=1.5e9, param_bytes=10**9)
+#: The optimizer's uneven pool: four wide nodes fronting a long tail of
+#: single-chip hosts.  The workload traces declare no ``core_pool`` of
+#: their own, so the model pins the widths.
+THRPT_POOL = (4, 4, 2, 2) + (1,) * 28
+THRPT_MODEL_UNEVEN = ThroughputModel(
+    flops_per_token=1.5e9, param_bytes=10**9, node_widths=THRPT_POOL)
+#: One even trace, one uneven-width trace — the per-strategy contrast.
+THRPT_TRACES = ("steady-cycle", "hetero-nasp")
+
+
+def table_throughput(traces: tuple[str, ...] = THRPT_TRACES, grid=None,
+                     n_random: int = SCHED_FULL_RANDOM,
+                     seed: int = 0) -> list[dict]:
+    """Modeled time-to-result: per-strategy traces + the objective swap.
+
+    Strategy rows replay an even (``steady-cycle``) and an uneven-width
+    (``hetero-nasp``) trace under every capable strategy with
+    :data:`THRPT_MODEL` accrued into the records, then price the full
+    horizon with :func:`repro.api.time_to_result` — reconfiguration
+    walls AND the per-step compute the allocation earns between them,
+    width-weighted on the uneven ``core_pool``.
+
+    Optimizer rows run the knob search twice per workload on the uneven
+    :data:`THRPT_MODEL_UNEVEN` pool: once on the classic makespan
+    objective (its winner then priced under the model), once with
+    ``throughput=`` swapping the makespan term for modeled
+    time-to-result, next to the rigid control.  ``diverges`` /
+    ``wins`` in the derived column pin the acceptance criterion — the
+    two objectives pick different knobs and the time-to-result winner
+    is genuinely faster — and the ``gain`` row carries the margin
+    itself (makespan-winner ttr minus ttr-winner ttr) so the bench
+    drift gate fails if a regression ever collapses it.
+    """
+    rows = []
+    for name in traces:
+        sc = get_scenario(name)
+        for spec in registered_strategies():
+            if spec.homogeneous_only and sc.heterogeneous:
+                continue
+            recs = run_scenario_vectorized(
+                sc, engine=sc.default_engine(strategy=spec.key),
+                throughput=THRPT_MODEL)
+            rows.append({
+                "table": "strategy", "scenario": name, "strategy": spec.key,
+                "time_to_result_s": round(time_to_result(
+                    recs, sc, THRPT_MODEL), 6),
+                "makespan_s": round(sum(r.est_wall_s for r in recs), 6),
+                "accrued_s": round(sum(r.time_to_result_s for r in recs), 6),
+                "events": len(recs),
+                "uneven_pool": bool(sc.core_pool),
+            })
+    for wl, trace in sorted(WORKLOAD_TRACES.items()):
+        kgrid = grid if grid is not None else KNOB_GRID
+        mk = optimize_schedule(trace, grid=kgrid, n_random=n_random,
+                               seed=seed)
+        tt = optimize_schedule(trace, grid=kgrid, n_random=n_random,
+                               seed=seed, throughput=THRPT_MODEL_UNEVEN)
+        mk_out = evaluate_schedule(trace, mk.best.knobs,
+                                   throughput=THRPT_MODEL_UNEVEN)
+        diverges = mk.best.knobs != tt.best.knobs
+        wins = tt.best.time_to_result_s < mk_out.time_to_result_s
+
+        def fmt(knobs) -> str:
+            if knobs is None:
+                return "-"
+            return (f"t{knobs.backfill_threshold}"
+                    f"-p{knobs.preempt_priority}"
+                    f"-q{knobs.placement_quantum}")
+
+        for objective, out in (("rigid", tt.baseline),
+                               ("makespan-objective", mk_out),
+                               ("ttr-objective", tt.best)):
+            rows.append({
+                "table": "optimizer", "workload": wl, "objective": objective,
+                "time_to_result_s": round(out.time_to_result_s, 6),
+                "makespan_s": round(out.makespan_s, 6),
+                "mean_queue_s": round(out.mean_queue_s, 6),
+                "utilization": round(out.utilization, 4),
+                "knobs": fmt(out.knobs),
+                "diverges": diverges, "wins": wins,
+            })
+        rows.append({
+            "table": "optimizer", "workload": wl, "objective": "gain",
+            "time_to_result_s": round(
+                mk_out.time_to_result_s - tt.best.time_to_result_s, 6),
+            "makespan_s": 0.0, "mean_queue_s": 0.0, "utilization": 0.0,
+            "knobs": f"{fmt(mk.best.knobs)}->{fmt(tt.best.knobs)}",
+            "diverges": diverges, "wins": wins,
+        })
     return rows
 
 

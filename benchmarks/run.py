@@ -64,6 +64,7 @@ from paper_tables import (  # noqa: E402
     table_scale,
     table_scheduler,
     table_serve,
+    table_throughput,
     table_topology,
 )
 
@@ -191,6 +192,27 @@ def collect_rows(smoke: bool = False, timings: dict | None = None) -> list[dict]
             f"expand_downtime_us={r['expand_downtime_s']*1e6:.0f};"
             f"queue_s={r['mean_queue_s']};util={r['utilization']};"
             f"reconfigs={r['reconfigs']}")
+
+    # Same smoke shrink for the throughput objective-swap search; the
+    # strategy trace rows always run in full (cheap, coverage is the
+    # point).
+    thrpt = (lambda: table_throughput(grid=SCHED_SMOKE_GRID,
+                                      n_random=SCHED_SMOKE_RANDOM)
+             ) if smoke else table_throughput
+    for r in timed("thrpt", thrpt):
+        if r["table"] == "strategy":
+            add(f"thrpt/{r['scenario']}/{r['strategy']}",
+                r["time_to_result_s"] * 1e6,
+                f"makespan_us={r['makespan_s']*1e6:.0f};"
+                f"accrued_us={r['accrued_s']*1e6:.0f};"
+                f"events={r['events']};uneven={r['uneven_pool']}")
+        else:
+            add(f"thrpt/opt/{r['workload']}/{r['objective']}",
+                r["time_to_result_s"] * 1e6,
+                f"makespan_us={r['makespan_s']*1e6:.0f};"
+                f"queue_s={r['mean_queue_s']};util={r['utilization']};"
+                f"knobs={r['knobs']};diverges={r['diverges']};"
+                f"wins={r['wins']}")
 
     return rows
 

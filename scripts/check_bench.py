@@ -153,6 +153,21 @@ def check_scale(
     return failures
 
 
+def _step_summary(lines: List[str]) -> None:
+    """Append markdown to the GitHub Actions step summary, when present.
+
+    No-op outside Actions (``GITHUB_STEP_SUMMARY`` unset), so local runs
+    behave identically — the summary is a CI-reviewer convenience, not
+    part of the gate's contract.
+    """
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        for line in lines:
+            f.write(line + "\n")
+
+
 def update_baseline(path: str) -> int:
     """Regenerate ``path`` as a fresh ``--smoke --json`` document.
 
@@ -170,6 +185,13 @@ def update_baseline(path: str) -> int:
             sys.path.insert(0, p)
     import run as bench_run  # benchmarks/run.py
 
+    committed = 0
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                committed = len(index_rows(json.load(f)))
+        except (json.JSONDecodeError, OSError):
+            committed = 0       # unreadable old baseline: report from zero
     buf = io.StringIO()
     with contextlib.redirect_stdout(buf):
         bench_run.main(["--smoke", "--json"])
@@ -177,7 +199,16 @@ def update_baseline(path: str) -> int:
     doc = json.loads(text)          # refuse to write a malformed baseline
     with open(path, "w") as f:
         f.write(text)
-    print(f"check_bench: wrote {len(doc['rows'])} rows to {path}")
+    refreshed = len(index_rows(doc))
+    delta = refreshed - committed
+    print(f"check_bench: wrote {len(doc['rows'])} rows to {path} "
+          f"({committed} committed -> {refreshed} refreshed, {delta:+d})")
+    _step_summary([
+        "### Bench baseline refresh",
+        "",
+        f"- committed rows: **{committed}**",
+        f"- refreshed rows: **{refreshed}** ({delta:+d})",
+    ])
     return 0
 
 
@@ -229,6 +260,13 @@ def main(argv=None) -> int:
     for line in infos:
         print(line)
     n = len(index_rows(baseline))
+    _step_summary([
+        "### Bench regression gate",
+        "",
+        f"- baseline rows compared: **{n}**",
+        f"- new rows (current only): **{len(infos)}**",
+        f"- failing rows: **{len(failures) + len(scale_failures)}**",
+    ])
     if failures or scale_failures:
         if failures:
             print(_row("status", "row", "baseline_us", "current_us", "drift"),

@@ -132,6 +132,14 @@ from repro.malleability import (
     rigid_baseline,
 )
 
+# ---- throughput model / time-to-result (device-free) -----------------------
+from repro.malleability import (
+    ThroughputModel,
+    batch_shares,
+    flops_per_token_for_arch,
+    time_to_result,
+)
+
 # ---- elastic serving plane (device-free) -----------------------------------
 from repro.serving import (
     EXECUTORS,
@@ -297,6 +305,11 @@ __all__ = [
     "optimize_schedule",
     "registered_workload_scenarios",
     "rigid_baseline",
+    # throughput model / time-to-result
+    "ThroughputModel",
+    "batch_shares",
+    "flops_per_token_for_arch",
+    "time_to_result",
     # serving plane
     "EXECUTORS",
     "ContinuousBatcher",

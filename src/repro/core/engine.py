@@ -29,6 +29,14 @@ REDISTRIBUTION (stage 3), TERMINATE/ZOMBIFY/RESPAWN/TEARDOWN (§4.6-4.7
 TS/ZS/SS shrink mechanisms), and CHECKPOINT/RESTORE (the full-stop
 checkpoint/restart baseline malleability is measured against, plus
 failure recovery from the last checkpoint).
+
+Scope: timelines price what a reconfiguration *costs*.  What the
+resulting allocation *earns* per application step — the other half of
+the time-to-result trade — is priced by the companion
+:mod:`repro.malleability.throughput` step-time model, which the scenario
+executors accrue between charged events.  Keeping the two scopes
+separate means a shared :class:`TransitionCache` never depends on the
+throughput model in force.
 """
 from __future__ import annotations
 

@@ -477,6 +477,23 @@ def restore_charge(cm: "CostModel", restore_bytes: int) -> list[Charge]:
                    label=f"restore {restore_bytes} B from checkpoint")]
 
 
+def segment_times(steps: Sequence[int],
+                  step_times: Sequence[float]) -> np.ndarray:
+    """Per-transition modeled compute segments for a sorted plan.
+
+    ``steps`` are the plan's (non-decreasing) event steps and
+    ``step_times[i]`` the modeled seconds per application step of the
+    allocation transition ``i`` leaves behind; the segment charged to
+    transition ``i`` is the steps elapsed since the previous transition
+    (since step 0 for the first) times that rate.  Same-step transitions
+    get a zero delta, matching the object path's per-record accrual.
+    IEEE float64 product, so the result is bit-identical to the
+    equivalent Python-float arithmetic.
+    """
+    deltas = np.diff(np.asarray(steps, dtype=np.int64), prepend=0)
+    return deltas * np.asarray(step_times, dtype=np.float64)
+
+
 def restart_charges(
     cm: "CostModel", ns: int, nt: int, nodes: int,
     snapshot_bytes: int, restore_bytes: int,

@@ -22,7 +22,12 @@ Three submodules:
 * :mod:`.optimizer` — the closed scheduling loop: SLURM-scale
   :class:`WorkloadTrace` generation, the weighted
   :class:`ScheduleObjective`, and the seeded knob search
-  (:func:`optimize_schedule`) against the rigid-cluster baseline.
+  (:func:`optimize_schedule`) against the rigid-cluster baseline;
+* :mod:`.throughput` — the per-allocation step-time model
+  (:class:`ThroughputModel`: roofline compute/memory/collective terms,
+  width-weighted batch shares on uneven pools, calibrated contention)
+  the executors accrue into ``time_to_result_s`` and the optimizer
+  scores instead of reconfiguration makespan.
 
 See ``docs/cost-model.md`` and ``docs/scenarios.md`` for guides.
 """
@@ -117,6 +122,12 @@ from .simulator import (
     simulate_redistribution,
     simulate_shrink,
 )
+from .throughput import (
+    ThroughputModel,
+    batch_shares,
+    flops_per_token_for_arch,
+    time_to_result,
+)
 
 __all__ = [
     "FAULT_SCENARIO_NAMES",
@@ -150,17 +161,20 @@ __all__ = [
     "ScheduleOutcome",
     "SchedulerKnobs",
     "ShrinkReport",
+    "ThroughputModel",
     "TrafficPolicy",
     "TransitionCache",
     "WorkloadTrace",
     "arbitrate_jobs",
     "backfill_pressure",
+    "batch_shares",
     "burst_arrival",
     "charge_in_flight_queueing",
     "churn_trace",
     "ckpt_cycle",
     "dispatch_event",
     "evaluate_schedule",
+    "flops_per_token_for_arch",
     "fsdp_bytes_model",
     "generate_workload",
     "get_scenario",
@@ -196,6 +210,7 @@ __all__ = [
     "simulate_shrink",
     "steady_cycle",
     "straggler_churn",
+    "time_to_result",
     "topology_nasp",
     "topology_pods",
     "topology_redist",

@@ -36,6 +36,7 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .scenarios import Scenario, ScenarioEvent, register_scenario
+from .throughput import ThroughputModel, time_to_result
 from .policies import (
     ClusterState,
     JobSpec,
@@ -184,6 +185,14 @@ class ScheduleObjective:
     malleable jobs (QUEUE spans included), ``mean_queue_s`` the mean
     rigid-arrival wait, and the idle term prices unallocated capacity
     over the horizon.
+
+    When :func:`evaluate_schedule` is given a ``throughput=`` model, the
+    makespan term it scores is the modeled **time-to-result** instead —
+    reconfiguration walls *plus* modeled compute for every horizon step
+    under the allocation in force — so ``w_makespan`` starts pricing
+    what an allocation earns, not just what resizing costs.  With the
+    model disabled (the default) the scored number is the same summed
+    ``est_wall_s`` as before, bit for bit.
     """
 
     w_makespan: float = 1.0
@@ -211,6 +220,7 @@ class ScheduleOutcome:
     mean_queue_s: float                 # mean rigid-arrival wait
     utilization: float                  # mean allocated fraction of the pool
     reconfigs: int                      # charged records across all jobs
+    time_to_result_s: float = 0.0       # modeled; == makespan_s, no model
     scenarios: Dict[str, Scenario] = field(default_factory=dict)
     multijob: Optional[MultiJobOutcome] = None
 
@@ -344,6 +354,7 @@ def evaluate_schedule(
     objective: ScheduleObjective = ScheduleObjective(),
     contention: float = 1.25,
     keep_scenarios: bool = False,
+    throughput: Optional[ThroughputModel] = None,
 ) -> ScheduleOutcome:
     """Run the closed loop for one knob setting and score it.
 
@@ -352,7 +363,11 @@ def evaluate_schedule(
     contention degradation included) and charged through the vectorized
     fast path; ``strategy=`` / ``cost_model=`` are the normalized
     executor overrides.  ``knobs=None`` scores the rigid-cluster
-    control (see :func:`rigid_baseline`).
+    control (see :func:`rigid_baseline`).  ``throughput=`` switches the
+    objective's makespan term to modeled time-to-result (each job's
+    reconfiguration walls plus per-step modeled compute over the whole
+    horizon — see :func:`~.throughput.time_to_result`); ``None`` keeps
+    the old ``est_wall_s`` sum bit for bit.
     """
     from repro.core import strategy_key
 
@@ -361,15 +376,21 @@ def evaluate_schedule(
     jobs = _job_scenarios(trace, events, initial, tag)
     records, outcome = run_multijob_sim(
         jobs, trace.pool_nodes, contention=contention,
-        strategy=strategy, cost_model=cost_model)
+        strategy=strategy, cost_model=cost_model, throughput=throughput)
     makespan = sum(r.est_wall_s for recs in records.values() for r in recs)
     downtime = sum(r.downtime_s for recs in records.values() for r in recs)
     expand_down = sum(r.downtime_s for recs in records.values()
                       for r in recs if r.kind == "expand")
     reconfigs = sum(len(recs) for recs in records.values())
     mean_queue = (sum(waits) / len(waits) if waits else 0.0) * trace.step_s
+    if throughput is None:
+        ttr = makespan
+    else:
+        ttr = sum(
+            time_to_result(records[name], outcome.scenarios[name], throughput)
+            for name in records)
     score = objective.score(
-        makespan_s=makespan, mean_queue_s=mean_queue,
+        makespan_s=ttr, mean_queue_s=mean_queue,
         utilization=utilization, horizon_s=trace.horizon_s())
     strat = (strategy_key(strategy) if strategy is not None
              else jobs[0][1].default_engine().strategy)
@@ -379,6 +400,7 @@ def evaluate_schedule(
         score=score, makespan_s=makespan, downtime_s=downtime,
         expand_downtime_s=expand_down, mean_queue_s=mean_queue,
         utilization=utilization, reconfigs=reconfigs,
+        time_to_result_s=ttr,
         scenarios=(dict(outcome.scenarios) if keep_scenarios else {}),
         multijob=(outcome if keep_scenarios else None),
     )
@@ -390,6 +412,7 @@ def rigid_baseline(
     strategy=None,
     cost_model=None,
     objective: ScheduleObjective = ScheduleObjective(),
+    throughput: Optional[ThroughputModel] = None,
 ) -> ScheduleOutcome:
     """Score the rigid-cluster control for a workload.
 
@@ -398,10 +421,13 @@ def rigid_baseline(
     whole horizon; rigid arrivals wait for free capacity with no
     backfill or preemption.  Reconfiguration cost is zero by
     construction; the queue and idle terms are what the closed loop is
-    optimized against.
+    optimized against.  With ``throughput=``, the peak-pinned
+    allocations still accrue modeled compute — the rigid control is
+    fast per step but starves the queue.
     """
     return evaluate_schedule(trace, None, strategy=strategy,
-                             cost_model=cost_model, objective=objective)
+                             cost_model=cost_model, objective=objective,
+                             throughput=throughput)
 
 
 # ================================================================= search ==
@@ -430,12 +456,17 @@ def optimize_schedule(
     grid: Sequence[SchedulerKnobs] = KNOB_GRID,
     n_random: int = 8,
     seed: int = 0,
+    throughput: Optional[ThroughputModel] = None,
 ) -> OptimizerResult:
     """Grid + seeded random restarts over the knob space (deterministic).
 
     Every candidate is evaluated through :func:`evaluate_schedule`
     (arbitrated N-job traces, vectorized charging); the first-seen best
     score wins, so identical seeds choose identical knobs and scores.
+    ``throughput=`` makes every candidate (and the rigid control) score
+    modeled time-to-result instead of reconfiguration makespan — the
+    search then optimizes the number the paper's malleability case
+    rests on.
     """
     rng = random.Random(seed)
     candidates = list(grid)
@@ -450,13 +481,14 @@ def optimize_schedule(
     for knobs in candidates:
         out = evaluate_schedule(
             trace, knobs, strategy=strategy, cost_model=cost_model,
-            objective=objective)
+            objective=objective, throughput=throughput)
         scores.append(out.score)
         if best is None or out.score < best.score:
             best = out
     assert best is not None
     baseline = rigid_baseline(trace, strategy=strategy,
-                              cost_model=cost_model, objective=objective)
+                              cost_model=cost_model, objective=objective,
+                              throughput=throughput)
     return OptimizerResult(
         workload=trace.name, strategy=best.strategy, best=best,
         baseline=baseline, evaluated=len(candidates),

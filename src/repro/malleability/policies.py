@@ -53,6 +53,7 @@ from .scenarios import (
     run_scenario_vectorized,
     steady_cycle,
 )
+from .throughput import ThroughputModel
 
 
 # ============================================================= cluster view ==
@@ -297,7 +298,9 @@ def charge_in_flight_queueing(scenario: Scenario) -> Scenario:
 
 def _predicted_wall(template: Scenario, event: ScenarioEvent,
                     cost_model: Optional[CostModel] = None,
-                    prelude: Tuple[ScenarioEvent, ...] = ()) -> float:
+                    prelude: Tuple[ScenarioEvent, ...] = (),
+                    throughput: Optional[ThroughputModel] = None,
+                    horizon_steps: int = 0) -> float:
     """Charged wall of ONE candidate event via a throwaway sim run.
 
     The decision engine behind mechanism choices: the candidate is
@@ -306,7 +309,11 @@ def _predicted_wall(template: Scenario, event: ScenarioEvent,
     show, not a side formula that could drift.  ``prelude`` events set
     up the cluster state the candidate fires from (e.g. a grow, so the
     job holds node-confined worlds like a real trace would); only the
-    LAST record — the candidate's — is returned.
+    LAST record — the candidate's — is returned.  With a
+    ``throughput=`` model, the remaining ``horizon_steps`` are priced
+    at the candidate's landing allocation and added in, so candidates
+    that end on different sizes compete on predicted time-to-result,
+    not on reconfiguration wall alone.
     """
     events = tuple(prelude) + (replace(event, queue_delay_s=0.0),)
     trial = replace(
@@ -316,7 +323,13 @@ def _predicted_wall(template: Scenario, event: ScenarioEvent,
         steps=max(e.step for e in events) + 2,
     )
     recs = run_scenario_sim(trial, cost_model=cost_model)
-    return recs[-1].est_wall_s
+    wall = recs[-1].est_wall_s
+    if throughput is not None and horizon_steps > 0:
+        widths = throughput.widths_for(
+            recs[-1].nodes_after, core_pool=template.core_pool,
+            default_width=template.cores_per_node)
+        wall += horizon_steps * throughput.step_time(widths)
+    return wall
 
 
 # ================================================================= policies ==
@@ -418,6 +431,14 @@ class PreemptionPolicy:
     rule).  ``decision_cost_model`` overrides the cost model the
     ``"auto"`` comparison charges with (e.g. the actual cluster's
     measured constants), without touching the trace's replay pricing.
+    With a ``throughput=`` model, the ``"auto"`` comparison prices the
+    steps remaining to the horizon at each candidate's landing
+    allocation on top of the reconfiguration wall — predicted
+    time-to-result, not downtime alone.  (Both mechanisms currently
+    land on the same target size, so the added term is symmetric and
+    today's decisions are unchanged; it starts discriminating the
+    moment a mechanism lands elsewhere, e.g. a restart that rounds to
+    a power-of-two world.)
     """
 
     arrivals: Tuple[PriorityArrival, ...] = ()
@@ -426,6 +447,7 @@ class PreemptionPolicy:
     name: str = "preemption"
     mechanism: str = "shrink"        # shrink | restart | auto
     decision_cost_model: Optional[CostModel] = None
+    throughput: Optional[ThroughputModel] = None
 
     def _preempt_event(self, job: JobSpec, step: int, alloc: int,
                        target: int) -> ScenarioEvent:
@@ -460,10 +482,15 @@ class PreemptionPolicy:
         )
         shrink_ev = _resize(step, alloc, target)
         cm = self.decision_cost_model
+        remaining = max(0, self.horizon - step)
         t_shrink = _predicted_wall(template, shrink_ev, cost_model=cm,
-                                   prelude=prelude)
+                                   prelude=prelude,
+                                   throughput=self.throughput,
+                                   horizon_steps=remaining)
         t_restart = _predicted_wall(template, restart_ev, cost_model=cm,
-                                    prelude=prelude)
+                                    prelude=prelude,
+                                    throughput=self.throughput,
+                                    horizon_steps=remaining)
         return shrink_ev if t_shrink <= t_restart else restart_ev
 
     def generate(self, cluster: ClusterState) -> PolicyTrace:
@@ -583,6 +610,12 @@ class CheckpointIntervalPolicy:
     classic first-order optimum balancing snapshot overhead against
     expected rework.  The generated trace is a pure CHECKPOINT cadence
     the existing sim/live machinery replays unchanged.
+
+    ``step_time_s`` defaults to the historical 1 s/step; give the
+    policy a ``throughput=`` model instead and the cadence tracks the
+    job's actual allocation — a wide grant shortens the step, which
+    stretches the interval in *steps* exactly as Young/Daly says it
+    should.
     """
 
     mtbf_s: float = 3600.0           # mean time between failures
@@ -591,24 +624,35 @@ class CheckpointIntervalPolicy:
     start_step: int = 2
     cost_model: Optional[CostModel] = None   # pricing for C (default MN5)
     name: str = "ckpt-interval"
+    throughput: Optional[ThroughputModel] = None
 
-    def interval_steps(self, job: JobSpec) -> int:
+    def resolved_step_time_s(self, nodes: int = 0) -> float:
+        """Seconds per app step: modeled when a ``throughput`` model and
+        a real allocation are given, the flat ``step_time_s`` otherwise.
+        """
+        if self.throughput is None or nodes <= 0:
+            return self.step_time_s
+        return self.throughput.step_time(self.throughput.widths_for(nodes))
+
+    def interval_steps(self, job: JobSpec, nodes: int = 0) -> int:
         """Young/Daly optimum, floored at one step.
 
         A zero-byte pytree prices ``C = 0`` and degenerates to
         checkpointing every step — harmless, but callers sizing real
         jobs should give the spec an ``arch`` or ``param_bytes``.
+        ``nodes`` is the job's current allocation, used to resolve the
+        modeled step time when a ``throughput`` model is set.
         """
         cm = self.cost_model if self.cost_model is not None else MN5
         pb = job.param_bytes or (
             param_bytes_for_arch(job.arch) if job.arch else 0)
         cost = cm.checkpoint(pb)
         t_opt = math.sqrt(2.0 * cost * self.mtbf_s)
-        return max(1, round(t_opt / self.step_time_s))
+        return max(1, round(t_opt / self.resolved_step_time_s(nodes)))
 
     def generate(self, cluster: ClusterState) -> PolicyTrace:
         job = cluster.primary_malleable()
-        every = self.interval_steps(job)
+        every = self.interval_steps(job, cluster.allocations[job.name])
         events = tuple(
             ScenarioEvent(step=s, kind=CHECKPOINT)
             for s in range(self.start_step + every, self.horizon, every)
@@ -914,6 +958,7 @@ def run_multijob_sim(
     vectorized: bool = True,
     strategy=None,
     cost_model=None,
+    throughput: Optional[ThroughputModel] = None,
 ):
     """Arbitrate and simulate a multi-job workload on one pool.
 
@@ -928,12 +973,14 @@ def run_multijob_sim(
     ``strategy=`` / ``cost_model=`` are the normalized keyword overrides
     shared with every ``run_scenario_*`` executor
     (:func:`~repro.malleability.scenarios.resolve_engine`), applied to
-    each arbitrated job's engine.
+    each arbitrated job's engine; ``throughput=`` accrues each job's
+    modeled compute segments into its records' ``time_to_result_s``.
     """
     outcome = arbitrate_jobs(jobs, pool_nodes, contention=contention)
     runner = run_scenario_vectorized if vectorized else run_scenario_sim
     records = {
-        name: runner(sc, strategy=strategy, cost_model=cost_model)
+        name: runner(sc, strategy=strategy, cost_model=cost_model,
+                     throughput=throughput)
         for name, sc in outcome.scenarios.items()
     }
     return records, outcome

@@ -28,7 +28,10 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field, replace
-from typing import Iterable, Optional
+from typing import TYPE_CHECKING, Callable, Iterable, Optional
+
+if TYPE_CHECKING:  # circular at runtime: throughput imports this module
+    from .throughput import ThroughputModel
 
 from repro.core import (
     TOPO_KEY,
@@ -784,6 +787,16 @@ class ScenarioRecord:
     bytes_checkpointed: int = 0  # snapshot bytes streamed to the store
     bytes_restored: int = 0    # bytes read back from the store (RESTORE)
     restored_s: float = 0.0    # RESTORE span charged on the timeline
+    time_to_result_s: float = -1.0  # est_wall_s + the modeled compute
+    #                            segment since the previous charged event
+    #                            (executors accrue it when run with
+    #                            throughput=; sentinel -1 resolves to
+    #                            est_wall_s, so without a model the sum
+    #                            over a run IS the makespan, bit for bit)
+
+    def __post_init__(self) -> None:
+        if self.time_to_result_s < 0.0:
+            object.__setattr__(self, "time_to_result_s", self.est_wall_s)
 
     @property
     def bytes_by_class(self) -> dict[str, int]:
@@ -805,7 +818,7 @@ def record_parity_key(rec) -> tuple:
             rec.nodes_after, rec.est_wall_s, rec.downtime_s, rec.bytes_moved,
             rec.queued_s, rec.bytes_stayed, rec.bytes_cross_rack,
             rec.bytes_cross_pod, rec.bytes_checkpointed, rec.bytes_restored,
-            rec.restored_s)
+            rec.restored_s, rec.time_to_result_s)
 
 
 @dataclass
@@ -1137,26 +1150,67 @@ def resolve_engine(
     return engine
 
 
+def _segment_clock(
+    scenario: Scenario, throughput: "Optional[ThroughputModel]",
+) -> Optional[Callable[[int], float]]:
+    """Memoized modeled step time per allocation node count.
+
+    THE shared width resolution for segment accrual: every executor —
+    object, vectorized, live — and :func:`~repro.malleability.throughput
+    .time_to_result` price a ``count``-node allocation as the node-id
+    prefix of the model's ``node_widths`` (falling back to the
+    scenario's ``core_pool`` / ``cores_per_node``), so the accrued
+    ``time_to_result_s`` agrees bit for bit across paths.  ``None``
+    when no model is given (accrual off).
+    """
+    if throughput is None:
+        return None
+    memo: dict[int, float] = {}
+
+    def step_time(count: int) -> float:
+        t = memo.get(count)
+        if t is None:
+            t = memo[count] = throughput.step_time(throughput.widths_for(
+                count, core_pool=scenario.core_pool,
+                default_width=scenario.cores_per_node))
+        return t
+
+    return step_time
+
+
 def run_scenario_sim(
     scenario: Scenario,
     engine: Optional[ReconfigEngine] = None,
     *,
     strategy=None,
     cost_model=None,
+    throughput: "Optional[ThroughputModel]" = None,
 ) -> list[ScenarioRecord]:
     """Execute a scenario on the timeline-charging simulator backend.
 
     ``strategy=`` / ``cost_model=`` are the normalized keyword overrides
     (see :func:`resolve_engine`); passing ``engine`` positionally keeps
-    working.
+    working.  ``throughput=`` accrues each record's modeled compute
+    segment — ``(steps since the last charged event) x
+    step_time(allocation before the event)`` — into
+    ``time_to_result_s`` on top of the charged wall.
     """
     engine = resolve_engine(scenario, engine, strategy=strategy,
                             cost_model=cost_model)
     cluster = _SimCluster(scenario=scenario, engine=engine)
     records: list[ScenarioRecord] = []
+    step_time = _segment_clock(scenario, throughput)
+    last = 0
     for ev in sorted(scenario.events, key=lambda e: e.step):
         for rec in _dispatch(cluster, ev):
-            records.append(replace(rec, step=ev.step))
+            if step_time is None:
+                records.append(replace(rec, step=ev.step))
+            else:
+                seg = (ev.step - last) * step_time(rec.nodes_before)
+                last = ev.step
+                records.append(replace(
+                    rec, step=ev.step,
+                    time_to_result_s=rec.time_to_result_s + seg))
     return records
 
 
@@ -1188,7 +1242,7 @@ class TransitionCache:
         The hot stamping loop binds a copy of it onto a bare
         ``ScenarioRecord.__new__`` instance and overwrites ``step`` —
         bypassing both ``dataclasses.replace`` and the frozen
-        dataclass ``__init__`` (fifteen ``object.__setattr__`` calls),
+        dataclass ``__init__`` (sixteen ``object.__setattr__`` calls),
         which together dominated the 100k-event profile.
         """
         key = (kind, before, after, queue_delay_s)
@@ -1353,6 +1407,7 @@ def run_scenario_vectorized(
     *,
     strategy=None,
     cost_model=None,
+    throughput: "Optional[ThroughputModel]" = None,
 ) -> list[ScenarioRecord]:
     """Execute a scenario through the vectorized transition engine.
 
@@ -1368,13 +1423,17 @@ def run_scenario_vectorized(
     Pass a shared :class:`TransitionCache` to amortize charging across
     runs that share a cost context (e.g. Monte-Carlo seed replicas).
     ``strategy=`` / ``cost_model=`` are the normalized keyword overrides
-    (see :func:`resolve_engine`).
+    (see :func:`resolve_engine`).  ``throughput=`` accrues modeled
+    compute segments exactly as :func:`run_scenario_sim` does — the
+    cached field dicts stay model-independent (they carry the sentinel
+    ``time_to_result_s == est_wall_s``) and the segment is added at
+    stamping time, so a shared cache stays valid across models.
     """
     engine = resolve_engine(scenario, engine, strategy=strategy,
                             cost_model=cost_model)
     plan = _vector_plan(scenario, engine)
     if plan is None:
-        return run_scenario_sim(scenario, engine)
+        return run_scenario_sim(scenario, engine, throughput=throughput)
     cache = cache if cache is not None else TransitionCache()
     # Hot loop: hits read the cache dict directly (no method-call
     # overhead); only misses go through charge_fields for the full
@@ -1385,6 +1444,32 @@ def run_scenario_vectorized(
     out: list[ScenarioRecord] = []
     append = out.append
     hits = 0
+    step_time = _segment_clock(scenario, throughput)
+    if step_time is not None:
+        # Plan steps are sorted and one record is stamped per tuple, so
+        # each record's accrued segment is its step delta times the
+        # step time of the allocation it left — vectorized as one
+        # np.diff product.  ``tolist()`` matters: Python floats keep
+        # record reprs (and the churn-trace parity digest) byte-stable.
+        from repro.core.vectorized import segment_times
+
+        seg = segment_times([p[0] for p in plan],
+                            [step_time(p[2]) for p in plan]).tolist()
+        for i, (step, kind, before, after, qd) in enumerate(plan):
+            fields = lookup((kind, before, after, qd))
+            if fields is None:
+                fields = charge_fields(scenario, engine, kind, before,
+                                       after, qd)
+            else:
+                hits += 1
+            rec = new(ScenarioRecord)
+            d = rec.__dict__
+            d.update(fields)
+            d["step"] = step
+            d["time_to_result_s"] = fields["time_to_result_s"] + seg[i]
+            append(rec)
+        cache.hits += hits
+        return out
     for step, kind, before, after, qd in plan:
         fields = lookup((kind, before, after, qd))
         if fields is None:
@@ -1470,6 +1555,7 @@ def run_scenario_live(
     *,
     strategy=None,
     cost_model=None,
+    throughput: "Optional[ThroughputModel]" = None,
 ) -> list[ScenarioRecord]:
     """Execute a scenario against the live NodeGroup runtime.
 
@@ -1479,7 +1565,8 @@ def run_scenario_live(
     Heterogeneous traces run too: the pool is partitioned with the
     scenario's uneven ``core_pool`` width vector.  ``strategy=`` /
     ``cost_model=`` are the normalized keyword overrides (see
-    :func:`resolve_engine`).
+    :func:`resolve_engine`); ``throughput=`` accrues modeled compute
+    segments into ``time_to_result_s`` exactly as the simulator does.
     """
     from repro.elastic.runtime import ElasticRuntime
 
@@ -1493,7 +1580,16 @@ def run_scenario_live(
                         engine=engine)
     adapter = RuntimeAdapter(rt)
     records: list[ScenarioRecord] = []
+    step_time = _segment_clock(scenario, throughput)
+    last = 0
     for ev in sorted(scenario.events, key=lambda e: e.step):
         for rec in _dispatch(adapter, ev):
-            records.append(replace(rec, step=ev.step))
+            if step_time is None:
+                records.append(replace(rec, step=ev.step))
+            else:
+                seg = (ev.step - last) * step_time(rec.nodes_before)
+                last = ev.step
+                records.append(replace(
+                    rec, step=ev.step,
+                    time_to_result_s=rec.time_to_result_s + seg))
     return records

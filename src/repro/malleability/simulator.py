@@ -13,6 +13,12 @@ The event structure mirrors §4.6's task lists, so per-phase output is
 directly comparable to the paper's discussion (e.g. "overhead grows when
 more than 8 groups are created": that is the connect phase growing with
 ceil(log2 G) unbalanced rounds).
+
+Reports price reconfiguration only.  The symmetric question — what each
+step of the horizon costs under the allocation a reconfiguration leaves
+behind — belongs to :mod:`repro.malleability.throughput`; the scenario
+executors compose the two into ``time_to_result_s`` so a cheap shrink
+that halves step throughput stops looking like a good trade.
 """
 from __future__ import annotations
 

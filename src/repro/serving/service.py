@@ -36,6 +36,7 @@ from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple
 
 from repro.malleability.policies import SERVE_TRAFFIC
+from repro.malleability.throughput import ThroughputModel
 from repro.malleability.scenarios import (
     Scenario,
     ScenarioRecord,
@@ -61,6 +62,14 @@ class ServeConfig:
     land on the same step; ``page_bytes`` overrides the
     ``init_cache``-derived page size when nonzero (unit tests price
     round numbers, the real service prices the model's actual cache).
+
+    ``throughput`` replaces the flat ``step_time_s`` with the modeled
+    per-allocation decode step time
+    (:class:`~repro.malleability.throughput.ThroughputModel`): each
+    step is priced for the worker count actually serving it, so a
+    scale-down cheap on migration bytes still pays its slower steps in
+    every latency and throughput number.  ``None`` (the default) keeps
+    the historical constant bit for bit.
     """
 
     arch: str = "xlstm_125m"        # model whose KV cache the pages slice
@@ -73,6 +82,16 @@ class ServeConfig:
     gen_spread: int = 3
     step_time_s: float = 0.05
     max_drain_steps: int = 2000
+    throughput: Optional[ThroughputModel] = None
+
+    def resolved_step_time_s(self, workers: int = 0) -> float:
+        """Seconds per decode step on ``workers`` nodes: modeled when a
+        ``throughput`` model and a real worker count are given, the flat
+        ``step_time_s`` otherwise.
+        """
+        if self.throughput is None or workers <= 0:
+            return self.step_time_s
+        return self.throughput.step_time(self.throughput.widths_for(workers))
 
     def page_spec(self) -> PageSpec:
         pb = self.page_bytes or page_bytes_for_arch(self.arch,
@@ -281,7 +300,7 @@ def run_serve(
             next_rid += 1
         batcher.admit(step)
         n_tokens, done = batcher.decode(step)
-        wall += cfg.step_time_s
+        wall += cfg.resolved_step_time_s(cluster.n_nodes)
         tokens_by_step.append(n_tokens)
         for rid in done:
             latency[rid] = wall - arrival_wall[rid]
@@ -310,7 +329,7 @@ def run_serve(
             f"{table.pages_freed} freed")
 
     phases = _phases(scenario, records, step, completions, latency,
-                     tokens_by_step, downtime_by_step, cfg.step_time_s)
+                     tokens_by_step, downtime_by_step, cfg)
     return ServeReport(
         scenario=name,
         executor=executor,
@@ -339,12 +358,15 @@ def _phases(
     latency: Dict[int, float],
     tokens_by_step: List[int],
     downtime_by_step: Dict[int, float],
-    step_time_s: float,
+    cfg: ServeConfig,
 ) -> Tuple[ServePhase, ...]:
     """Slice the run into steady allocation spans between resizes.
 
     A resize happens at the top of its step, so that step opens a new
     phase (and carries the resize's downtime in the phase's wall time).
+    Each phase's span is priced at ITS worker count
+    (:meth:`ServeConfig.resolved_step_time_s`), matching the per-step
+    accumulation in the run loop.
     """
     starts = [0]
     workers = [scenario.initial_nodes]
@@ -361,7 +383,7 @@ def _phases(
         lats = sorted(latency[rid] for s, rid in completions
                       if start <= s < end)
         toks = sum(tokens_by_step[start:end])
-        span = (end - start) * step_time_s + sum(
+        span = (end - start) * cfg.resolved_step_time_s(workers[i]) + sum(
             dt for s, dt in downtime_by_step.items() if start <= s < end)
         out.append(ServePhase(
             start_step=start,

@@ -1,0 +1,196 @@
+"""Throughput model tests: width-weighted batch shares, step-time
+monotonicity, executor accrual parity on every registered scenario,
+the objective swap's bit-for-bit off-switch, and the modeled
+checkpoint cadence."""
+import os
+import sys
+from dataclasses import replace
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.malleability import (
+    ThroughputModel,
+    batch_shares,
+    evaluate_schedule,
+    get_scenario,
+    optimize_schedule,
+    registered_scenarios,
+    run_scenario_live,
+    run_scenario_sim,
+    run_scenario_vectorized,
+    time_to_result,
+)
+from repro.malleability.optimizer import WORKLOAD_TRACES, SchedulerKnobs
+from repro.malleability.policies import (
+    CheckpointIntervalPolicy,
+    ClusterState,
+    JobSpec,
+)
+from repro.malleability.scenarios import record_parity_key
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "benchmarks"))
+from paper_tables import (  # noqa: E402
+    SCHED_SMOKE_GRID,
+    SCHED_SMOKE_RANDOM,
+    THRPT_MODEL_UNEVEN,
+)
+
+#: Device-free constants (no arch lookup -> no jax): a 250M-param fp32
+#: model at the default train_4k shape.
+MODEL = ThroughputModel(flops_per_token=1.5e9, param_bytes=10**9)
+
+widths_lists = st.lists(st.integers(min_value=1, max_value=16),
+                        min_size=1, max_size=40)
+
+
+class TestBatchShares:
+    @given(gb=st.integers(min_value=0, max_value=4096), widths=widths_lists)
+    @settings(max_examples=100)
+    def test_shares_sum_exactly_to_global_batch(self, gb, widths):
+        shares = batch_shares(gb, widths)
+        assert len(shares) == len(widths)
+        assert sum(shares) == gb
+        assert min(shares) >= 0
+
+    def test_weighting_follows_width(self):
+        # A 4-chip node takes 4x the batch of a 1-chip node.
+        assert batch_shares(10, (4, 1)) == (8, 2)
+        assert batch_shares(8, (2, 2)) == (4, 4)
+
+    def test_largest_remainder_is_deterministic(self):
+        widths = (3, 3, 3)          # 10/3 each: one leftover sample
+        assert batch_shares(10, widths) == (4, 3, 3)
+        assert batch_shares(10, widths) == batch_shares(10, widths)
+
+    def test_rejects_bad_inputs(self):
+        with pytest.raises(ValueError):
+            batch_shares(8, ())
+        with pytest.raises(ValueError):
+            batch_shares(8, (2, 0))
+        with pytest.raises(ValueError):
+            batch_shares(-1, (2,))
+
+
+class TestStepTime:
+    @given(widths=widths_lists, extra=st.integers(min_value=1, max_value=8))
+    @settings(max_examples=100)
+    def test_zero_contention_monotone_in_nodes(self, widths, extra):
+        # Under zero contention adding nodes NEVER slows the modeled
+        # step: compute strictly shrinks with capacity, memory and the
+        # base collective are allocation-independent.
+        grown = tuple(widths) + (extra,)
+        assert MODEL.step_time(grown) <= MODEL.step_time(widths)
+
+    def test_equal_share_straggler_can_slow_the_step(self):
+        # width_weighted=False reproduces today's equal-per-node data
+        # plane: adding a narrow node makes the narrowest node carry a
+        # full 1/n share and the step genuinely slows down.
+        eq = replace(MODEL, width_weighted=False, param_bytes=1)
+        assert eq.step_time((4, 4, 1)) > eq.step_time((4, 4))
+
+    def test_widths_for_prefix_and_padding(self):
+        m = replace(MODEL, node_widths=(4, 2))
+        assert m.widths_for(1) == (4,)
+        assert m.widths_for(2) == (4, 2)
+        assert m.widths_for(4) == (4, 2, 1, 1)
+        # No model widths: the scenario's core_pool governs.
+        assert MODEL.widths_for(2, core_pool=(8, 8, 8)) == (8, 8)
+        assert MODEL.widths_for(3, default_width=2) == (2, 2, 2)
+        with pytest.raises(ValueError):
+            MODEL.widths_for(0)
+
+    def test_calibrate_round_trips_contention(self):
+        truth = replace(MODEL, contention=0.37)
+        widths = (4, 4, 2, 1)
+        measured = truth.step_time(widths)
+        fitted = MODEL.calibrate(measured, widths)
+        assert fitted.contention == pytest.approx(0.37)
+        assert fitted.step_time(widths) == pytest.approx(measured)
+
+    def test_calibrate_clamps_at_zero(self):
+        fast = 0.5 * MODEL.step_time((4, 4))
+        assert MODEL.calibrate(fast, (4, 4)).contention == 0.0
+        # Single-node measurements carry no contention signal.
+        assert MODEL.calibrate(1e9, (4,)).contention == 0.0
+
+
+class TestExecutorAccrualParity:
+    """sim == vectorized == live on every registered scenario, the
+    accrued time_to_result_s field included (16-field parity keys)."""
+
+    @pytest.mark.parametrize(
+        "name", sorted(sc.name for sc in registered_scenarios()))
+    def test_three_executors_agree_under_the_model(self, name):
+        sc = get_scenario(name)
+        sim = run_scenario_sim(sc, throughput=MODEL)
+        vec = run_scenario_vectorized(sc, throughput=MODEL)
+        live = run_scenario_live(sc, throughput=MODEL)
+        k = [list(map(record_parity_key, recs)) for recs in (sim, vec, live)]
+        assert k[0] == k[1] == k[2]
+
+    def test_no_model_means_sentinel_equals_est_wall(self):
+        sc = get_scenario("steady-cycle")
+        for rec in run_scenario_vectorized(sc):
+            assert rec.time_to_result_s == rec.est_wall_s
+
+    def test_accrued_sum_is_time_to_result_minus_tail(self):
+        sc = get_scenario("steady-cycle")
+        recs = run_scenario_vectorized(sc, throughput=MODEL)
+        last = max(r.step for r in recs)
+        final = max(recs, key=lambda r: r.step).nodes_after
+        tail = (sc.steps - last) * MODEL.step_time(
+            MODEL.widths_for(final, core_pool=sc.core_pool,
+                             default_width=sc.cores_per_node))
+        accrued = sum(r.time_to_result_s for r in recs)
+        assert accrued + tail == pytest.approx(
+            time_to_result(recs, sc, MODEL))
+
+
+class TestObjectiveSwap:
+    def test_disabled_model_reproduces_old_scores_bit_for_bit(self):
+        # The PR-8 objective pin: with no model the makespan term IS
+        # the makespan and the score is unchanged to the last bit.
+        out = evaluate_schedule(WORKLOAD_TRACES["slurm-burst"],
+                                SchedulerKnobs())
+        assert out.score == 9.082993378723405
+        assert out.time_to_result_s == out.makespan_s
+
+    def test_uneven_pool_objectives_diverge_and_ttr_wins(self):
+        # The acceptance criterion, at the bench gate's smoke settings:
+        # on the uneven pool the two objectives pick different knobs
+        # and the time-to-result winner is genuinely faster.
+        trace = WORKLOAD_TRACES["slurm-burst"]
+        mk = optimize_schedule(trace, grid=SCHED_SMOKE_GRID,
+                               n_random=SCHED_SMOKE_RANDOM, seed=0)
+        tt = optimize_schedule(trace, grid=SCHED_SMOKE_GRID,
+                               n_random=SCHED_SMOKE_RANDOM, seed=0,
+                               throughput=THRPT_MODEL_UNEVEN)
+        assert mk.best.knobs != tt.best.knobs
+        mk_ttr = evaluate_schedule(trace, mk.best.knobs,
+                                   throughput=THRPT_MODEL_UNEVEN)
+        assert tt.best.time_to_result_s < mk_ttr.time_to_result_s
+
+
+class TestModeledCheckpointCadence:
+    def _cluster(self):
+        return ClusterState(
+            total_nodes=8,
+            jobs=(JobSpec("train", min_nodes=1, max_nodes=8),))
+
+    def test_flat_default_is_preserved(self):
+        pol = CheckpointIntervalPolicy()
+        assert pol.resolved_step_time_s() == pol.step_time_s
+        job = self._cluster().jobs[0]
+        assert pol.interval_steps(job) == pol.interval_steps(job, nodes=0)
+
+    def test_wider_allocation_never_shortens_the_interval(self):
+        # Zero contention: more nodes -> faster steps -> more steps fit
+        # in the same Young/Daly seconds-optimal interval.
+        pol = CheckpointIntervalPolicy(throughput=MODEL)
+        job = self._cluster().jobs[0]
+        i1 = pol.interval_steps(job, nodes=1)
+        i8 = pol.interval_steps(job, nodes=8)
+        assert i8 >= i1
+        assert pol.resolved_step_time_s(8) <= pol.resolved_step_time_s(1)

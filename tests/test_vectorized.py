@@ -234,12 +234,14 @@ class TestRandomTraceParity:
 
 # ==================================================== churn determinism ==
 class TestChurnAtScale:
-    # Re-pinned when record_parity_key grew its three checkpoint/restore
-    # fields (all (0, 0, 0.0) on this fault-free trace; the 12-field
+    # Re-pinned when record_parity_key grew time_to_result_s (sixteenth
+    # field; == est_wall_s on this model-free trace).  The 15-field
     # prefix still hashes to the historical
-    # 3b96130a21cde34c5294b74d23207b6bab2eac939c14daa5c40f70f7cc0b20c3).
+    # 6afb2ac8f20c67e010fc6a75010dc1aca251cbb39b5f5a27985105284ef4c4e1
+    # and the 12-field prefix to
+    # 3b96130a21cde34c5294b74d23207b6bab2eac939c14daa5c40f70f7cc0b20c3.
     PINNED_100K_SHA256 = (
-        "6afb2ac8f20c67e010fc6a75010dc1aca251cbb39b5f5a27985105284ef4c4e1")
+        "4e003a56cc35d801e529d34740d0e93c87db7b5b6459ed08831ff428880976b6")
 
     def test_draw_stream_matches_historical_list_choice(self):
         """The O(1) resize draw == random.choice over the candidate list."""
